@@ -1,0 +1,37 @@
+"""Shared helpers for the paper-figure benchmarks (reduced-scale CPU runs)."""
+
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.fl import (FLConfig, build_image_setup, build_text_setup,  # noqa: E402
+                      run_scheme, summarize, time_to_accuracy,
+                      traffic_to_accuracy)
+
+SCHEMES = ["fedavg", "adp", "heterofl", "flanc", "heroes"]
+
+
+def quick_cfg(num_clients: int = 20) -> FLConfig:
+    return FLConfig(
+        num_clients=num_clients, clients_per_round=5, eval_every=2,
+        tau_fixed=5, tau_max=25, lr=0.08, batch_size=16, estimate=True,
+    )
+
+
+def run_all_schemes(model, px, py, test, rounds: int, cfg: FLConfig,
+                    schemes=None) -> Dict[str, list]:
+    out = {}
+    for scheme in schemes or SCHEMES:
+        t0 = time.time()
+        out[scheme] = run_scheme(scheme, model, px, py, test, rounds, cfg)
+        print(f"# {scheme}: {time.time()-t0:.1f}s real", file=sys.stderr)
+    return out
+
+
+def csv_row(name: str, value, derived: str = "") -> str:
+    return f"{name},{value},{derived}"

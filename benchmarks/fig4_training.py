@@ -1,0 +1,33 @@
+"""Fig. 4: training performance (accuracy vs virtual wall time), all schemes."""
+
+from __future__ import annotations
+
+from benchmarks.common import SCHEMES, csv_row, quick_cfg, run_all_schemes
+from repro.fl import build_image_setup, time_to_accuracy
+
+
+def run(rounds: int = 40, target: float = 0.6):
+    model, px, py, test = build_image_setup(num_clients=20, seed=0)
+    cfg = quick_cfg()
+    hists = run_all_schemes(model, px, py, test, rounds, cfg)
+    rows = []
+    for scheme, hist in hists.items():
+        accs = [(h.wall_time, h.accuracy) for h in hist if h.accuracy is not None]
+        final = accs[-1][1] if accs else float("nan")
+        rows.append(csv_row(f"fig4/{scheme}/final_acc", f"{final:.4f}",
+                            f"wall={hist[-1].wall_time:.1f}s"))
+        tta = time_to_accuracy(hist, target)
+        rows.append(csv_row(
+            f"fig4/{scheme}/time_to_{int(target*100)}pct",
+            f"{tta:.2f}" if tta else "unreached", "virtual_s"))
+    # speedup of heroes vs each baseline
+    t_h = time_to_accuracy(hists["heroes"], target)
+    if t_h:
+        for scheme in SCHEMES:
+            if scheme == "heroes":
+                continue
+            t_b = time_to_accuracy(hists[scheme], target)
+            if t_b:
+                rows.append(csv_row(f"fig4/speedup_vs_{scheme}",
+                                    f"{t_b/t_h:.2f}", "x"))
+    return rows

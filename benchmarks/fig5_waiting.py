@@ -1,0 +1,23 @@
+"""Fig. 5: average per-round waiting time (client heterogeneity impact)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, quick_cfg, run_all_schemes
+from repro.fl import build_image_setup
+
+
+def run(rounds: int = 12):
+    model, px, py, test = build_image_setup(num_clients=20, seed=0)
+    cfg = quick_cfg()
+    hists = run_all_schemes(model, px, py, test, rounds, cfg)
+    rows = []
+    for scheme, hist in hists.items():
+        waits = [h.avg_wait for h in hist]
+        rows.append(csv_row(f"fig5/{scheme}/avg_wait",
+                            f"{float(np.mean(waits)):.3f}", "virtual_s"))
+        rows.append(csv_row(f"fig5/{scheme}/makespan",
+                            f"{float(np.mean([h.makespan for h in hist])):.3f}",
+                            "virtual_s"))
+    return rows

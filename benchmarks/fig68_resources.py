@@ -1,0 +1,41 @@
+"""Figs. 6/8: resource consumption (traffic + time) to target accuracy."""
+
+from __future__ import annotations
+
+from benchmarks.common import SCHEMES, csv_row, quick_cfg, run_all_schemes
+from repro.fl import build_image_setup, time_to_accuracy, traffic_to_accuracy
+
+
+def run(rounds: int = 40, target: float = 0.6):
+    model, px, py, test = build_image_setup(num_clients=20, seed=1)
+    cfg = quick_cfg()
+    hists = run_all_schemes(model, px, py, test, rounds, cfg)
+    rows = []
+    tr_h = traffic_to_accuracy(hists["heroes"], target)
+    for scheme, hist in hists.items():
+        tr = traffic_to_accuracy(hist, target)
+        tt = time_to_accuracy(hist, target)
+        rows.append(csv_row(f"fig68/{scheme}/traffic_to_{int(target*100)}pct",
+                            f"{tr/1e6:.2f}" if tr else "unreached", "MB"))
+        rows.append(csv_row(f"fig68/{scheme}/time_to_{int(target*100)}pct",
+                            f"{tt:.2f}" if tt else "unreached", "virtual_s"))
+    if tr_h:
+        dense_saved, all_saved = [], []
+        for scheme in SCHEMES:
+            if scheme == "heroes":
+                continue
+            tr = traffic_to_accuracy(hists[scheme], target)
+            if tr:
+                all_saved.append(1 - tr_h / tr)
+                if scheme in ("fedavg", "adp", "heterofl"):
+                    dense_saved.append(1 - tr_h / tr)
+        if dense_saved:
+            rows.append(csv_row(
+                "fig68/heroes_traffic_reduction_vs_dense",
+                f"{100*sum(dense_saved)/len(dense_saved):.1f}",
+                "pct_avg vs FedAvg/ADP/HeteroFL (paper headline: 72%)"))
+        if all_saved:
+            rows.append(csv_row("fig68/heroes_traffic_reduction_all",
+                                f"{100*sum(all_saved)/len(all_saved):.1f}",
+                                "pct_avg incl. Flanc"))
+    return rows

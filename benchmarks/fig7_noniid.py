@@ -1,0 +1,31 @@
+"""Fig. 7: accuracy under different Non-IID levels within a time budget."""
+
+from __future__ import annotations
+
+from benchmarks.common import csv_row, quick_cfg, run_all_schemes
+from repro.fl import build_image_setup
+
+
+def _acc_at_time(history, budget_s):
+    best = 0.0
+    for h in history:
+        if h.wall_time > budget_s:
+            break
+        if h.accuracy is not None:
+            best = max(best, h.accuracy)
+    return best
+
+
+def run(rounds: int = 30, gammas=(20.0, 60.0)):
+    rows = []
+    for gamma in gammas:
+        model, px, py, test = build_image_setup(num_clients=20, gamma=gamma, seed=2)
+        cfg = quick_cfg()
+        hists = run_all_schemes(model, px, py, test, rounds, cfg,
+                                schemes=["fedavg", "heterofl", "flanc", "heroes"])
+        budget = hists["fedavg"][-1].wall_time * 0.75
+        for scheme, hist in hists.items():
+            rows.append(csv_row(
+                f"fig7/gamma{int(gamma)}/{scheme}",
+                f"{_acc_at_time(hist, budget):.4f}", f"budget={budget:.1f}s"))
+    return rows

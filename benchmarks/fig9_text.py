@@ -1,0 +1,26 @@
+"""Fig. 9: RNN on the text task (Shakespeare stand-in)."""
+
+from __future__ import annotations
+
+from benchmarks.common import csv_row, quick_cfg, run_all_schemes
+from repro.fl import build_text_setup, time_to_accuracy, traffic_to_accuracy
+
+
+def run(rounds: int = 24, target: float = 0.35):
+    model, px, py, test = build_text_setup(num_clients=20, seed=3)
+    cfg = quick_cfg()
+    cfg.lr = 0.2
+    hists = run_all_schemes(model, px, py, test, rounds, cfg,
+                            schemes=["fedavg", "flanc", "heroes"])
+    rows = []
+    for scheme, hist in hists.items():
+        accs = [h.accuracy for h in hist if h.accuracy is not None]
+        rows.append(csv_row(f"fig9/{scheme}/final_acc",
+                            f"{accs[-1]:.4f}" if accs else "nan",
+                            f"wall={hist[-1].wall_time:.1f}s"))
+        tta = time_to_accuracy(hist, target)
+        rows.append(csv_row(f"fig9/{scheme}/time_to_{int(target*100)}pct",
+                            f"{tta:.2f}" if tta else "unreached", "virtual_s"))
+        rows.append(csv_row(f"fig9/{scheme}/traffic",
+                            f"{hist[-1].traffic_bytes/1e6:.2f}", "MB"))
+    return rows

@@ -1,0 +1,149 @@
+"""Roofline report: three terms per (arch x shape x mesh) from the dry-run.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Sources: the dry-run JSONs (experiments/dryrun/*.json).  FLOPs /
+HBM-traffic / collective bytes come from the loop-scaled HLO analysis
+(repro.launch.hlo_analysis) — raw ``cost_analysis`` counts while bodies
+once and is recorded only as a cross-check.  All quantities are
+per-device (the HLO is the per-device SPMD program).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro import configs  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def model_flops_per_device(arch: str, shape_name: str, devices: int) -> float:
+    """Napkin MODEL_FLOPS: 6·N·D train, 2·N·D inference (N = active params,
+    embeddings included), divided across chips."""
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        total = 6.0 * n * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n * shape.global_batch
+    return total / devices
+
+
+def load_records(suffix: str = "") -> List[dict]:
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        stem = p.stem
+        parts = stem.split("__")
+        extra = "__".join(parts[3:]) if len(parts) > 3 else ""
+        if extra != suffix:
+            continue
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def roofline_row(rec: dict) -> Dict[str, object]:
+    ls = rec.get("loop_scaled", {})
+    flops = float(ls.get("dot_flops") or 0.0)
+    traffic = float(ls.get("traffic_bytes") or 0.0)
+    coll = float((ls.get("collective_bytes") or {}).get("total") or 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m = traffic / HBM_BW
+    t_x = coll / ICI_BW
+    # lower bound on the memory term: every live buffer touched once
+    mem = rec.get("memory") or {}
+    lb_bytes = (mem.get("argument_bytes") or 0) + (mem.get("output_bytes") or 0) \
+        + (mem.get("temp_bytes") or 0)
+    t_m_lb = lb_bytes / HBM_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], rec["devices"])
+    ratio = mf / flops if flops else float("nan")
+    peak = (rec.get("memory") or {}).get("peak_bytes")
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "memory_lb_s": t_m_lb,
+        "collective_s": t_x,
+        "dominant": dominant,
+        "model_flops_dev": mf,
+        "hlo_flops_dev": flops,
+        "useful_ratio": ratio,
+        "peak_gib": (peak or 0) / 2**30,
+        "bound_frac": terms[dominant] / max(sum(terms.values()), 1e-30),
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+RECOMMEND = {
+    "compute": "reduce redundant FLOPs (masked-block skipping, dispatch einsum "
+               "elimination, factorized forward) or raise arithmetic intensity",
+    "memory": "fuse/bf16-ify the streaming path, shrink the resident cache "
+              "slice per device, or re-tile so the working set stays in VMEM",
+    "collective": "re-shard to remove per-layer all-gathers (sequence-parallel "
+                  "residual), batch small collectives, or overlap with compute",
+}
+
+
+def run(suffix: str = "") -> List[str]:
+    rows = [roofline_row(r) for r in load_records(suffix)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    out_csv = Path(__file__).resolve().parents[1] / "experiments" / (
+        f"roofline{('_' + suffix) if suffix else ''}.csv")
+    hdr = ("arch,shape,mesh,compute_s,memory_s,memory_lb_s,collective_s,"
+           "dominant,model_flops_dev,hlo_flops_dev,useful_ratio,peak_gib")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{r['compute_s']:.4e},"
+            f"{r['memory_s']:.4e},{r['memory_lb_s']:.4e},"
+            f"{r['collective_s']:.4e},{r['dominant']},"
+            f"{r['model_flops_dev']:.3e},{r['hlo_flops_dev']:.3e},"
+            f"{r['useful_ratio']:.3f},{r['peak_gib']:.2f}")
+    out_csv.write_text("\n".join(lines) + "\n")
+    bench_rows = []
+    for r in rows:
+        bench_rows.append(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+            f"{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.1f},"
+            f"dominant={r['dominant']}")
+    return bench_rows
+
+
+def markdown_table(suffix: str = "", mesh: str = "16x16") -> str:
+    rows = [roofline_row(r) for r in load_records(suffix) if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    md = ["| arch | shape | compute s | memory s | collective s | dominant | "
+          "MODEL/HLO | peak GiB | what moves it |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        md.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['peak_gib']:.2f} | {RECOMMEND[r['dominant']]} |")
+    return "\n".join(md)
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,54 @@
+"""Benchmark harness entry: one section per paper table/figure + roofline.
+
+Prints ``name,value,derived`` CSV rows.  Reduced-scale CPU analogues of
+the paper's experiments (see DESIGN.md §9 for the mapping).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,fig4,fig5,fig68,fig7,fig9,roofline,ablations")
+    args = ap.parse_args()
+
+    from benchmarks import (ablations, fig2_completion, fig4_training,
+                            fig5_waiting, fig7_noniid, fig9_text,
+                            fig68_resources, roofline, table1_enhanced_nc)
+
+    sections = {
+        "table1": table1_enhanced_nc.run,
+        "fig2": fig2_completion.run,
+        "fig4": fig4_training.run,
+        "fig5": fig5_waiting.run,
+        "fig68": fig68_resources.run,
+        "fig7": fig7_noniid.run,
+        "fig9": fig9_text.run,
+        "roofline": roofline.run,
+        "ablations": ablations.run,
+    }
+    wanted = args.only.split(",") if args.only else list(sections)
+
+    print("name,value,derived")
+    for name in wanted:
+        t0 = time.time()
+        try:
+            rows = sections[name]()
+            for row in rows:
+                print(row)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,{e!r},")
+        print(f"{name}/_elapsed,{time.time()-t0:.1f},seconds", flush=True)
+
+
+if __name__ == "__main__":
+    main()

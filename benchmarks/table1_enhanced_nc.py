@@ -1,0 +1,58 @@
+"""Table I: training performance within resource constraints.
+
+Enhanced NC (Heroes' composition, fixed tau to isolate the NC effect)
+vs original NC (Flanc) vs model pruning (HeteroFL), evaluated at fixed
+traffic and fixed wall-time budgets (reduced-scale analogues of the
+paper's 30/60 GB and 20k/40k s columns).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import csv_row, quick_cfg, run_all_schemes
+from repro.fl import build_image_setup
+
+
+def _acc_at_traffic(history, budget_bytes):
+    best = 0.0
+    for h in history:
+        if h.traffic_bytes > budget_bytes:
+            break
+        if h.accuracy is not None:
+            best = max(best, h.accuracy)
+    return best
+
+
+def _acc_at_time(history, budget_s):
+    best = 0.0
+    for h in history:
+        if h.wall_time > budget_s:
+            break
+        if h.accuracy is not None:
+            best = max(best, h.accuracy)
+    return best
+
+
+def run(rounds: int = 40):
+    model, px, py, test = build_image_setup(num_clients=20, seed=0)
+    cfg = quick_cfg()
+    # isolate the composition effect: same fixed tau for every scheme
+    hists = run_all_schemes(model, px, py, test, rounds, cfg,
+                            schemes=["heterofl", "flanc", "heroes"])
+    label = {"heterofl": "MP", "flanc": "orig_NC", "heroes": "enhanced_NC"}
+    # budgets: half / full of the median scheme's final consumption
+    ref = hists["flanc"][-1]
+    t_budgets = [ref.wall_time * 0.5, ref.wall_time]
+    g_budgets = [ref.traffic_bytes * 0.5, ref.traffic_bytes]
+    rows = []
+    for scheme, hist in hists.items():
+        for i, g in enumerate(g_budgets):
+            rows.append(csv_row(
+                f"table1/{label[scheme]}/traffic_budget_{i}",
+                f"{_acc_at_traffic(hist, g):.4f}",
+                f"budget={g/1e6:.1f}MB"))
+        for i, t in enumerate(t_budgets):
+            rows.append(csv_row(
+                f"table1/{label[scheme]}/time_budget_{i}",
+                f"{_acc_at_time(hist, t):.4f}",
+                f"budget={t:.1f}s"))
+    return rows

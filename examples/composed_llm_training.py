@@ -1,0 +1,72 @@
+"""Heroes composition applied to a transformer LM — the framework's
+first-class integration (CompositionConfig on any assigned arch).
+
+Trains a reduced deepseek-style decoder twice on a synthetic LM task:
+  (a) dense parameterisation,
+  (b) factorized (Heroes) parameterisation at width p=P,
+showing the factorized model trains to comparable loss with a smaller
+parameter/traffic footprint — the paper's value proposition applied to a
+modern LLM layer stack (DESIGN.md §4).
+"""
+
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import CompositionConfig
+from repro.data import SyntheticTextTask, lm_batches
+from repro.launch.steps import make_train_step
+from repro.models import model
+from repro.models.module import count_params
+from repro.optim import make_optimizer
+
+STEPS = 120
+
+
+def train(cfg, task, tag: str):
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("adamw", 3e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt))
+    rng = np.random.default_rng(0)
+    t0, losses = time.time(), []
+    for i in range(STEPS):
+        toks, labels = lm_batches(task.train, 16, rng)
+        toks = jnp.asarray(toks % cfg.vocab)
+        labels = jnp.asarray(labels % cfg.vocab)
+        params, opt_state, metrics = step(params, opt_state,
+                                          {"tokens": toks, "labels": labels})
+        losses.append(float(metrics["loss"]))
+        if i % 30 == 0 or i == STEPS - 1:
+            print(f"  [{tag}] step {i:3d} loss {losses[-1]:.3f}")
+    print(f"  [{tag}] params={count_params(params):,}  "
+          f"{time.time()-t0:.1f}s  final loss {np.mean(losses[-10:]):.3f}")
+    return np.mean(losses[-10:])
+
+
+def main():
+    task = SyntheticTextTask(vocab=64, seq_len=32)
+    base = configs.get_smoke("deepseek-coder-33b").replace(
+        vocab=64, max_seq=64, remat=False)
+
+    print("dense parameterisation:")
+    dense_loss = train(base, task, "dense")
+
+    print("factorized (Heroes composition, P=2, rank=d/4):")
+    fac = base.replace(composition=CompositionConfig(
+        enabled=True, max_width=2, rank=base.d_model // 4))
+    fac_loss = train(fac, task, "heroes")
+
+    print(f"\ndense final={dense_loss:.3f}  factorized final={fac_loss:.3f} "
+          f"(factorized trains the same task with fewer shipped params)")
+
+
+if __name__ == "__main__":
+    main()

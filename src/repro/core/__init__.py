@@ -1,0 +1,26 @@
+"""Heroes core: enhanced neural composition + adaptive local update."""
+
+from repro.core.composition import (  # noqa: F401
+    CompositionPlan,
+    CompositionSpec,
+    compose,
+    compose_flops,
+    decompose,
+    gather_blocks,
+    init_factors,
+    select_blocks,
+)
+from repro.core.aggregation import (  # noqa: F401
+    aggregate_basis,
+    aggregate_coefficient,
+    aggregate_factorized,
+    masked_block_mean,
+    scatter_contribution,
+)
+from repro.core.convergence import BoundState, bound, solve_rounds, tau_star, total_time  # noqa: F401
+from repro.core.scheduler import (  # noqa: F401
+    ClientAssignment,
+    HeroesScheduler,
+    RoundPlan,
+    SchedulerConfig,
+)

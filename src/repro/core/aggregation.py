@@ -1,0 +1,112 @@
+"""Global aggregation (Heroes, Sec. III phase 3).
+
+* Neural basis: plain average over the K participating clients.
+* Coefficient: *block-wise* aggregation (Eq. 5) — block ``i`` is averaged
+  over exactly the clients that trained it this round; blocks nobody
+  trained keep their previous value.
+
+Two implementations:
+
+``aggregate_*``           — host-driven, list-of-client-pytrees (FL runtime).
+``masked_block_mean``     — collective form: every client contributes a
+                            dense ``(P^2, R, O)`` tensor with zeros at
+                            untrained blocks plus a 0/1 mask; aggregation is
+                            ``psum(contrib)/psum(mask)``.  This is the
+                            mesh-native formulation used by the distributed
+                            launcher (identical math, shardable on the data
+                            axis).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def aggregate_basis(client_bases: Sequence[Array]) -> Array:
+    """v^{h+1} = (1/K) sum_n v̄_n^h."""
+    return jnp.mean(jnp.stack(client_bases, axis=0), axis=0)
+
+
+def aggregate_coefficient(
+    global_coeff: Array,
+    client_blocks: Sequence[Array],
+    client_block_ids: Sequence[np.ndarray],
+) -> Array:
+    """Block-wise aggregation, Eq. (5).
+
+    Args:
+      global_coeff: previous round's complete coefficient ``(P^2, R, O)``.
+      client_blocks: per client, updated reduced coefficient ``(m_n, R, O)``.
+      client_block_ids: per client, the block indices (length ``m_n``)
+        those rows correspond to.
+
+    Returns:
+      New complete coefficient; untrained blocks unchanged.
+    """
+    num_blocks = global_coeff.shape[0]
+    acc = jnp.zeros_like(global_coeff)
+    cnt = jnp.zeros((num_blocks,), dtype=jnp.float32)
+    for blocks, ids in zip(client_blocks, client_block_ids):
+        ids = jnp.asarray(np.asarray(ids))
+        acc = acc.at[ids].add(blocks.astype(acc.dtype))
+        cnt = cnt.at[ids].add(1.0)
+    trained = cnt > 0
+    denom = jnp.where(trained, cnt, 1.0)[:, None, None]
+    mean = acc / denom
+    return jnp.where(trained[:, None, None], mean, global_coeff)
+
+
+def aggregate_factorized(
+    global_params: Dict[str, Dict[str, Array]],
+    client_params: Sequence[Dict[str, Dict[str, Array]]],
+    client_block_ids: Sequence[np.ndarray],
+) -> Dict[str, Dict[str, Array]]:
+    """Aggregate a whole CompositionPlan param tree (basis + coeff per layer)."""
+    out: Dict[str, Dict[str, Array]] = {}
+    for name, gp in global_params.items():
+        out[name] = {
+            "basis": aggregate_basis([cp[name]["basis"] for cp in client_params]),
+            "coeff": aggregate_coefficient(
+                gp["coeff"],
+                [cp[name]["coeff"] for cp in client_params],
+                client_block_ids,
+            ),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mesh-native (collective) formulation
+# ---------------------------------------------------------------------------
+
+
+def scatter_contribution(
+    updated_blocks: Array, block_ids: Array, num_blocks: int
+) -> tuple[Array, Array]:
+    """Client-side: dense zero-padded contribution + mask for masked psum."""
+    r, o = updated_blocks.shape[-2:]
+    dense = jnp.zeros((num_blocks, r, o), updated_blocks.dtype).at[block_ids].set(
+        updated_blocks
+    )
+    mask = jnp.zeros((num_blocks,), jnp.float32).at[block_ids].set(1.0)
+    return dense, mask
+
+
+def masked_block_mean(
+    dense_contrib: Array, mask: Array, prev_coeff: Array, axis_name: str
+) -> Array:
+    """Collective Eq. (5): psum dense contributions / psum masks.
+
+    Runs inside ``shard_map`` with clients laid out on ``axis_name``.
+    """
+    total = jax.lax.psum(dense_contrib, axis_name)
+    count = jax.lax.psum(mask, axis_name)
+    trained = count > 0
+    denom = jnp.where(trained, count, 1.0)[:, None, None]
+    return jnp.where(trained[:, None, None], total / denom, prev_coeff)

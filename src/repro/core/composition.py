@@ -1,0 +1,269 @@
+"""Enhanced neural composition (Heroes, Sec. II-B / III).
+
+Every layer weight ``w_p`` of width multiplier ``p`` is approximated as the
+product of a shared *neural basis* ``v`` and a per-width *coefficient*
+``u_p`` (Eq. 4 of the paper)::
+
+    w_p ~= v . u_p       v in R^{k^2 x I x R},  u_p in R^{R x (p * pO)}
+
+The *complete* coefficient ``u in R^{R x (P^2 O)}`` is partitioned into
+``P^2`` blocks of shape ``R x O``.  A ``p``-width model takes ``p^2`` blocks
+(the *least trained* ones, per the paper's enhancement), composes them with
+the basis into an intermediate ``k^2 x I x (p^2 O)`` tensor and reshapes it
+to the p-width weight ``k^2 x pI x pO`` (Fig. 1).
+
+We store the complete coefficient as ``(P^2, R, O)`` so blocks are a leading
+index — selection is a gather, block-wise aggregation (Eq. 5) is a segment
+mean, both shardable.
+
+Design notes
+------------
+* ``compose`` is a single einsum — on TPU this is an MXU matmul.  The
+  Pallas kernel in :mod:`repro.kernels.compose` implements the same
+  contraction with explicit VMEM tiling; this module is the reference /
+  CPU path and the place where shapes are defined.
+* Training operates directly on the factors (gradients flow through
+  ``compose``), so no per-round decomposition is needed.  ``decompose``
+  (least-squares projection) is provided for parity with the paper's
+  materialised formulation and for the HeteroFL-style baselines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CompositionSpec:
+    """Static description of one factorized weight.
+
+    Attributes:
+      max_width: ``P`` — the maximum width multiplier.  The complete
+        coefficient holds ``P**2`` blocks (``P`` for anchored modes).
+      rank: ``R`` — the low-rank dimension shared by basis and coefficient.
+      base_in: ``I`` — input channels of the width-1 weight.
+      base_out: ``O`` — output channels of the width-1 weight.
+      ksq: ``k^2`` — spatial size for convolutions; 1 for dense layers.
+      mode: how the weight scales with width p —
+        "square"   hidden weight, (pI x pO), p^2 blocks (paper Fig. 1);
+        "grow_out" input-anchored (first conv / embedding): (I x pO),
+                   p blocks;
+        "grow_in"  output-anchored (classifier): (pI x O), p blocks.
+        The anchored modes are the Flanc treatment of boundary layers.
+    """
+
+    max_width: int
+    rank: int
+    base_in: int
+    base_out: int
+    ksq: int = 1
+    mode: str = "square"
+
+    @property
+    def num_blocks(self) -> int:
+        p = self.max_width
+        return p * p if self.mode == "square" else p
+
+    def blocks_for_width(self, p: int) -> int:
+        if not 1 <= p <= self.max_width:
+            raise ValueError(f"width {p} outside [1, {self.max_width}]")
+        return p * p if self.mode == "square" else p
+
+    def basis_shape(self) -> Tuple[int, int, int]:
+        return (self.ksq, self.base_in, self.rank)
+
+    def coefficient_shape(self) -> Tuple[int, int, int]:
+        return (self.num_blocks, self.rank, self.base_out)
+
+    def weight_shape(self, p: int) -> Tuple[int, int, int]:
+        pi = p if self.mode in ("square", "grow_in") else 1
+        po = p if self.mode in ("square", "grow_out") else 1
+        return (self.ksq, pi * self.base_in, po * self.base_out)
+
+    def params_factorized(self, p: int) -> int:
+        """Parameter count shipped to a width-``p`` client (basis + blocks)."""
+        basis = self.ksq * self.base_in * self.rank
+        coeff = self.blocks_for_width(p) * self.rank * self.base_out
+        return basis + coeff
+
+    def params_materialized(self, p: int) -> int:
+        _, pi, po = self.weight_shape(p)
+        return self.ksq * pi * po
+
+
+def init_factors(
+    key: Array, spec: CompositionSpec, dtype: Any = jnp.float32
+) -> Tuple[Array, Array]:
+    """Initialise (basis, coefficient) so the composed weight has
+    fan-in-scaled variance (LeCun-style) at every width.
+
+    var(w) = var(v)*var(u)*R  — we split the target variance evenly between
+    the two factors.
+    """
+    kb, kc = jax.random.split(key)
+    fan_in = spec.ksq * spec.base_in
+    target_var = 1.0 / float(fan_in)
+    # var(v) * var(u) * R = target_var ; choose var(v)=var(u)=sqrt(target/R)
+    factor_std = (target_var / spec.rank) ** 0.25
+    basis = factor_std * jax.random.normal(kb, spec.basis_shape(), dtype)
+    coeff = factor_std * jax.random.normal(kc, spec.coefficient_shape(), dtype)
+    return basis, coeff
+
+
+def select_blocks(counters: Array | np.ndarray, p: int, spec: CompositionSpec) -> np.ndarray:
+    """Indices of the ``p^2`` *least trained* blocks (paper Sec. II-B).
+
+    ``counters[i]`` is the total number of local iterations block ``i`` has
+    received since round 1.  Ties break on the lower index for determinism.
+    Host-side (numpy) — this is PS control logic, not a traced computation.
+    """
+    c = np.asarray(counters)
+    if c.shape != (spec.num_blocks,):
+        raise ValueError(f"counters shape {c.shape} != ({spec.num_blocks},)")
+    k = spec.blocks_for_width(p)
+    # stable argsort => deterministic tie-break on block index
+    order = np.argsort(c, kind="stable")
+    return np.sort(order[:k])
+
+
+def gather_blocks(coefficient: Array, block_ids) -> Array:
+    """Reduced coefficient ``û``: gather ``(m, R, O)`` from ``(P^2, R, O)``."""
+    return jnp.take(coefficient, jnp.asarray(block_ids), axis=0)
+
+
+def compose(basis: Array, reduced_coeff: Array, p: int, spec: CompositionSpec) -> Array:
+    """Compose the p-width weight:  v · û  →  reshape  (Fig. 1).
+
+    Args:
+      basis: ``(ksq, I, R)``.
+      reduced_coeff: ``(m, R, O)`` — the gathered blocks (m = p^2 for
+        "square" mode, p for anchored modes).
+      p: target width.
+
+    Returns:
+      the ``spec.weight_shape(p)`` weight.  For "square" the intermediate
+      ``(ksq, I, p^2·O)`` tensor is viewed as ``(ksq, I, p, p·O)`` and the
+      first ``p`` axis merges with ``I`` (the paper's reshape).
+    """
+    m = spec.blocks_for_width(p)
+    if reduced_coeff.shape[0] != m:
+        raise ValueError(f"expected {m} blocks, got {reduced_coeff.shape[0]}")
+    # (ksq, I, R) x (m, R, O) -> (ksq, I, m, O)
+    inter = jnp.einsum("kir,mro->kimo", basis, reduced_coeff)
+    ksq, I, _, O = inter.shape
+    if spec.mode == "grow_out":
+        return inter.reshape(ksq, I, m * O)
+    if spec.mode == "grow_in":
+        return jnp.transpose(inter, (0, 2, 1, 3)).reshape(ksq, m * I, O)
+    # (ksq, I, p, p, O) -> (ksq, p, I, p, O) -> (ksq, pI, pO)
+    inter = inter.reshape(ksq, I, p, p, O)
+    w = jnp.transpose(inter, (0, 2, 1, 3, 4)).reshape(ksq, p * I, p * O)
+    return w
+
+
+def compose_flops(p: int, spec: CompositionSpec) -> int:
+    """MACs*2 for the compose contraction at width p."""
+    m = spec.blocks_for_width(p)
+    return 2 * spec.ksq * spec.base_in * spec.rank * m * spec.base_out
+
+
+def decompose(
+    weight: Array, basis: Array, p: int, spec: CompositionSpec
+) -> Array:
+    """Least-squares projection of a materialised p-width weight back onto
+    the span of ``basis``:  û* = argmin_û ‖v·û − w‖²  (per ksq slice).
+
+    Used only by parity experiments / materialised baselines — the default
+    factorized training path never needs it (paper Alg. 2 line 10 is an
+    identity there because the factors *are* the parameters).
+
+    Returns ``(p^2, R, O)`` reduced-coefficient blocks.
+    """
+    ksq, pI, pO = weight.shape
+    I, O = spec.base_in, spec.base_out
+    if (pI, pO) != (p * I, p * O):
+        raise ValueError("weight shape inconsistent with width/spec")
+    # invert the compose reshape: (ksq, p, I, p, O) -> (ksq, I, p*p, O)
+    w = weight.reshape(ksq, p, I, p, O).transpose(0, 2, 1, 3, 4)
+    w = w.reshape(ksq, I, p * p * O)
+    # flatten basis over (ksq, I): A (ksq*I, R), B (ksq*I, m*O)
+    A = basis.reshape(ksq * I, spec.rank)
+    B = w.reshape(ksq * I, p * p * O)
+    sol, *_ = jnp.linalg.lstsq(A, B)
+    # (R, p*p*O) -> (p*p, R, O)
+    return sol.reshape(spec.rank, p * p, O).transpose(1, 0, 2)
+
+
+# ---------------------------------------------------------------------------
+# Model-level composition plans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One factorized weight inside a model: its spec and parameter names."""
+
+    name: str
+    spec: CompositionSpec
+
+
+class CompositionPlan:
+    """The set of factorized weights in a model plus shared block counters.
+
+    Heroes tracks one update-times counter vector per factorized weight; all
+    weights in a model share the *same* width assignment ``p_n`` per client,
+    so we keep a single global counter (the paper's ``c_i``) of size ``P^2``
+    and reuse the block indices for every layer.  This matches Fig. 1/3
+    where block selection is described once for the whole model.
+    """
+
+    def __init__(self, layers: Dict[str, CompositionSpec], max_width: int):
+        ps = {s.max_width for s in layers.values()}
+        if ps != {max_width}:
+            raise ValueError(f"all layer specs must share max_width={max_width}, got {ps}")
+        self.layers = dict(layers)
+        self.max_width = max_width
+        self.num_blocks = max_width * max_width
+
+    def init(self, key: Array, dtype: Any = jnp.float32) -> Dict[str, Dict[str, Array]]:
+        params = {}
+        keys = jax.random.split(key, len(self.layers))
+        for k, (name, spec) in zip(keys, sorted(self.layers.items())):
+            v, u = init_factors(k, spec, dtype)
+            params[name] = {"basis": v, "coeff": u}
+        return params
+
+    def reduce(self, params, block_ids) -> Dict[str, Dict[str, Array]]:
+        """Ship-to-client view: full basis + gathered coefficient blocks."""
+        out = {}
+        for name in self.layers:
+            out[name] = {
+                "basis": params[name]["basis"],
+                "coeff": gather_blocks(params[name]["coeff"], block_ids),
+            }
+        return out
+
+    def compose_all(self, reduced_params, p: int) -> Dict[str, Array]:
+        """Materialise every layer weight at width p from reduced factors."""
+        return {
+            name: compose(reduced_params[name]["basis"], reduced_params[name]["coeff"], p, spec)
+            for name, spec in self.layers.items()
+        }
+
+    def traffic_bytes(self, p: int, bytes_per_param: int = 4) -> int:
+        """Upload/download payload for a width-p client (basis + blocks)."""
+        return bytes_per_param * sum(
+            spec.params_factorized(p) for spec in self.layers.values()
+        )
+
+    def materialized_bytes(self, p: int, bytes_per_param: int = 4) -> int:
+        return bytes_per_param * sum(
+            spec.params_materialized(p) for spec in self.layers.values()
+        )

@@ -1,0 +1,83 @@
+"""Client-side estimators for L, sigma^2, G^2 (Heroes Alg. 2 lines 7-9).
+
+All operate on parameter/gradient pytrees.  The estimators use the
+*composed local model* trajectory exactly as in the paper:
+
+  L_n      = ||grad F_n(x_bar) - grad F_n(x_hat)|| / ||x_bar - x_hat||
+  sigma^2  = E_xi ||grad F_n(x_hat; xi) - grad F_n(x_hat)||^2
+  G^2      = E_xi ||grad F_n(x_hat; xi)||^2
+
+where x_hat is the model before local training and x_bar after.  The PS
+aggregates client estimates by simple averaging (Alg. 1 line 25).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def tree_sq_norm(t: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(t)
+    return sum(jnp.vdot(x, x).real for x in leaves)
+
+
+def tree_norm(t: PyTree) -> jax.Array:
+    return jnp.sqrt(tree_sq_norm(t))
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def estimate_smoothness(grad_after: PyTree, grad_before: PyTree,
+                        params_after: PyTree, params_before: PyTree,
+                        eps: float = 1e-12) -> jax.Array:
+    """L_n (Alg. 2 line 7)."""
+    dg = tree_norm(tree_sub(grad_after, grad_before))
+    dx = tree_norm(tree_sub(params_after, params_before))
+    return dg / jnp.maximum(dx, eps)
+
+
+def estimate_noise_sq(stoch_grads: Sequence[PyTree], full_grad: PyTree) -> jax.Array:
+    """sigma_n^2 (Alg. 2 line 8): variance of minibatch grads around mean."""
+    diffs = [tree_sq_norm(tree_sub(g, full_grad)) for g in stoch_grads]
+    return jnp.mean(jnp.stack(diffs))
+
+
+def estimate_grad_sq(stoch_grads: Sequence[PyTree]) -> jax.Array:
+    """G_n^2 (Alg. 2 line 9): second moment of minibatch grads."""
+    return jnp.mean(jnp.stack([tree_sq_norm(g) for g in stoch_grads]))
+
+
+def client_estimates(
+    grad_fn: Callable[[PyTree, Any], PyTree],
+    params_before: PyTree,
+    params_after: PyTree,
+    batches: Sequence[Any],
+) -> dict:
+    """Convenience wrapper producing the (L, sigma^2, G^2) triple.
+
+    ``grad_fn(params, batch)`` returns the gradient pytree.  Full gradient is
+    approximated by the mean over ``batches`` (paper uses the same
+    minibatch-expectation approximation).
+    """
+    stoch = [grad_fn(params_before, b) for b in batches]
+    full = jax.tree_util.tree_map(lambda *xs: jnp.mean(jnp.stack(xs), 0), *stoch)
+    grad_after = grad_fn(params_after, batches[0])
+    return {
+        "L": estimate_smoothness(grad_after, stoch[0], params_after, params_before),
+        "sigma_sq": estimate_noise_sq(stoch, full),
+        "grad_sq": estimate_grad_sq(stoch),
+    }
+
+
+def aggregate_estimates(per_client: Sequence[dict]) -> dict:
+    """PS aggregation (Alg. 1 line 25): average each scalar over clients."""
+    keys = per_client[0].keys()
+    return {k: float(jnp.mean(jnp.stack([jnp.asarray(c[k]) for c in per_client])))
+            for k in keys}

@@ -1,0 +1,7 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticImageTask,
+    SyntheticTextTask,
+    dirichlet_partition,
+    class_skew_partition,
+    lm_batches,
+)

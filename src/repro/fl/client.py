@@ -1,0 +1,115 @@
+"""Client-side procedure (paper Alg. 2).
+
+A client receives (basis, reduced coefficient, tau), composes its local
+model (or trains the factors directly — the factorized-forward
+formulation; DESIGN.md §4), runs tau local SGD iterations over its data,
+estimates (L, sigma^2, G^2) and returns updated tensors + estimates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimator
+from repro.fl.models import FLModelDef
+
+Array = jax.Array
+
+
+def data_batch(model: FLModelDef, x, y, idx) -> Dict[str, Array]:
+    if model.name == "rnn":
+        return {"tokens": jnp.asarray(x[idx]), "labels": jnp.asarray(y[idx])}
+    return {"x": jnp.asarray(x[idx]), "labels": jnp.asarray(y[idx])}
+
+
+def _ce(logits: Array, labels: Array) -> Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_fns(model_key: str, width: int, factorized: bool):
+    from repro.fl import models as fl_models
+
+    # model defs are recreated deterministically from the registry key
+    name, mw, base, rank, ncls = model_key.split(":")
+    model = fl_models.MODELS[name](int(mw), int(base), int(rank), int(ncls)) \
+        if name != "rnn" else fl_models.MODELS[name](int(mw), int(base), int(rank), vocab=int(ncls))
+
+    def loss_fn(params, batch):
+        w = (model.compose_all(params, width) if factorized
+             else {k: v for k, v in params.items()})
+        logits = model.forward(w, width, batch)
+        return _ce(logits, batch["labels"])
+
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    loss_jit = jax.jit(loss_fn)
+
+    @jax.jit
+    def sgd_step(params, batch, lr):
+        g = jax.grad(loss_fn)(params, batch)
+        return jax.tree_util.tree_map(lambda p, gg: p - lr * gg, params, g)
+
+    return loss_jit, grad_fn, sgd_step
+
+
+def model_key(model: FLModelDef) -> str:
+    any_spec = next(iter(model.specs.values()))
+    base = model.specs.get("wh", model.specs.get("conv2", any_spec)).base_in
+    return f"{model.name}:{any_spec.max_width}:{base}:{any_spec.rank}:{model.num_classes}"
+
+
+@dataclasses.dataclass
+class ClientResult:
+    params: Any  # updated reduced factors (or dense sub-weights)
+    estimates: Dict[str, float]
+    loss_before: float
+    loss_after: float
+
+
+def local_train(
+    model: FLModelDef,
+    reduced_params: Any,
+    width: int,
+    tau: int,
+    x, y,
+    lr: float,
+    rng: np.random.Generator,
+    batch_size: int = 16,
+    factorized: bool = True,
+    estimate: bool = True,
+) -> ClientResult:
+    """tau local SGD iterations (Alg. 2 lines 4-9)."""
+    loss_jit, grad_fn, sgd_step = _jitted_fns(model_key(model), width, factorized)
+    params0 = reduced_params
+    params = params0
+    n = len(y)
+    first_batch = None
+    for _ in range(max(tau, 1)):
+        idx = rng.integers(0, n, min(batch_size, n))
+        batch = data_batch(model, x, y, idx)
+        if first_batch is None:
+            first_batch = batch
+        params = sgd_step(params, batch, lr)
+
+    est = {}
+    loss_b = float(loss_jit(params0, first_batch))
+    loss_a = float(loss_jit(params, first_batch))
+    if estimate:
+        batches = [
+            data_batch(model, x, y, rng.integers(0, n, min(batch_size, n)))
+            for _ in range(3)
+        ]
+        est = estimator.client_estimates(
+            lambda p, b: grad_fn(p, b), params0, params, batches
+        )
+        est = {k: float(v) for k, v in est.items()}
+    return ClientResult(params, est, loss_b, loss_a)

@@ -1,0 +1,78 @@
+"""Client heterogeneity model (paper Sec. VI-C).
+
+The paper simulates 100 clients on a workstation and models:
+  * one-local-iteration time ~ Gaussian per hardware tier (laptop, Jetson
+    TX2, Xavier NX, AGX Xavier time records);
+  * download bandwidth fluctuating 10–20 Mb/s, upload 1–5 Mb/s.
+
+We reproduce that model: each client gets a tier (compute scale) and
+per-round fluctuating bandwidth.  The *scheduler* consumes (mu, nu)
+exactly as Alg. 1 does; the *simulator* charges the same costs to the
+virtual wall clock.  (TPU-pod hardware is homogeneous, so wall-time
+heterogeneity is modelled — DESIGN.md §3.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+# (mean seconds per 1 GFLOP of local-iteration work, std fraction) —
+# scaled from the paper's tier ordering: laptop fastest, TX2 slowest.
+TIERS = {
+    "laptop": (0.010, 0.10),
+    "agx_xavier": (0.018, 0.12),
+    "xavier_nx": (0.035, 0.15),
+    "tx2": (0.060, 0.20),
+}
+TIER_NAMES = list(TIERS)
+
+
+@dataclasses.dataclass
+class ClientResources:
+    tier: str
+    compute_scale: float  # seconds per GFLOP (per-client mean)
+    seed: int
+
+
+class HeterogeneityModel:
+    """Per-client, per-round (mu, nu) sampler."""
+
+    def __init__(self, num_clients: int, seed: int = 0,
+                 tier_weights: Tuple[float, ...] = (0.25, 0.25, 0.25, 0.25)):
+        rng = np.random.default_rng(seed)
+        self.clients: Dict[int, ClientResources] = {}
+        for n in range(num_clients):
+            tier = rng.choice(TIER_NAMES, p=np.asarray(tier_weights) / sum(tier_weights))
+            mean, frac = TIERS[tier]
+            scale = float(mean * rng.uniform(0.8, 1.2))
+            self.clients[n] = ClientResources(str(tier), scale, int(rng.integers(2**31)))
+        self._rng = rng
+        self.round = 0
+
+    def advance_round(self) -> None:
+        self.round += 1
+
+    def iter_time(self, client: int, flops_per_iter: float) -> float:
+        """mu_n^h (Eq. 17): seconds for one local iteration."""
+        c = self.clients[client]
+        rng = np.random.default_rng((c.seed, self.round))
+        _, frac = TIERS[c.tier]
+        noise = float(np.clip(rng.normal(1.0, frac), 0.5, 2.0))
+        return c.compute_scale * (flops_per_iter / 1e9) * noise
+
+    def upload_time(self, client: int, num_bytes: float) -> float:
+        """nu_n^h (Eq. 18): upload seconds at 1–5 Mb/s."""
+        c = self.clients[client]
+        rng = np.random.default_rng((c.seed, self.round, 7))
+        mbps = rng.uniform(1.0, 5.0)
+        return float(num_bytes * 8 / (mbps * 1e6))
+
+    def download_time(self, client: int, num_bytes: float) -> float:
+        """10–20 Mb/s — the paper treats download as negligible vs upload."""
+        c = self.clients[client]
+        rng = np.random.default_rng((c.seed, self.round, 13))
+        mbps = rng.uniform(10.0, 20.0)
+        return float(num_bytes * 8 / (mbps * 1e6))

@@ -1,0 +1,212 @@
+"""Width-scalable FL models (paper Sec. VI-A: CNN / ResNet-ish / RNN).
+
+Every model is described by an ordered dict of ``CompositionSpec``s:
+hidden weights use the paper's "square" mode (p^2 blocks from the shared
+P^2 counter); boundary layers (first conv / embedding, classifier) use the
+anchored modes with their own P-block counter (Flanc's treatment).
+
+Two parameterisations per model:
+  * factorized  — params are (basis, coeff-blocks); used by Heroes/Flanc.
+  * dense       — params are materialised width-P weights; used by
+                  FedAvg/ADP/HeteroFL (pruning slices sub-weights out).
+
+Forward passes are width-polymorphic: they take the *composed* weight
+list, so the same network code serves both parameterisations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.composition import CompositionSpec, compose, gather_blocks, init_factors
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FLModelDef:
+    name: str
+    specs: Dict[str, CompositionSpec]  # ordered: forward consumption order
+    forward: Callable  # (weights: Dict[str, Array], width, batch) -> logits
+    flops_per_sample: Callable  # (width) -> flops of fwd+bwd per sample
+    num_classes: int
+
+    # ---- factorized parameterisation -----------------------------------
+    def init_factorized(self, key) -> Dict[str, Dict[str, Array]]:
+        out = {}
+        for k, (name, spec) in zip(
+            jax.random.split(key, len(self.specs)), self.specs.items()
+        ):
+            v, u = init_factors(k, spec)
+            out[name] = {"basis": v, "coeff": u}
+        return out
+
+    def reduce(self, params, width: int, hidden_ids, anchored_ids):
+        """Ship-to-client factors: gather the assigned blocks per layer."""
+        out = {}
+        for name, spec in self.specs.items():
+            ids = hidden_ids if spec.mode == "square" else anchored_ids
+            out[name] = {
+                "basis": params[name]["basis"],
+                "coeff": gather_blocks(params[name]["coeff"], np.asarray(ids)),
+            }
+        return out
+
+    def compose_all(self, reduced, width: int) -> Dict[str, Array]:
+        return {
+            name: compose(reduced[name]["basis"], reduced[name]["coeff"], width, spec)
+            for name, spec in self.specs.items()
+        }
+
+    def factorized_bytes(self, width: int) -> int:
+        return 4 * sum(s.params_factorized(width) for s in self.specs.values())
+
+    # ---- dense parameterisation ------------------------------------------
+    def init_dense(self, key) -> Dict[str, Array]:
+        out = {}
+        for k, (name, spec) in zip(
+            jax.random.split(key, len(self.specs)), self.specs.items()
+        ):
+            ksq, i, o = spec.weight_shape(spec.max_width)
+            out[name] = (1.0 / math.sqrt(ksq * i)) * jax.random.normal(k, (ksq, i, o))
+        return out
+
+    def slice_dense(self, params: Dict[str, Array], width: int) -> Dict[str, Array]:
+        """HeteroFL-style sub-model: leading slices of each weight."""
+        out = {}
+        for name, spec in self.specs.items():
+            ksq, i, o = spec.weight_shape(width)
+            out[name] = params[name][:, :i, :o]
+        return out
+
+    def dense_bytes(self, width: int) -> int:
+        return 4 * sum(s.params_materialized(width) for s in self.specs.values())
+
+
+# ---------------------------------------------------------------------------
+# forward helpers
+# ---------------------------------------------------------------------------
+
+
+def _conv(x: Array, w3: Array, k: int, stride: int = 1) -> Array:
+    """x NHWC, w3 (k*k, I, O) -> conv with SAME padding."""
+    kk, i, o = w3.shape
+    w = w3.reshape(k, k, i, o)
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+# ---------------------------------------------------------------------------
+# CNN (paper's 4-layer CNN, reduced input 8x8)
+# ---------------------------------------------------------------------------
+
+
+def make_cnn(max_width: int = 3, base: int = 8, rank: int = 8,
+             num_classes: int = 10, in_ch: int = 3) -> FLModelDef:
+    specs = {
+        "conv1": CompositionSpec(max_width, rank, in_ch, base, ksq=9, mode="grow_out"),
+        "conv2": CompositionSpec(max_width, rank, base, base, ksq=9),
+        "conv3": CompositionSpec(max_width, rank, base, base, ksq=9),
+        "fc": CompositionSpec(max_width, rank, base, num_classes, ksq=1, mode="grow_in"),
+    }
+
+    def forward(w: Dict[str, Array], width: int, batch) -> Array:
+        x = batch["x"]
+        x = jax.nn.relu(_conv(x, w["conv1"], 3, stride=1))
+        x = jax.nn.relu(_conv(x, w["conv2"], 3, stride=2))
+        x = jax.nn.relu(_conv(x, w["conv3"], 3, stride=2))
+        x = jnp.mean(x, axis=(1, 2))  # GAP
+        return x @ w["fc"][0]
+
+    def flops(width: int, hw: int = 8) -> int:
+        p = width
+        f = 0
+        f += 2 * 9 * in_ch * (p * base) * hw * hw
+        f += 2 * 9 * (p * base) ** 2 * (hw // 2) ** 2
+        f += 2 * 9 * (p * base) ** 2 * (hw // 4) ** 2
+        f += 2 * (p * base) * num_classes
+        return 3 * f  # fwd + bwd ~ 3x
+
+    return FLModelDef("cnn", specs, forward, flops, num_classes)
+
+
+# ---------------------------------------------------------------------------
+# ResNet-ish (reduced stand-in for the paper's ResNet-18)
+# ---------------------------------------------------------------------------
+
+
+def make_resnet(max_width: int = 3, base: int = 8, rank: int = 8,
+                num_classes: int = 10, in_ch: int = 3) -> FLModelDef:
+    specs = {
+        "stem": CompositionSpec(max_width, rank, in_ch, base, ksq=9, mode="grow_out"),
+        "b1a": CompositionSpec(max_width, rank, base, base, ksq=9),
+        "b1b": CompositionSpec(max_width, rank, base, base, ksq=9),
+        "b2a": CompositionSpec(max_width, rank, base, base, ksq=9),
+        "b2b": CompositionSpec(max_width, rank, base, base, ksq=9),
+        "fc": CompositionSpec(max_width, rank, base, num_classes, ksq=1, mode="grow_in"),
+    }
+
+    def forward(w, width, batch):
+        x = batch["x"]
+        x = jax.nn.relu(_conv(x, w["stem"], 3))
+        h = jax.nn.relu(_conv(x, w["b1a"], 3))
+        x = jax.nn.relu(x + _conv(h, w["b1b"], 3))
+        h = jax.nn.relu(_conv(x, w["b2a"], 3))
+        x = jax.nn.relu(x + _conv(h, w["b2b"], 3))
+        x = jnp.mean(x, axis=(1, 2))
+        return x @ w["fc"][0]
+
+    def flops(width, hw: int = 8):
+        p = width
+        f = 2 * 9 * in_ch * (p * base) * hw * hw
+        f += 4 * 2 * 9 * (p * base) ** 2 * hw * hw
+        f += 2 * (p * base) * num_classes
+        return 3 * f
+
+    return FLModelDef("resnet", specs, forward, flops, num_classes)
+
+
+# ---------------------------------------------------------------------------
+# RNN (Shakespeare stand-in: next-token prediction)
+# ---------------------------------------------------------------------------
+
+
+def make_rnn(max_width: int = 3, base: int = 16, rank: int = 8,
+             vocab: int = 64) -> FLModelDef:
+    specs = {
+        "embed": CompositionSpec(max_width, rank, vocab, base, ksq=1, mode="grow_out"),
+        "wx": CompositionSpec(max_width, rank, base, base, ksq=1),
+        "wh": CompositionSpec(max_width, rank, base, base, ksq=1),
+        "out": CompositionSpec(max_width, rank, base, vocab, ksq=1, mode="grow_in"),
+    }
+
+    def forward(w, width, batch):
+        tokens = batch["tokens"]  # (B, T)
+        emb = jnp.take(w["embed"][0], tokens, axis=0)  # (B,T,pE)
+        wx, wh = w["wx"][0], w["wh"][0]
+
+        def step(h, x):
+            h = jnp.tanh(x @ wx + h @ wh)
+            return h, h
+
+        h0 = jnp.zeros((emb.shape[0], wh.shape[0]), emb.dtype)
+        _, hs = jax.lax.scan(step, h0, jnp.moveaxis(emb, 1, 0))
+        hs = jnp.moveaxis(hs, 0, 1)  # (B,T,pH)
+        return hs @ w["out"][0]  # (B,T,V)
+
+    def flops(width, seq: int = 32):
+        p = width
+        per_tok = 2 * vocab * (p * base) + 4 * (p * base) ** 2 + 2 * (p * base) * vocab
+        return 3 * per_tok * seq
+
+    return FLModelDef("rnn", specs, forward, flops, vocab)
+
+
+MODELS = {"cnn": make_cnn, "resnet": make_resnet, "rnn": make_rnn}

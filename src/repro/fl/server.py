@@ -1,0 +1,444 @@
+"""FL servers: Heroes (Alg. 1) and the four baselines of Sec. VI-B.
+
+All runners share a skeleton — per round: sample K clients, assign
+(width, tau, tensors), run local training, aggregate, charge virtual
+wall-clock (Eq. 19) + traffic — and differ exactly where the paper's
+schemes differ:
+
+  FedAvg    full model, fixed identical tau                  [2]
+  ADP       full model, *adaptive* identical tau             [31]
+  HeteroFL  width-sliced sub-models by tier, fixed tau       [13]
+  Flanc     original neural composition: per-width coeffs    [15]
+  Heroes    enhanced NC (global block counter, block-wise
+            aggregation) + per-client adaptive tau           (this paper)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, convergence
+from repro.core.composition import select_blocks
+from repro.core.scheduler import HeroesScheduler, SchedulerConfig
+from repro.fl import client as client_lib
+from repro.fl.heterogeneity import HeterogeneityModel
+from repro.fl.models import FLModelDef
+
+
+@dataclasses.dataclass
+class RoundLog:
+    round: int
+    wall_time: float  # cumulative virtual seconds
+    traffic_bytes: float  # cumulative
+    makespan: float  # this round's T^h
+    avg_wait: float  # this round's W^h
+    mean_tau: float
+    accuracy: Optional[float] = None
+
+
+@dataclasses.dataclass
+class FLConfig:
+    num_clients: int = 100
+    clients_per_round: int = 10
+    lr: float = 0.05
+    batch_size: int = 16
+    tau_fixed: int = 10
+    eval_every: int = 5
+    seed: int = 0
+    # Heroes scheduler knobs.  eps is the convergence threshold on the
+    # mean-square-gradient bound (Eq. 22) — it lives on the scale of
+    # G^2 + 18 sigma^2, so O(1) values are the useful regime.
+    mu_max: float = 0.0  # <=0 => auto (2.5x median width-1 iter time)
+    rho: float = 2.0
+    eps: float = 1.0
+    tau_max: int = 50
+    estimate: bool = True
+
+
+class BaseRunner:
+    """Common round skeleton; subclasses implement assign/train/aggregate."""
+
+    scheme = "base"
+
+    def __init__(self, model: FLModelDef, parts_x, parts_y, test_batch,
+                 het: HeterogeneityModel, cfg: FLConfig, eval_width: int):
+        self.model = model
+        self.parts_x, self.parts_y = parts_x, parts_y
+        self.test_batch = test_batch
+        self.het = het
+        self.cfg = cfg
+        self.eval_width = eval_width
+        self.rng = np.random.default_rng(cfg.seed)
+        self.wall = 0.0
+        self.traffic = 0.0
+        self.history: List[RoundLog] = []
+        self.round = 0
+
+    # --- subclass API ----------------------------------------------------
+    def assign(self, clients) -> Dict[int, Dict[str, Any]]:
+        raise NotImplementedError
+
+    def client_payload_bytes(self, assignment) -> float:
+        raise NotImplementedError
+
+    def train_one(self, n: int, assignment) -> client_lib.ClientResult:
+        raise NotImplementedError
+
+    def aggregate(self, results: Dict[int, client_lib.ClientResult], assigns):
+        raise NotImplementedError
+
+    def eval_accuracy(self) -> float:
+        raise NotImplementedError
+
+    # --- shared ------------------------------------------------------------
+    def flops_per_iter(self, width: int) -> float:
+        return self.model.flops_per_sample(width) * self.cfg.batch_size
+
+    def run_round(self) -> RoundLog:
+        cfg = self.cfg
+        self.het.advance_round()
+        clients = self.rng.choice(cfg.num_clients, cfg.clients_per_round, replace=False)
+        assigns = self.assign(list(map(int, clients)))
+        results, times = {}, {}
+        for n, a in assigns.items():
+            res = self.train_one(n, a)
+            results[n] = res
+            mu = self.het.iter_time(n, self.flops_per_iter(a["width"]))
+            nu = self.het.upload_time(n, self.client_payload_bytes(a))
+            times[n] = a["tau"] * mu + nu
+            self.traffic += 2 * self.client_payload_bytes(a)  # down + up
+        self.aggregate(results, assigns)
+        makespan = max(times.values())
+        wait = float(np.mean([makespan - t for t in times.values()]))
+        self.wall += makespan
+        self.round += 1
+        acc = None
+        if self.round % cfg.eval_every == 0 or self.round == 1:
+            acc = self.eval_accuracy()
+        log = RoundLog(self.round, self.wall, self.traffic, makespan, wait,
+                       float(np.mean([a["tau"] for a in assigns.values()])), acc)
+        self.history.append(log)
+        return log
+
+    def run(self, rounds: int) -> List[RoundLog]:
+        for _ in range(rounds):
+            self.run_round()
+        return self.history
+
+    def run_until_budget(self, time_budget: Optional[float] = None,
+                         traffic_budget: Optional[float] = None,
+                         max_rounds: int = 10_000) -> List[RoundLog]:
+        """Paper Alg. 1 outer loop: train while T <= T^max (and/or a
+        traffic budget) — the budget-driven form the paper actually runs."""
+        assert time_budget or traffic_budget
+        for _ in range(max_rounds):
+            if time_budget is not None and self.wall >= time_budget:
+                break
+            if traffic_budget is not None and self.traffic >= traffic_budget:
+                break
+            self.run_round()
+        return self.history
+
+    def _acc_from_logits(self, logits) -> float:
+        labels = self.test_batch["labels"]
+        pred = jnp.argmax(logits, -1)
+        return float(jnp.mean((pred == labels).astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# width assignment helpers
+# ---------------------------------------------------------------------------
+
+
+def tier_width(het: HeterogeneityModel, n: int, max_width: int) -> int:
+    order = {"laptop": max_width, "agx_xavier": max(max_width - 1, 1),
+             "xavier_nx": max(max_width - 2, 1), "tx2": 1}
+    return min(order[het.clients[n].tier], max_width)
+
+
+# ---------------------------------------------------------------------------
+# FedAvg / ADP (dense, full width, identical tau)
+# ---------------------------------------------------------------------------
+
+
+class FedAvgRunner(BaseRunner):
+    scheme = "fedavg"
+    adaptive_tau = False
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self.params = self.model.init_dense(jax.random.PRNGKey(self.cfg.seed))
+        self.P = next(iter(self.model.specs.values())).max_width
+        self.est_state = convergence.BoundState(
+            loss0=2.3, smoothness=1.0, grad_sq=1.0, noise_sq=0.5, lr=self.cfg.lr)
+
+    def assign(self, clients):
+        tau = self.cfg.tau_fixed
+        if self.adaptive_tau and self.round > 0:
+            t = convergence.tau_star(self.est_state, max(200 - self.round, 1))
+            tau = int(np.clip(round(t), 1, self.cfg.tau_max))
+        return {n: {"width": self.P, "tau": tau} for n in clients}
+
+    def client_payload_bytes(self, a) -> float:
+        return self.model.dense_bytes(self.P)
+
+    def train_one(self, n, a):
+        res = client_lib.local_train(
+            self.model, self.params, self.P, a["tau"],
+            self.parts_x[n], self.parts_y[n], self.cfg.lr,
+            np.random.default_rng((self.cfg.seed, self.round, n)),
+            self.cfg.batch_size, factorized=False, estimate=self.adaptive_tau,
+        )
+        return res
+
+    def aggregate(self, results, assigns):
+        stacked = [r.params for r in results.values()]
+        self.params = jax.tree_util.tree_map(
+            lambda *xs: jnp.mean(jnp.stack(xs), 0), *stacked
+        )
+        ests = [r.estimates for r in results.values() if r.estimates]
+        if ests:
+            mean = {k: float(np.mean([e[k] for e in ests])) for k in ests[0]}
+            self.est_state = convergence.BoundState(
+                loss0=float(np.mean([r.loss_after for r in results.values()])),
+                smoothness=max(mean.get("L", 1.0), 1e-3),
+                grad_sq=mean.get("grad_sq", 1.0),
+                noise_sq=mean.get("sigma_sq", 0.5),
+                lr=self.cfg.lr,
+            )
+
+    def eval_accuracy(self):
+        logits = self.model.forward(self.params, self.P, self.test_batch)
+        return self._acc_from_logits(logits)
+
+
+class ADPRunner(FedAvgRunner):
+    scheme = "adp"
+    adaptive_tau = True
+
+
+# ---------------------------------------------------------------------------
+# HeteroFL (dense slices by tier)
+# ---------------------------------------------------------------------------
+
+
+class HeteroFLRunner(FedAvgRunner):
+    scheme = "heterofl"
+
+    def assign(self, clients):
+        return {n: {"width": tier_width(self.het, n, self.P),
+                    "tau": self.cfg.tau_fixed} for n in clients}
+
+    def client_payload_bytes(self, a) -> float:
+        return self.model.dense_bytes(a["width"])
+
+    def train_one(self, n, a):
+        sub = self.model.slice_dense(self.params, a["width"])
+        return client_lib.local_train(
+            self.model, sub, a["width"], a["tau"],
+            self.parts_x[n], self.parts_y[n], self.cfg.lr,
+            np.random.default_rng((self.cfg.seed, self.round, n)),
+            self.cfg.batch_size, factorized=False, estimate=False,
+        )
+
+    def aggregate(self, results, assigns):
+        # element-wise mean over clients covering each region (HeteroFL)
+        new = {}
+        for name in self.params:
+            full = self.params[name]
+            acc = jnp.zeros_like(full)
+            cnt = jnp.zeros_like(full)
+            for n, r in results.items():
+                w = r.params[name]
+                pad = [(0, full.shape[i] - w.shape[i]) for i in range(full.ndim)]
+                acc = acc + jnp.pad(w, pad)
+                cnt = cnt + jnp.pad(jnp.ones_like(w), pad)
+            covered = cnt > 0
+            new[name] = jnp.where(covered, acc / jnp.maximum(cnt, 1), full)
+        self.params = new
+
+
+# ---------------------------------------------------------------------------
+# Flanc (original NC: per-width coefficients, same-shape aggregation)
+# ---------------------------------------------------------------------------
+
+
+class FlancRunner(BaseRunner):
+    scheme = "flanc"
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        key = jax.random.PRNGKey(self.cfg.seed)
+        self.P = next(iter(self.model.specs.values())).max_width
+        full = self.model.init_factorized(key)
+        # per-width coefficient sets: width p owns its own copy of the
+        # first blocks_for_width(p) blocks (original Flanc: no sharing)
+        self.basis = {name: full[name]["basis"] for name in full}
+        self.coeffs = {
+            p: {name: full[name]["coeff"][: self.model.specs[name].blocks_for_width(p)]
+                for name in full}
+            for p in range(1, self.P + 1)
+        }
+
+    def assign(self, clients):
+        return {n: {"width": tier_width(self.het, n, self.P),
+                    "tau": self.cfg.tau_fixed} for n in clients}
+
+    def client_payload_bytes(self, a) -> float:
+        return self.model.factorized_bytes(a["width"])
+
+    def _client_params(self, p):
+        return {name: {"basis": self.basis[name], "coeff": self.coeffs[p][name]}
+                for name in self.basis}
+
+    def train_one(self, n, a):
+        return client_lib.local_train(
+            self.model, self._client_params(a["width"]), a["width"], a["tau"],
+            self.parts_x[n], self.parts_y[n], self.cfg.lr,
+            np.random.default_rng((self.cfg.seed, self.round, n)),
+            self.cfg.batch_size, factorized=True, estimate=False,
+        )
+
+    def aggregate(self, results, assigns):
+        bases = [r.params for r in results.values()]
+        self.basis = {
+            name: jnp.mean(jnp.stack([b[name]["basis"] for b in bases]), 0)
+            for name in self.basis
+        }
+        by_width: Dict[int, list] = {}
+        for n, r in results.items():
+            by_width.setdefault(assigns[n]["width"], []).append(r.params)
+        for p, plist in by_width.items():
+            self.coeffs[p] = {
+                name: jnp.mean(jnp.stack([c[name]["coeff"] for c in plist]), 0)
+                for name in self.basis
+            }
+
+    def eval_accuracy(self):
+        params = self._client_params(self.P)
+        w = self.model.compose_all(params, self.P)
+        return self._acc_from_logits(self.model.forward(w, self.P, self.test_batch))
+
+
+# ---------------------------------------------------------------------------
+# Heroes
+# ---------------------------------------------------------------------------
+
+
+class HeroesRunner(BaseRunner):
+    scheme = "heroes"
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        key = jax.random.PRNGKey(self.cfg.seed)
+        self.params = self.model.init_factorized(key)
+        any_spec = next(iter(self.model.specs.values()))
+        self.P = any_spec.max_width
+        square_spec = next(s for s in self.model.specs.values() if s.mode == "square")
+        mu_max = self.cfg.mu_max
+        if mu_max <= 0:
+            # auto: ~10x the median width-1 iteration time, so width
+            # assignments spread across tiers at any model scale
+            med = float(np.median([
+                self.het.iter_time(n, self.flops_per_iter(1))
+                for n in range(self.cfg.num_clients)]))
+            mu_max = 10.0 * med
+        self.scheduler = HeroesScheduler(
+            square_spec,
+            SchedulerConfig(mu_max=mu_max, rho=self.cfg.rho,
+                            eps=self.cfg.eps, tau_max=self.cfg.tau_max),
+            iter_time_fn=lambda n, p: self.het.iter_time(n, self.flops_per_iter(p)),
+            comm_time_fn=lambda n, p: self.het.upload_time(
+                n, self.model.factorized_bytes(p)),
+        )
+        # anchored layers share a P-block counter (DESIGN.md §5)
+        self.anchored_counters = np.zeros(self.P, np.int64)
+        self.state = convergence.BoundState(
+            loss0=2.3, smoothness=1.0, grad_sq=1.0, noise_sq=0.5, lr=self.cfg.lr)
+
+    def assign(self, clients):
+        if self.round == 0:
+            # h=0: identical predefined frequency, no estimates yet (Alg. 1)
+            widths = {n: self.scheduler.assign_width(n) for n in clients}
+            out = {}
+            for n in clients:
+                ids = select_blocks(self.scheduler.counters, widths[n],
+                                    self.scheduler.spec)
+                self.scheduler.counters[ids] += self.cfg.tau_fixed
+                anch_ids = np.arange(min(widths[n], self.P))
+                self.anchored_counters[anch_ids] += self.cfg.tau_fixed
+                out[n] = {"width": widths[n], "tau": self.cfg.tau_fixed,
+                          "hidden_ids": ids, "anchored_ids": anch_ids}
+            return out
+        plan = self.scheduler.plan_round(clients, self.state)
+        self._plan = plan
+        out = {}
+        for n, a in plan.assignments.items():
+            anch_spec = next(s for s in self.model.specs.values() if s.mode != "square")
+            anch_ids = select_blocks(self.anchored_counters, a.width, anch_spec) \
+                if any(s.mode != "square" for s in self.model.specs.values()) else None
+            if anch_ids is not None:
+                self.anchored_counters[anch_ids] += a.tau
+            out[n] = {"width": a.width, "tau": a.tau,
+                      "hidden_ids": a.block_ids, "anchored_ids": anch_ids}
+        return out
+
+    def client_payload_bytes(self, a) -> float:
+        return self.model.factorized_bytes(a["width"])
+
+    def train_one(self, n, a):
+        reduced = self.model.reduce(self.params, a["width"],
+                                    a["hidden_ids"], a["anchored_ids"])
+        return client_lib.local_train(
+            self.model, reduced, a["width"], a["tau"],
+            self.parts_x[n], self.parts_y[n], self.cfg.lr,
+            np.random.default_rng((self.cfg.seed, self.round, n)),
+            self.cfg.batch_size, factorized=True, estimate=self.cfg.estimate,
+        )
+
+    def aggregate(self, results, assigns):
+        # basis: plain average; coefficient: block-wise (Eq. 5), per layer
+        new = {}
+        for name, spec in self.model.specs.items():
+            ids_key = "hidden_ids" if spec.mode == "square" else "anchored_ids"
+            new[name] = {
+                "basis": aggregation.aggregate_basis(
+                    [r.params[name]["basis"] for r in results.values()]),
+                "coeff": aggregation.aggregate_coefficient(
+                    self.params[name]["coeff"],
+                    [r.params[name]["coeff"] for r in results.values()],
+                    [np.asarray(assigns[n][ids_key]) for n in results],
+                ),
+            }
+        self.params = new
+        ests = [r.estimates for r in results.values() if r.estimates]
+        if ests:
+            mean = {k: float(np.mean([e[k] for e in ests])) for k in ests[0]}
+            self.state = convergence.BoundState(
+                loss0=max(float(np.mean([r.loss_after for r in results.values()])), 1e-3),
+                smoothness=float(np.clip(mean.get("L", 1.0), 1e-3, 1e3)),
+                grad_sq=mean.get("grad_sq", 1.0),
+                noise_sq=mean.get("sigma_sq", 0.5),
+                lr=self.cfg.lr,
+            )
+
+    def eval_accuracy(self):
+        full_ids = np.arange(self.scheduler.spec.num_blocks)
+        anch_ids = np.arange(self.P)
+        reduced = self.model.reduce(self.params, self.P, full_ids, anch_ids)
+        w = self.model.compose_all(reduced, self.P)
+        return self._acc_from_logits(self.model.forward(w, self.P, self.test_batch))
+
+
+RUNNERS = {
+    "fedavg": FedAvgRunner,
+    "adp": ADPRunner,
+    "heterofl": HeteroFLRunner,
+    "flanc": FlancRunner,
+    "heroes": HeroesRunner,
+}

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots (validated interpret=True
+on CPU; set interpret=False on real TPUs):
+
+  compose           the paper's neural-composition product (Eq. 4)
+  flash_attention   blockwise streaming-softmax attention (prefill/train)
+  decode_attention  one-token GQA over a long KV cache (decode shapes)
+  ssd_chunk         Mamba2 SSD intra-chunk block (SSM/hybrid archs)
+  rmsnorm           fused row-tiled normalisation
+
+``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles the
+sweep tests assert against (tests/test_kernels.py).
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

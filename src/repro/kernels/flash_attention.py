@@ -1,0 +1,115 @@
+"""Pallas TPU flash attention (prefill / train hot-spot).
+
+Blockwise streaming-softmax over KV tiles with fp32 running (m, l, acc)
+scratch in VMEM.  Grid (BH, nq, nk) — the KV dimension is the innermost
+(sequential) grid axis, so scratch persists across the j-loop for a fixed
+(b, i) and the output tile is written on the last j step.
+
+Masks: causal and sliding-window, computed from program ids — no mask
+tensors are materialised.  GQA is handled via the k/v index maps
+(kv row = head // q_per_kv), so kv tensors are NOT repeated in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, q_block: int,
+                  kv_block: int, sk: int, q_offset: int, nk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    i = pl.program_id(1)
+    q = q_ref[0]  # (qb, D)
+    k = k_ref[0]  # (kb, D)
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qpos = i * q_block + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0) \
+        + q_offset
+    kpos = j * kv_block + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 1)
+    mask = kpos < sk
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _fin():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_block", "kv_block", "q_per_kv",
+                     "interpret"),
+)
+def flash_attention_pallas(
+    q, k, v, *, causal: bool = True, window: int = 0, q_block: int = 128,
+    kv_block: int = 128, q_per_kv: int = 1, interpret: bool = True,
+):
+    """q (BH, Sq, D); k/v (BKV, Sk, D) with BH = BKV * q_per_kv.
+
+    Returns (BH, Sq, D)."""
+    BH, Sq, D = q.shape
+    BKV, Sk, _ = k.shape
+    assert BH == BKV * q_per_kv
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Sk)
+    Sqp = -(-Sq // qb) * qb
+    Skp = -(-Sk // kb) * kb
+    qp = jnp.pad(q, ((0, 0), (0, Sqp - Sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Skp - Sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Skp - Sk), (0, 0)))
+    nq, nk = Sqp // qb, Skp // kb
+    g = q_per_kv
+
+    kernel = functools.partial(
+        _flash_kernel, scale=D ** -0.5, causal=causal, window=window,
+        q_block=qb, kv_block=kb, sk=Sk, q_offset=Sk - Sq, nk=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qb, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kb, D), lambda b, i, j: (b // g, j, 0)),
+            pl.BlockSpec((1, kb, D), lambda b, i, j: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :Sq]

@@ -1,0 +1,65 @@
+"""Jitted public wrappers over the Pallas kernels.
+
+Each op accepts the model-layer layouts used by :mod:`repro.models` and
+dispatches to the Pallas kernel (``interpret=True`` on CPU — the kernel
+body executes in Python; on TPU set ``interpret=False``).  Oracles live
+in :mod:`repro.kernels.ref`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.compose import compose_pallas
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+Array = jax.Array
+
+
+def compose(basis: Array, coeff: Array, *, interpret: bool = True) -> Array:
+    """Neural-composition product: (ksq, I, R) x (m, R, O) -> (ksq, I, m·O)."""
+    return compose_pallas(basis, coeff, interpret=interpret)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 0, interpret: bool = True) -> Array:
+    """Model layout: q (B, S, KV, G, D), k/v (B, S, KV, D)."""
+    B, S, KV, G, D = q.shape
+    qf = jnp.transpose(q, (0, 2, 3, 1, 4)).reshape(B * KV * G, S, D)
+    kf = jnp.transpose(k, (0, 2, 1, 3)).reshape(B * KV, S, D)
+    vf = jnp.transpose(v, (0, 2, 1, 3)).reshape(B * KV, S, D)
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                                 q_per_kv=G, interpret=interpret)
+    return jnp.transpose(out.reshape(B, KV, G, S, D), (0, 3, 1, 2, 4))
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     lengths: Array, *, interpret: bool = True) -> Array:
+    """Model layout: q (B, 1, KV, G, D), caches (B, S, KV, D), lengths (B,)."""
+    B, _, KV, G, D = q.shape
+    S = k_cache.shape[1]
+    qf = q[:, 0].reshape(B * KV * G, D)
+    kf = jnp.transpose(k_cache, (0, 2, 1, 3)).reshape(B * KV, S, D)
+    vf = jnp.transpose(v_cache, (0, 2, 1, 3)).reshape(B * KV, S, D)
+    lens = jnp.repeat(lengths.astype(jnp.int32), KV * G)
+    out = decode_attention_pallas(qf, kf, vf, lens, q_per_kv=G,
+                                  interpret=interpret)
+    return out.reshape(B, 1, KV, G, D)
+
+
+def ssd_chunk(cb: Array, bb: Array, xw: Array, cum: Array, h_in: Array,
+              *, interpret: bool = True) -> Array:
+    """Mamba2 SSD intra-chunk block (see kernels/ssd_chunk.py)."""
+    from repro.kernels.ssd_chunk import ssd_chunk_pallas
+
+    return ssd_chunk_pallas(cb, bb, xw, cum, h_in, interpret=interpret)
+
+
+def rmsnorm(x: Array, scale: Array, *, eps: float = 1e-6,
+            interpret: bool = True) -> Array:
+    """Fused RMSNorm (see kernels/rmsnorm.py)."""
+    from repro.kernels.rmsnorm import rmsnorm_pallas
+
+    return rmsnorm_pallas(x, scale, eps=eps, interpret=interpret)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are deliberately naive (no chunking, no streaming) — the simplest
+correct formulation of each op, used by the per-kernel sweep tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def compose_ref(basis: Array, coeff: Array) -> Array:
+    """Neural-composition product (paper Eq. 4, pre-reshape).
+
+    basis (ksq, I, R) x coeff (m, R, O) -> (ksq, I, m*O)
+    """
+    inter = jnp.einsum("kir,mro->kimo", basis, coeff)
+    ksq, I, m, O = inter.shape
+    return inter.reshape(ksq, I, m * O)
+
+
+def attention_ref(q: Array, k: Array, v: Array, causal: bool = True,
+                  window: int = 0) -> Array:
+    """q (BH, Sq, D), k/v (BH, Sk, D) -> (BH, Sq, D), fp32 softmax."""
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * (D ** -0.5)
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)
+
+
+def decode_attention_ref(q: Array, k: Array, v: Array, lengths: Array) -> Array:
+    """q (BH, D), k/v (BH, S, D), lengths (BH,) -> (BH, D)."""
+    BH, S, D = k.shape
+    s = jnp.einsum("bd,bkd->bk", q, k).astype(jnp.float32) * (D ** -0.5)
+    mask = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bk,bkd->bd", p.astype(v.dtype), v)
+
+
+def rmsnorm_ref(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunk_ref(cb: Array, bb: Array, xw: Array, cum: Array,
+                  h_in: Array) -> Array:
+    """Intra-chunk SSD block + carry-in (oracle for ssd_chunk_pallas).
+
+    cb/bb (B, Q, N), xw (B, Q, P), cum (B, Q), h_in (B, N, P) -> (B, Q, P).
+    """
+    Q = cb.shape[1]
+    scores = jnp.einsum("bin,bjn->bij", cb, bb)
+    diff = cum[:, :, None] - cum[:, None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    w = scores * jnp.where(mask[None], jnp.exp(diff), 0.0)
+    y_intra = jnp.einsum("bij,bjp->bip", w, xw)
+    carry = jnp.einsum("bin,bnp->bip", cb, h_in)
+    return y_intra + jnp.exp(cum)[:, :, None] * carry

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel for RMSNorm (the per-layer normalisation).
+
+Row-tiled: each grid cell normalises a (rows, d) tile in VMEM with fp32
+statistics — the canonical fused-normalisation pattern (one HBM read, one
+write, no f32 materialisation of the full activation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps", "interpret"))
+def rmsnorm_pallas(x, scale, *, block_rows: int = 128, eps: float = 1e-6,
+                   interpret: bool = True):
+    """x (..., d), scale (d,) -> same shape/dtype as x."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    T = x2.shape[0]
+    br = min(block_rows, T)
+    Tp = -(-T // br) * br
+    xp = jnp.pad(x2, ((0, Tp - T), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(Tp // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, d), x.dtype),
+        interpret=interpret,
+    )(xp, scale)
+    return out[:T].reshape(orig_shape)

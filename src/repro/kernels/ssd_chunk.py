@@ -1,0 +1,69 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk block.
+
+Computes, for one chunk of length Q (grid cell = one (batch, chunk, head)
+triple):
+
+    y[i] = sum_{j<=i} (C_i . B_j) * exp(cum[i] - cum[j]) * xw[j]
+         + (C_i . h_in) * exp(cum[i])            (inter-chunk carry-in)
+
+which is the matmul-dominant inner block of the chunked selective-state-
+space scan (repro.models.ssm.ssd_chunked) — scores (Q x Q) on the MXU, the
+decay mask applied in VMEM, fp32 accumulation.  The outer (cheap) chunk
+recurrence stays in jnp.
+
+Layouts:
+  cb     (BCH, Q, N)   C for the chunk (per head-group; replicated per head)
+  bb     (BCH, Q, N)   B
+  xw     (BCH, Q, P)   dt-weighted inputs
+  cum    (BCH, Q)      cumulative log-decay within the chunk
+  h_in   (BCH, N, P)   state entering the chunk
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(cb_ref, bb_ref, xw_ref, cum_ref, hin_ref, o_ref):
+    cb = cb_ref[0]  # (Q, N)
+    bb = bb_ref[0]
+    xw = xw_ref[0]  # (Q, P)
+    cum = cum_ref[0]  # (Q,)
+    hin = hin_ref[0]  # (N, P)
+    q = cb.shape[0]
+    scores = jnp.dot(cb, bb.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    diff = cum[:, None] - cum[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)
+    w = scores * decay
+    y_intra = jnp.dot(w.astype(xw.dtype), xw, preferred_element_type=jnp.float32)
+    carry = jnp.dot(cb, hin, preferred_element_type=jnp.float32)  # (Q, P)
+    y = y_intra + jnp.exp(cum)[:, None] * carry
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(cb, bb, xw, cum, h_in, *, interpret: bool = True):
+    """cb/bb (BCH, Q, N), xw (BCH, Q, P), cum (BCH, Q), h_in (BCH, N, P)
+    -> y (BCH, Q, P)."""
+    BCH, Q, N = cb.shape
+    P_ = xw.shape[-1]
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=(BCH,),
+        in_specs=[
+            pl.BlockSpec((1, Q, N), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, Q, P_), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, Q), lambda b: (b, 0)),
+            pl.BlockSpec((1, N, P_), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, P_), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BCH, Q, P_), xw.dtype),
+        interpret=interpret,
+    )(cb, bb, xw, cum, h_in)

@@ -1,0 +1,356 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and record memory/cost/collective analysis.
+
+MUST be executed as its own process (``python -m repro.launch.dryrun``) —
+the XLA_FLAGS line above runs before any jax import and gives the host
+platform 512 placeholder devices so ``jax.make_mesh`` can build the
+16x16 (single-pod) and 2x16x16 (multi-pod) production meshes.
+
+Per pair we lower the shape-appropriate step (train_step / prefill /
+serve_step) with full in/out shardings, compile, and dump:
+  * memory_analysis (per-device argument/output/temp/peak bytes)
+  * cost_analysis   (per-device HLO FLOPs + bytes accessed)
+  * collective operand bytes by type (parsed from the compiled HLO)
+into experiments/dryrun/<arch>__<shape>__<mesh>.json — the roofline
+report (benchmarks/roofline.py, EXPERIMENTS.md §Roofline) reads these.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.shapes import SHAPES
+from repro.launch import specs as specs_lib
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.optim import make_optimizer
+from repro.sharding import rules
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]")
+
+
+def _arr_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op, by type."""
+    out = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        opm = re.search(r"\b([a-z0-9\-]+)\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):  # e.g. all-gather-start
+                base = c
+                break
+        if base is None or op.endswith("-done"):
+            continue
+        shapes_part = rhs[: opm.start()]
+        total = sum(_arr_bytes(d, dims) for d, dims in _SHAPE_RE.findall(shapes_part))
+        out[base] += total
+        counts[base] += 1
+    out["counts"] = counts
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def _shardings(tree_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _logits_sharding(mesh, dp, B: int, V: int, S: int = 1):
+    """Logits (B, S, V) sharding.  Prefer vocab over 'model'; when the
+    vocab doesn't divide (seamless: 256206) shard the sequence instead —
+    otherwise the full-vocab logits dominate peak memory (measured
+    31.4 GiB/device for seamless prefill_32k)."""
+    spec = rules._fit_to_shape(P(dp, None, "model"), (B, S, V), mesh)
+    if spec[2] is None and S > 1:
+        spec2 = rules._fit_to_shape(P(dp, "model", None), (B, S, V), mesh)
+        if spec2[1] is not None:
+            spec = spec2
+    return NamedSharding(mesh, spec)
+
+
+def optimizer_for(arch_id: str):
+    if arch_id == "kimi-k2-1t-a32b":
+        return make_optimizer("sgdm_bf16", 1e-3), "sgdm_bf16"
+    return make_optimizer("adamw", 1e-3), "adamw"
+
+
+def lower_pair(arch_id: str, shape_name: str, multi_pod: bool,
+               skip_blocks: bool = False, moe_sorted: bool = False,
+               residual: str = "d_sharded", composition: bool = False,
+               compose_matmul: bool = False, attn_qseq: bool = False,
+               no_remat: bool = False, kv_int8: bool = False,
+               moe_shardmap: bool = False):
+    """Lower+compile one (arch, shape, mesh) and return the analysis dict."""
+    shape = SHAPES[shape_name]
+    cfg = configs.config_for_shape(arch_id, shape_name)
+    if no_remat:
+        cfg = cfg.replace(remat=False)
+    if kv_int8:
+        cfg = cfg.replace(kv_cache_quant="int8")
+    if composition:
+        from repro.configs.base import CompositionConfig
+        from repro.models.module import set_compose_then_matmul
+        cfg = cfg.replace(composition=CompositionConfig(
+            enabled=True, max_width=2, rank=cfg.d_model // 4,
+            factorized_forward=not compose_matmul))
+        set_compose_then_matmul(compose_matmul)
+    if moe_sorted:
+        from repro.models import moe as moe_mod  # perf variant toggle
+        moe_mod.apply_moe, moe_mod._apply_moe_orig = (
+            moe_mod.apply_moe_sorted, moe_mod.apply_moe)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = rules.dp_axes_for(mesh)
+    zero_pod = multi_pod and arch_id == "kimi-k2-1t-a32b"
+    from repro.sharding.context import set_context
+    set_context(mesh, dp, residual, attn_qseq=attn_qseq,
+                moe_shardmap=moe_shardmap)
+
+    pshape = specs_lib.params_shape(cfg)
+    pspecs = rules.param_specs(pshape, mesh=mesh, zero_pod=zero_pod,
+                               moe_ep=moe_shardmap)
+    ins = specs_lib.input_specs(cfg, shape)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt, opt_name = optimizer_for(arch_id)
+        oshape = jax.eval_shape(opt.init, pshape)
+        ospecs = rules.param_specs(oshape, mesh=mesh, zero_pod=zero_pod)
+        bspecs = rules.batch_specs(ins["batch"], dp, mesh=mesh)
+        step = steps_lib.make_train_step(cfg, opt, skip_blocks=skip_blocks)
+        jitted = jax.jit(
+            step,
+            in_shardings=(_shardings(pspecs, mesh), _shardings(ospecs, mesh),
+                          _shardings(bspecs, mesh)),
+            out_shardings=(_shardings(pspecs, mesh), _shardings(ospecs, mesh),
+                           None),
+        )
+        lowered = jitted.lower(pshape, oshape, ins["batch"])
+    elif shape.kind == "prefill":
+        bspecs = rules.batch_specs(ins["batch"], dp, mesh=mesh)
+        step = steps_lib.make_prefill(cfg, skip_blocks=skip_blocks)
+        jitted = jax.jit(
+            step,
+            in_shardings=(_shardings(pspecs, mesh), _shardings(bspecs, mesh)),
+            out_shardings=_logits_sharding(mesh, dp, shape.global_batch,
+                                           cfg.vocab, shape.seq_len),
+        )
+        lowered = jitted.lower(pshape, ins["batch"])
+    else:  # decode
+        bspecs = rules.batch_specs(ins["batch"], dp, mesh=mesh)
+        cspecs = rules.cache_specs(ins["cache"], cfg, dp, mesh=mesh)
+        step = steps_lib.make_serve_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(_shardings(pspecs, mesh), _shardings(bspecs, mesh),
+                          _shardings(cspecs, mesh), None),
+            out_shardings=(_logits_sharding(mesh, dp, shape.global_batch,
+                                            cfg.vocab),
+                           _shardings(cspecs, mesh)),
+        )
+        lowered = jitted.lower(pshape, ins["batch"], ins["cache"],
+                               jnp.int32(shape.seq_len - 1))
+        opt_name = None
+    lower_s = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    from repro.launch import hlo_analysis
+    loop_scaled = hlo_analysis.analyze(hlo)
+
+    result = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": 512 if multi_pod else 256,
+        "kind": shape.kind,
+        "optimizer": opt_name if shape.kind == "train" else None,
+        "skip_blocks": skip_blocks,
+        "residual": residual,
+        "composition": composition,
+        "compose_matmul": compose_matmul,
+        "lower_s": round(lower_s, 1),
+        "compile_s": round(compile_s, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+        },
+        "collectives": coll,  # raw text scan (while bodies counted once)
+        "loop_scaled": loop_scaled,  # trip-count-corrected (see hlo_analysis)
+        "_hlo_text": hlo,  # persisted compressed by the driver, not in JSON
+        "params": int(sum(
+            x.size for x in jax.tree_util.tree_leaves(pshape))),
+    }
+    if moe_sorted:
+        from repro.models import moe as moe_mod
+        moe_mod.apply_moe = moe_mod._apply_moe_orig
+    return result
+
+
+def pairs_to_run():
+    out = []
+    for arch in configs.list_archs():
+        for shape in SHAPES:
+            if shape == "long_500k" and arch in configs.LONG_CONTEXT_SKIP:
+                continue
+            out.append((arch, shape))
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--skip-blocks", action="store_true",
+                    help="perf variant: statically skip fully-masked attention blocks")
+    ap.add_argument("--moe-sorted", action="store_true",
+                    help="perf variant: sort-based MoE dispatch")
+    ap.add_argument("--residual", default="d_sharded",
+                    choices=["d_sharded", "seq_sharded", "replicated"],
+                    help="residual-stream activation layout")
+    ap.add_argument("--composition", action="store_true",
+                    help="Heroes-factorized parameterisation (P=2, rank=d/4)")
+    ap.add_argument("--compose-matmul", action="store_true",
+                    help="paper-faithful compose-then-matmul forward")
+    ap.add_argument("--attn-qseq", action="store_true",
+                    help="context-parallel attention (q-seq over model axis)")
+    ap.add_argument("--no-remat", action="store_true",
+                    help="disable per-layer activation checkpointing")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV cache with per-token scales (decode)")
+    ap.add_argument("--moe-shardmap", action="store_true",
+                    help="weight-stationary expert parallelism via shard_map")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        pairs = pairs_to_run()
+    else:
+        assert args.arch and args.shape, "--arch and --shape or --all"
+        pairs = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch, shape in pairs:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            if args.skip_blocks:
+                tag += "__skipblocks"
+            if args.moe_sorted:
+                tag += "__moesorted"
+            if args.residual != "d_sharded":
+                tag += f"__{args.residual}"
+            if args.composition:
+                tag += "__composed" + ("_matmul" if args.compose_matmul else "_ff")
+            if args.attn_qseq:
+                tag += "__attnqseq"
+            if args.no_remat:
+                tag += "__noremat"
+            if args.kv_int8:
+                tag += "__kvint8"
+            if args.moe_shardmap:
+                tag += "__moeshardmap"
+            path = outdir / f"{tag}.json"
+            if args.skip_existing and path.exists():
+                print(f"[skip] {tag}")
+                continue
+            print(f"[lower+compile] {tag} ...", flush=True)
+            try:
+                res = lower_pair(arch, shape, mp, skip_blocks=args.skip_blocks,
+                                 moe_sorted=args.moe_sorted,
+                                 residual=args.residual,
+                                 composition=args.composition,
+                                 compose_matmul=args.compose_matmul,
+                                 attn_qseq=args.attn_qseq,
+                                 no_remat=args.no_remat,
+                                 kv_int8=args.kv_int8,
+                                 moe_shardmap=args.moe_shardmap)
+                hlo_txt = res.pop("_hlo_text", None)
+                if hlo_txt is not None:
+                    import zstandard
+                    hdir = outdir / "hlo"
+                    hdir.mkdir(exist_ok=True)
+                    (hdir / f"{tag}.hlo.zst").write_bytes(
+                        zstandard.compress(hlo_txt.encode()))
+                path.write_text(json.dumps(res, indent=1))
+                m = res["memory"]
+                print(
+                    f"  ok: compile {res['compile_s']}s  "
+                    f"peak/device {(m['peak_bytes'] or 0)/2**30:.2f} GiB  "
+                    f"flops {res['cost']['flops']:.3e}  "
+                    f"coll {res['collectives']['total']/2**20:.1f} MiB",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures.append((tag, repr(e)))
+                print(f"  FAIL {tag}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(f"  {t}: {e}")
+        return 1
+    print("\nAll dry-runs compiled OK.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,24 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS for 512 host devices before any jax import; tests and benches
+see the 1 real CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: one pod = (data=16, model=16) = 256 chips;
+    multi-pod adds a leading pod axis (2, 16, 16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU tests/examples."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct input specs for every (architecture x input shape).
+
+``input_specs(cfg, shape)`` returns the exact pytree the lowered step
+function consumes — weak-type-correct, shardable, and never allocated.
+Train/prefill shapes produce token batches (or stub embeddings for
+[vlm]/[audio] per the carve-out); decode shapes produce a one-token batch
+plus the populated-cache stand-in and a cache_len scalar.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _token_batch(cfg: ModelConfig, B: int, S: int, with_labels: bool) -> Dict[str, Any]:
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        batch["embeddings"] = SDS((B, S, cfg.d_model), cfg.cdtype)
+        batch["positions"] = SDS((B, 3, S), jnp.int32)
+        if with_labels:
+            batch["labels"] = SDS((B, S), jnp.int32)
+        return batch
+    batch["tokens"] = SDS((B, S), jnp.int32)
+    if cfg.family == "audio":
+        Se = cfg.encdec.encoder_seq
+        batch["enc_embeddings"] = SDS((B, Se, cfg.d_model), cfg.cdtype)
+        batch["enc_mask"] = SDS((B, Se), jnp.bool_)
+    if with_labels:
+        batch["labels"] = SDS((B, S), jnp.int32)
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": _token_batch(cfg, B, S, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": _token_batch(cfg, B, S, with_labels=False)}
+    # decode: one token + cache populated to seq_len
+    batch: Dict[str, Any] = {"tokens": SDS((B, 1), jnp.int32)}
+    if cfg.rope_type == "mrope":
+        batch["positions"] = SDS((B, 3, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: model.init_cache(cfg, B, S))
+    # eval_shape returns SDS pytree already
+    return {
+        "batch": batch,
+        "cache": cache,
+        "cache_len": SDS((), jnp.int32),
+    }
+
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), cfg))
+
+
+def opt_state_shape(cfg: ModelConfig, optimizer):
+    p = params_shape(cfg)
+    return jax.eval_shape(optimizer.init, p)

@@ -1,0 +1,52 @@
+"""Step functions lowered by the launcher / dry-run.
+
+  train_step  — fwd + bwd + optimizer update (train_4k)
+  prefill     — full-sequence forward          (prefill_32k)
+  serve_step  — one token against a cache      (decode_32k / long_500k)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.optim import apply_updates
+
+
+def make_train_step(cfg, optimizer, skip_blocks: bool = False) -> Callable:
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, cfg, batch, skip_blocks), has_aux=True
+        )(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = jnp.sqrt(
+            sum(jnp.vdot(g, g).real for g in jax.tree_util.tree_leaves(grads))
+        ).astype(jnp.float32)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill(cfg, skip_blocks: bool = False) -> Callable:
+    def prefill(params, batch):
+        if cfg.family == "audio" or cfg.encdec is not None:
+            logits, _ = model.prefill(params, cfg, batch, cache=None)
+        else:
+            logits, _ = model.forward(params, cfg, batch, skip_blocks)
+        return logits
+
+    return prefill
+
+
+def make_serve_step(cfg) -> Callable:
+    def serve_step(params, batch, cache, cache_len):
+        logits, cache = model.serve_step(params, cfg, batch, cache, cache_len)
+        return logits, cache
+
+    return serve_step

@@ -1,0 +1,3 @@
+"""Architecture zoo: pure-JAX, stacked params + lax.scan over depth."""
+
+from repro.models import model  # noqa: F401

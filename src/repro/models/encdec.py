@@ -1,0 +1,141 @@
+"""Encoder-decoder backbone (seamless-m4t-medium style).
+
+The audio codec / mel frontend is a STUB per the assignment carve-out:
+the encoder consumes precomputed frame embeddings ``(B, S_enc, d)``.
+Decoder layers: causal self-attention + cross-attention over encoder
+memory + FFN.  Cross-attention K/V are precomputed once per sequence
+(prefill) and are part of the serve cache.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, module, transformer
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def init_encoder_layer(key, cfg) -> Params:
+    enc_ff = cfg.encdec.encoder_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": layers.init_norm(cfg.d_model, cfg.norm, cfg.pdtype),
+        "attn": attention.init_attention(ks[0], cfg),
+        "ln2": layers.init_norm(cfg.d_model, cfg.norm, cfg.pdtype),
+        "mlp": layers.init_mlp(ks[1], cfg.d_model, enc_ff, cfg.activation, cfg, cfg.pdtype),
+    }
+
+
+def init_decoder_layer(key, cfg) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": layers.init_norm(cfg.d_model, cfg.norm, cfg.pdtype),
+        "self_attn": attention.init_attention(ks[0], cfg),
+        "ln_x": layers.init_norm(cfg.d_model, cfg.norm, cfg.pdtype),
+        "cross_attn": attention.init_cross_attention(ks[1], cfg),
+        "ln2": layers.init_norm(cfg.d_model, cfg.norm, cfg.pdtype),
+        "mlp": layers.init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.activation, cfg, cfg.pdtype),
+    }
+
+
+def init_encdec(key, cfg) -> Params:
+    ke, kd = jax.random.split(key)
+    return {
+        "encoder": module.stacked_init(
+            lambda k: init_encoder_layer(k, cfg), ke, cfg.encdec.num_encoder_layers
+        ),
+        "decoder": module.stacked_init(
+            lambda k: init_decoder_layer(k, cfg), kd, cfg.num_layers
+        ),
+    }
+
+
+def encode(params: Params, cfg, mem: Array, mem_mask: Optional[Array],
+           cos, sin) -> Array:
+    """Encoder over stub frame embeddings.  mem: (B, S_enc, d)."""
+
+    def body(lp, h):
+        hs = layers.apply_norm(lp["ln1"], h, cfg.norm)
+        h = h + attention.self_attention(lp["attn"], cfg, hs, cos, sin, causal=False)
+        hm = layers.apply_norm(lp["ln2"], h, cfg.norm)
+        h = h + layers.apply_mlp(lp["mlp"], hm, cfg.activation)
+        return h, jnp.zeros((), jnp.float32)
+
+    mem, _ = transformer._scan_layers(body, mem, params["encoder"], cfg)
+    return mem
+
+
+def decode_train(params: Params, cfg, x: Array, memory: Array,
+                 mem_mask: Optional[Array], cos, sin) -> Array:
+    """Teacher-forced decoder over full target sequence."""
+
+    def body(lp, h):
+        hs = layers.apply_norm(lp["ln1"], h, cfg.norm)
+        h = h + attention.self_attention(lp["self_attn"], cfg, hs, cos, sin)
+        hx = layers.apply_norm(lp["ln_x"], h, cfg.norm)
+        mk, mv = attention.encode_memory(lp["cross_attn"], cfg, memory)
+        h = h + attention.cross_attention(lp["cross_attn"], cfg, hx, mk, mv, mem_mask)
+        hm = layers.apply_norm(lp["ln2"], h, cfg.norm)
+        h = h + layers.apply_mlp(lp["mlp"], hm, cfg.activation)
+        return h, jnp.zeros((), jnp.float32)
+
+    x, _ = transformer._scan_layers(body, x, params["decoder"], cfg)
+    return x
+
+
+def init_encdec_cache(cfg, batch: int, max_len: int) -> Dict[str, Any]:
+    """Self-attn KV cache + precomputed cross-attn memory K/V per layer."""
+    d = cfg.resolved_head_dim
+    L = cfg.num_layers
+    Sm = cfg.encdec.encoder_seq
+    return {
+        "self": transformer.init_kv_cache(cfg, batch, max_len),
+        "mem_k": jnp.zeros((L, batch, Sm, cfg.num_kv_heads, d), cfg.cdtype),
+        "mem_v": jnp.zeros((L, batch, Sm, cfg.num_kv_heads, d), cfg.cdtype),
+        "mem_mask": jnp.zeros((batch, Sm), bool),
+    }
+
+
+def prefill_memory(params: Params, cfg, memory: Array, mem_mask: Array,
+                   cache: Dict[str, Any]) -> Dict[str, Any]:
+    """Precompute per-layer cross K/V from encoder output into the cache."""
+
+    def body(_, lp):
+        mk, mv = attention.encode_memory(lp["cross_attn"], cfg, memory)
+        return None, (mk, mv)
+
+    _, (mk, mv) = jax.lax.scan(body, None, params["decoder"])
+    return {**cache, "mem_k": mk, "mem_v": mv, "mem_mask": mem_mask}
+
+
+def decode_step(params: Params, cfg, x: Array, cache: Dict[str, Any],
+                cache_len, cos, sin) -> Tuple[Array, Dict[str, Any]]:
+    """One decoder token with cached self-attn KV + cross memory K/V."""
+
+    def body(h, xs):
+        lp, ck, cv, mk, mv = xs
+        hs = layers.apply_norm(lp["ln1"], h, cfg.norm)
+        so, ck, cv = attention.decode_self_attention(
+            lp["self_attn"], cfg, hs, ck, cv, cache_len, cos, sin
+        )
+        h = h + so
+        hx = layers.apply_norm(lp["ln_x"], h, cfg.norm)
+        h = h + attention.cross_attention(
+            lp["cross_attn"], cfg, hx, mk, mv, cache["mem_mask"]
+        )
+        hm = layers.apply_norm(lp["ln2"], h, cfg.norm)
+        h = h + layers.apply_mlp(lp["mlp"], hm, cfg.activation)
+        return h, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(
+        body, x,
+        (params["decoder"], cache["self"]["k"], cache["self"]["v"],
+         cache["mem_k"], cache["mem_v"]),
+    )
+    new_cache = {**cache, "self": {"k": ck, "v": cv}}
+    return x, new_cache

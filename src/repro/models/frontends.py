@@ -1,0 +1,66 @@
+"""Stub modality frontends ([vlm]/[audio] assignment carve-out).
+
+These produce *precomputed embeddings* of the right shape — they stand in
+for a ViT/SigLIP vision tower (qwen2-vl) or a mel+conv audio codec
+(seamless-m4t).  The transformer backbone consumes their output; the
+towers themselves are explicitly out of scope per the assignment.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def vision_patch_embeddings(key, batch: int, num_patches: int, d_model: int,
+                            grid: Tuple[int, int] | None = None,
+                            dtype=jnp.float32) -> Dict[str, Array]:
+    """Stub ViT output + M-RoPE (t,h,w) position ids for qwen2-vl.
+
+    ``grid``: (h, w) patch grid; defaults to a near-square factorisation.
+    """
+    if grid is None:
+        h = int(num_patches**0.5)
+        while num_patches % h:
+            h -= 1
+        grid = (h, num_patches // h)
+    h, w = grid
+    emb = jax.random.normal(key, (batch, num_patches, d_model), dtype) * 0.02
+    hh, ww = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
+    pos = jnp.stack([jnp.zeros(num_patches, jnp.int32),
+                     hh.reshape(-1).astype(jnp.int32),
+                     ww.reshape(-1).astype(jnp.int32)])
+    pos = jnp.broadcast_to(pos[None], (batch, 3, num_patches))
+    return {"embeddings": emb, "positions": pos}
+
+
+def interleave_text(key, vis: Dict[str, Array], text_tokens: Array,
+                    embed_table: Array, dtype=jnp.float32) -> Dict[str, Array]:
+    """Concatenate stub vision embeddings with embedded text tokens and
+    extend the M-RoPE positions along the temporal axis."""
+    B, P, d = vis["embeddings"].shape
+    t_emb = jnp.take(embed_table, text_tokens, axis=0).astype(dtype)
+    S = text_tokens.shape[1]
+    t_pos = jnp.arange(1, S + 1, dtype=jnp.int32)[None, None, :] + jnp.zeros(
+        (B, 3, S), jnp.int32
+    )
+    return {
+        "embeddings": jnp.concatenate([vis["embeddings"], t_emb], axis=1),
+        "positions": jnp.concatenate([vis["positions"], t_pos], axis=2),
+    }
+
+
+def audio_frame_embeddings(key, batch: int, num_frames: int, d_model: int,
+                           valid_frames: Array | None = None,
+                           dtype=jnp.float32) -> Dict[str, Array]:
+    """Stub conv-codec output for seamless-m4t: frame embeddings + mask."""
+    emb = jax.random.normal(key, (batch, num_frames, d_model), dtype) * 0.02
+    if valid_frames is None:
+        mask = jnp.ones((batch, num_frames), bool)
+    else:
+        mask = jnp.arange(num_frames)[None, :] < valid_frames[:, None]
+    return {"enc_embeddings": emb, "enc_mask": mask}

@@ -1,0 +1,98 @@
+"""Norms, MLPs, embeddings — shared across all architecture families."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# normalisation
+# ---------------------------------------------------------------------------
+
+
+def init_norm(d: int, kind: str, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(params: Params, x: Array, kind: str, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated + plain)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, activation: str, cfg, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"down": module.maybe_factorized(ks[2], d_ff, d, cfg, dtype)}
+    if activation in ("swiglu", "geglu"):
+        p["gate"] = module.maybe_factorized(ks[0], d, d_ff, cfg, dtype)
+        p["up"] = module.maybe_factorized(ks[1], d, d_ff, cfg, dtype)
+    else:
+        p["up"] = module.maybe_factorized(ks[1], d, d_ff, cfg, dtype)
+    return p
+
+
+def apply_mlp(params: Params, x: Array, activation: str) -> Array:
+    if activation == "swiglu":
+        g = jax.nn.silu(module.linear(params["gate"], x))
+        h = g * module.linear(params["up"], x)
+    elif activation == "geglu":
+        g = jax.nn.gelu(module.linear(params["gate"], x), approximate=True)
+        h = g * module.linear(params["up"], x)
+    else:  # gelu
+        h = jax.nn.gelu(module.linear(params["up"], x), approximate=True)
+    return module.linear(params["down"], h)
+
+
+def mlp_flops(d: int, d_ff: int, activation: str, tokens: int) -> int:
+    n = 3 if activation in ("swiglu", "geglu") else 2
+    return 2 * n * d * d_ff * tokens
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed(params: Params, tokens: Array, compute_dtype) -> Array:
+    return jnp.take(params["table"], tokens, axis=0).astype(compute_dtype)
+
+
+def unembed(params: Params, x: Array, softcap: float = 0.0) -> Array:
+    logits = x @ params["table"].T.astype(x.dtype)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def cross_entropy(logits: Array, labels: Array, mask: Array | None = None) -> Array:
+    """Mean token-level cross-entropy; logits (..., V), labels (...) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

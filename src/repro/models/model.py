@@ -1,0 +1,189 @@
+"""Unified model API over every architecture family.
+
+Pure functions keyed off ``cfg.family``:
+
+  init(key, cfg)                                   -> params
+  forward(params, cfg, batch)                      -> (logits, aux_loss)
+  loss_fn(params, cfg, batch)                      -> (loss, metrics)
+  init_cache(cfg, batch, max_len)                  -> cache
+  prefill(params, cfg, batch, cache)               -> (logits, cache)
+  serve_step(params, cfg, batch, cache, cache_len) -> (logits, cache)
+
+Batch keys (all optional except labels for training):
+  tokens      (B, S) int32
+  embeddings  (B, S, d)    — stub frontend output ([vlm]/[audio] carve-out)
+  positions   (B, S) or (B, 3, S) for M-RoPE
+  enc_embeddings (B, S_enc, d), enc_mask (B, S_enc)  — enc-dec only
+  labels      (B, S) int32
+  loss_mask   (B, S)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, encdec, layers, module, transformer
+from repro.sharding.context import constrain_residual
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg) -> Params:
+    ke, ks, ko = jax.random.split(key, 3)
+    p: Params = {
+        "embed": module.init_embedding(ke, cfg.vocab, cfg.d_model, cfg.pdtype),
+        "final_norm": layers.init_norm(cfg.d_model, cfg.norm, cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = module.init_embedding(ko, cfg.vocab, cfg.d_model, cfg.pdtype)
+    if cfg.family == "audio" or cfg.encdec is not None:
+        p["stack"] = encdec.init_encdec(ks, cfg)
+    elif cfg.family == "hybrid":
+        p["stack"] = transformer.init_hybrid_stack(ks, cfg)
+    elif cfg.family == "ssm":
+        p["stack"] = transformer.init_xlstm_stack(ks, cfg)
+    else:  # dense / moe / vlm
+        p["stack"] = transformer.init_stack(ks, cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _input_embeddings(params, cfg, batch) -> Array:
+    if "embeddings" in batch:
+        return batch["embeddings"].astype(cfg.cdtype)
+    x = layers.embed(params["embed"], batch["tokens"], cfg.cdtype)
+    if cfg.arch_id.startswith("gemma"):  # gemma scales embeddings by sqrt(d)
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.cdtype)
+    return x
+
+
+def _positions(cfg, batch, seq: int, batchsize: int, offset=0):
+    if "positions" in batch:
+        return batch["positions"]
+    if cfg.rope_type == "mrope":
+        pos = attention.default_positions(batchsize, seq, offset)
+        return jnp.broadcast_to(pos[:, None, :], (pos.shape[0], 3, seq))
+    return attention.default_positions(batchsize, seq, offset)
+
+
+def _unembed(params, cfg, x: Array) -> Array:
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return layers.unembed(table, x, cfg.logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / eval, full sequence)
+# ---------------------------------------------------------------------------
+
+
+def forward(params: Params, cfg, batch: Dict[str, Array],
+            skip_blocks: bool = False) -> Tuple[Array, Array]:
+    x = constrain_residual(_input_embeddings(params, cfg, batch))
+    B, S, _ = x.shape
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "audio" or cfg.encdec is not None:
+        mem = batch["enc_embeddings"].astype(cfg.cdtype)
+        mem_mask = batch.get("enc_mask")
+        enc_pos = attention.default_positions(mem.shape[0], mem.shape[1])
+        ecos, esin = attention.angles_for(cfg, enc_pos)
+        memory = encdec.encode(params["stack"], cfg, mem, mem_mask, ecos, esin)
+        pos = _positions(cfg, batch, S, B)
+        cos, sin = attention.angles_for(cfg, pos)
+        x = encdec.decode_train(params["stack"], cfg, x, memory, mem_mask, cos, sin)
+    elif cfg.family == "ssm":
+        x, aux = transformer.apply_xlstm(params["stack"], cfg, x)
+    else:
+        pos = _positions(cfg, batch, S, B)
+        cos, sin = attention.angles_for(cfg, pos)
+        if cfg.family == "hybrid":
+            x, aux = transformer.apply_hybrid(params["stack"], cfg, x, cos, sin, skip_blocks)
+        else:
+            x, aux = transformer.apply_stack(params["stack"], cfg, x, cos, sin, skip_blocks)
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+    return _unembed(params, cfg, x), aux
+
+
+def loss_fn(params: Params, cfg, batch: Dict[str, Array],
+            skip_blocks: bool = False) -> Tuple[Array, Dict[str, Array]]:
+    logits, aux = forward(params, cfg, batch, skip_blocks)
+    ce = layers.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, max_len: int) -> Dict[str, Any]:
+    if cfg.family == "audio" or cfg.encdec is not None:
+        return encdec.init_encdec_cache(cfg, batch, max_len)
+    cache_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    if cfg.family == "hybrid":
+        return transformer.init_hybrid_cache(cfg, batch, cache_len)
+    if cfg.family == "ssm":
+        return transformer.init_xlstm_cache(cfg, batch)
+    return transformer.init_kv_cache(cfg, batch, cache_len)
+
+
+def prefill(params: Params, cfg, batch: Dict[str, Array],
+            cache: Optional[Dict[str, Any]] = None) -> Tuple[Array, Optional[Dict[str, Any]]]:
+    """Full-sequence forward; for enc-dec additionally encodes memory into
+    the cache.  (KV-cache write-back during prefill is modelled as the
+    forward pass — the dry-run shape that matters is the full-sequence
+    attention itself.)"""
+    if cfg.family == "audio" or cfg.encdec is not None:
+        mem = batch["enc_embeddings"].astype(cfg.cdtype)
+        mem_mask = batch.get("enc_mask", jnp.ones(mem.shape[:2], bool))
+        enc_pos = attention.default_positions(mem.shape[0], mem.shape[1])
+        ecos, esin = attention.angles_for(cfg, enc_pos)
+        memory = encdec.encode(params["stack"], cfg, mem, mem_mask, ecos, esin)
+        if cache is not None:
+            cache = encdec.prefill_memory(params["stack"], cfg, memory, mem_mask, cache)
+        x = _input_embeddings(params, cfg, batch)
+        B, S, _ = x.shape
+        pos = _positions(cfg, batch, S, B)
+        cos, sin = attention.angles_for(cfg, pos)
+        x = encdec.decode_train(params["stack"], cfg, x, memory, mem_mask, cos, sin)
+        x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+        return _unembed(params, cfg, x), cache
+    logits, _ = forward(params, cfg, batch)
+    return logits, cache
+
+
+def serve_step(params: Params, cfg, batch: Dict[str, Array],
+               cache: Dict[str, Any], cache_len: Array) -> Tuple[Array, Dict[str, Any]]:
+    """One new token given a populated cache.  batch["tokens"]: (B, 1)."""
+    x = _input_embeddings(params, cfg, batch)
+    B = x.shape[0]
+    pos = batch.get("positions")
+    if pos is None:
+        if cfg.rope_type == "mrope":
+            p1 = jnp.broadcast_to(cache_len.astype(jnp.int32), (B, 3, 1))
+            pos = p1
+        else:
+            pos = jnp.broadcast_to(cache_len.astype(jnp.int32), (B, 1))
+    cos, sin = attention.angles_for(cfg, pos)
+    if cfg.family == "audio" or cfg.encdec is not None:
+        x, cache = encdec.decode_step(params["stack"], cfg, x, cache, cache_len, cos, sin)
+    elif cfg.family == "hybrid":
+        x, cache = transformer.decode_hybrid(params["stack"], cfg, x, cache, cache_len, cos, sin)
+    elif cfg.family == "ssm":
+        x, cache = transformer.decode_xlstm(params["stack"], cfg, x, cache)
+    else:
+        x, cache = transformer.decode_stack(params["stack"], cfg, x, cache, cache_len, cos, sin)
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+    return _unembed(params, cfg, x), cache

@@ -1,0 +1,145 @@
+"""Minimal functional module system.
+
+Parameters are plain nested dicts of jax arrays.  Layers are pure
+functions ``apply(params, x, ...)``; initialisers are pure functions
+``init(key, ...) -> params``.  Stacked-layer models store every layer's
+params with a leading ``L`` axis and run :func:`jax.lax.scan` over them so
+compile time is depth-independent.
+
+Factorized linears (Heroes neural composition) are supported natively:
+a linear's params are either ``{"w": (din, dout)}`` (dense) or
+``{"basis": (I, R), "coeff": (m, R, O)}`` (factorized, m = p^2 blocks at
+width p).  The factorized *forward* never materialises the composed
+weight::
+
+    y[(b,o)] = sum_a (x_a @ v) @ u_{ab}      (see DESIGN.md §3)
+
+which is algebraically identical to composing w_p and multiplying —
+validated against :func:`repro.core.composition.compose` in tests — but
+costs ``p·I·R + p²·R·O`` MACs/token instead of ``p²·I·O``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.composition import CompositionSpec, init_factors
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# dense linear
+# ---------------------------------------------------------------------------
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None) -> Params:
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return {"w": std * jax.random.normal(key, (d_in, d_out), dtype)}
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> Params:
+    # d^-0.5 keeps tied-unembed logits O(1) at init
+    return {"table": (d ** -0.5) * jax.random.normal(key, (vocab, d), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# factorized linear (Heroes)
+# ---------------------------------------------------------------------------
+
+
+def comp_spec_for(d_in: int, d_out: int, max_width: int, rank: int) -> CompositionSpec:
+    """Spec of a factorized linear whose *full-width* (p=P) weight is
+    (d_in, d_out): base_in = d_in / P, base_out = d_out / P."""
+    if d_in % max_width or d_out % max_width:
+        raise ValueError(f"dims ({d_in},{d_out}) not divisible by P={max_width}")
+    return CompositionSpec(
+        max_width=max_width, rank=rank, base_in=d_in // max_width,
+        base_out=d_out // max_width, ksq=1,
+    )
+
+
+def init_factorized_linear(key, d_in: int, d_out: int, max_width: int,
+                           rank: int, width: int, dtype) -> Params:
+    """Init at active width ``width`` (p^2 leading blocks; the FL runtime
+    re-gathers blocks per round — for the static launcher path the width is
+    fixed at construction)."""
+    spec = comp_spec_for(d_in, d_out, max_width, rank)
+    v, u = init_factors(key, spec, dtype)
+    m = width * width
+    return {"basis": v[0], "coeff": u[:m]}  # drop ksq=1 axis on basis
+
+
+# Paper-faithful forward: materialise w_p = compose(v, u) then x @ w_p.
+# Default (False) is the beyond-paper factorized forward x@v@u (§Perf).
+_COMPOSE_THEN_MATMUL = False
+
+
+def set_compose_then_matmul(value: bool) -> None:
+    global _COMPOSE_THEN_MATMUL
+    _COMPOSE_THEN_MATMUL = value
+
+
+def linear(params: Params, x: Array, width: int = 0) -> Array:
+    """Apply dense or factorized linear.  ``x``: (..., d_in)."""
+    if "w" in params:
+        return x @ params["w"].astype(x.dtype)
+    basis, coeff = params["basis"], params["coeff"]
+    p = width or int(math.isqrt(coeff.shape[0]))
+    assert p * p == coeff.shape[0], "coeff blocks must be a square count"
+    I = basis.shape[0]
+    R, O = coeff.shape[1], coeff.shape[2]
+    *lead, d_in = x.shape
+    assert d_in == p * I, f"x dim {d_in} != p*I = {p}*{I}"
+    if _COMPOSE_THEN_MATMUL:
+        # w[(a,i),(b,o)] = sum_r v[i,r] u[(a,b),r,o]  (paper Fig. 1)
+        u = coeff.astype(x.dtype).reshape(p, p, R, O)
+        w = jnp.einsum("ir,abro->aibo", basis.astype(x.dtype), u)
+        w = w.reshape(p * I, p * O)
+        return x @ w
+    xa = x.reshape(*lead, p, I)
+    z = jnp.einsum("...ai,ir->...ar", xa, basis.astype(x.dtype))
+    u = coeff.astype(x.dtype).reshape(p, p, R, O)
+    y = jnp.einsum("...ar,abro->...bo", z, u)
+    return y.reshape(*lead, p * O)
+
+
+def linear_out_dim(params: Params, width: int = 0) -> int:
+    if "w" in params:
+        return params["w"].shape[1]
+    p = width or int(math.isqrt(params["coeff"].shape[0]))
+    return p * params["coeff"].shape[2]
+
+
+def maybe_factorized(key, d_in: int, d_out: int, cfg, dtype) -> Params:
+    """Init a linear honouring cfg.composition (used by all transformer
+    projections so Heroes composition is a first-class switch)."""
+    c = cfg.composition
+    if not c.enabled:
+        return init_linear(key, d_in, d_out, dtype)
+    return init_factorized_linear(
+        key, d_in, d_out, c.max_width, cfg.comp_rank, cfg.comp_width, dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# stacked init: vmap an initialiser over a leading layer axis
+# ---------------------------------------------------------------------------
+
+
+def stacked_init(init_fn, key, num: int, *args, **kwargs):
+    keys = jax.random.split(key, num)
+    return jax.vmap(lambda k: init_fn(k, *args, **kwargs))(keys)
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))

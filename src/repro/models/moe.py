@@ -1,0 +1,205 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based GShard dispatch.
+
+Baseline dispatch is the classic dense one-hot formulation (GShard /
+Switch): a ``(T, E, C)`` combine tensor routes tokens to expert slots via
+two einsums.  It is fully shardable under pjit — experts live on the
+``model`` mesh axis, the token→expert einsum lowers to an all-to-all — and
+is the *baseline* for the roofline; the §Perf log measures the dispatch
+overhead and evaluates a sort-based alternative.
+
+Capacity: C = ceil(T * top_k * capacity_factor / E), tokens over capacity
+are dropped (residual passes through — standard).  Aux load-balance loss
+follows Switch: E * sum_e f_e * p_e.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, module
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg, dtype) -> Params:
+    m = cfg.moe
+    d, de, E = cfg.d_model, m.d_expert, m.num_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(d)
+    p: Params = {
+        "router": {"w": scale * jax.random.normal(ks[0], (d, E), jnp.float32)},
+        "gate": scale * jax.random.normal(ks[1], (E, d, de), dtype),
+        "up": scale * jax.random.normal(ks[2], (E, d, de), dtype),
+        "down": (1.0 / jnp.sqrt(de)) * jax.random.normal(ks[3], (E, de, d), dtype),
+    }
+    if m.num_shared_experts:
+        p["shared"] = layers.init_mlp(
+            ks[4], d, de * m.num_shared_experts, cfg.activation, cfg, dtype
+        )
+    return p
+
+
+def capacity(tokens: int, cfg) -> int:
+    import math
+
+    m = cfg.moe
+    c = math.ceil(tokens * m.top_k * m.capacity_factor / m.num_experts)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def router_topk(router_params: Params, x2d: Array, cfg) -> Tuple[Array, Array, Array]:
+    """Returns (probs (T,E) f32, topk gate values (T,k), topk ids (T,k))."""
+    logits = (x2d.astype(jnp.float32) @ router_params["w"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, cfg.moe.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return probs, gates, ids
+
+
+def make_combine(probs: Array, gates: Array, ids: Array, cfg, cap: int) -> Tuple[Array, Array]:
+    """GShard combine tensor (T, E, C) and aux loss."""
+    T, E = probs.shape
+    k = cfg.moe.top_k
+    counts = jnp.zeros((E,), jnp.int32)
+    combine = jnp.zeros((T, E, cap), jnp.float32)
+    for slot in range(k):  # static small loop over top-k slots
+        e = ids[:, slot]
+        onehot = jax.nn.one_hot(e, E, dtype=jnp.int32)  # (T, E)
+        pos = jnp.cumsum(onehot, axis=0) - 1 + counts[None, :]  # (T, E)
+        pos_t = jnp.take_along_axis(pos, e[:, None], axis=1)[:, 0]  # (T,)
+        keep = pos_t < cap
+        posoh = jax.nn.one_hot(pos_t, cap, dtype=jnp.float32) * keep[:, None]
+        combine = combine + (
+            gates[:, slot][:, None, None]
+            * jax.nn.one_hot(e, E, dtype=jnp.float32)[:, :, None]
+            * posoh[:, None, :]
+        )
+        counts = counts + jnp.sum(onehot * keep[:, None].astype(jnp.int32), axis=0)
+    # Switch aux loss: E * sum_e (token fraction) * (mean prob)
+    top1 = ids[:, 0]
+    frac = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=0)
+    mean_p = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * mean_p)
+    return combine, aux
+
+
+def expert_ffn(params: Params, cfg, xec: Array) -> Array:
+    """Per-expert gated FFN on dispatched tokens.  xec: (E, C, d)."""
+    g = jnp.einsum("ecd,edf->ecf", xec, params["gate"].astype(xec.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xec, params["up"].astype(xec.dtype))
+    if cfg.activation == "geglu":
+        h = jax.nn.gelu(g, approximate=True) * u
+    else:
+        h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, params["down"].astype(xec.dtype))
+
+
+def _moe_group(params, cfg, xg: Array) -> Tuple[Array, Array]:
+    """One dispatch group (GShard 'group').  xg: (T, d)."""
+    T, d = xg.shape
+    cap = capacity(T, cfg)
+    probs, gates, ids = router_topk(params["router"], xg, cfg)
+    combine, aux = make_combine(probs, gates, ids, cfg, cap)
+    dispatch = (combine > 0).astype(xg.dtype)  # (T, E, C)
+    xec = jnp.einsum("tec,td->ecd", dispatch, xg)
+    yec = expert_ffn(params, cfg, xec)
+    y = jnp.einsum("tec,ecd->td", combine.astype(xg.dtype), yec)
+    return y, aux
+
+
+def apply_moe(params: Params, cfg, x: Array) -> Tuple[Array, Array]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    Dispatch is GROUP-WISE (GShard): each batch row is its own dispatch
+    group when the sequence is long, so the one-hot combine tensor is
+    (T_g, E, C_g) with T_g = S — NOT (B·S, E, C) over the global token
+    set.  The ungrouped form makes dispatch FLOPs scale quadratically in
+    tokens and was measured at ~800x overhead for kimi-k2 at train_4k
+    (EXPERIMENTS.md §Perf iteration 1).  Groups align with the data-
+    parallel batch sharding, so no cross-device dispatch traffic is added.
+    """
+    B, S, d = x.shape
+    from repro.sharding.context import get_context
+    ctx = get_context()
+    if ctx["moe_shardmap"] and ctx["mesh"] is not None:
+        # weight-stationary expert parallelism with an explicit psum
+        # schedule (repro.models.moe_shardmap) — §Perf variant.
+        from repro.models.moe_shardmap import apply_moe_shardmap
+        y = apply_moe_shardmap(params, cfg, x, ctx["mesh"])
+        return y, jnp.zeros((), jnp.float32)
+    if S >= 512 and B > 1:
+        y, aux = jax.vmap(lambda xg: _moe_group(params, cfg, xg))(x)
+        aux = jnp.mean(aux)
+        y = y.reshape(B, S, d)
+    else:
+        y, aux = _moe_group(params, cfg, x.reshape(B * S, d))
+        y = y.reshape(B, S, d)
+    if "shared" in params:
+        y = y + layers.apply_mlp(params["shared"], x, cfg.activation)
+    return y, aux * cfg.moe.router_aux_weight
+
+
+# ---------------------------------------------------------------------------
+# sort-based dispatch (perf variant — §Perf hillclimb)
+# ---------------------------------------------------------------------------
+
+
+def apply_moe_sorted(params: Params, cfg, x: Array) -> Tuple[Array, Array]:
+    """Gather/scatter dispatch: sort token-slots by expert, segment the
+    sorted buffer into fixed-capacity expert bins, run the same expert FFN,
+    scatter back.  Identical math to :func:`apply_moe` on kept tokens (same
+    capacity rule, same priority order = token index), but replaces the two
+    ``(T,E,C)`` einsums (2·T·E·C·d FLOPs each) with gathers (0 FLOPs).
+    Grouped like :func:`apply_moe`.
+    """
+    B, S, d = x.shape
+    if S >= 512 and B > 1:
+        y, aux = jax.vmap(lambda xg: _moe_sorted_group(params, cfg, xg))(x)
+        y = y.reshape(B, S, d)
+        aux = jnp.mean(aux)
+        if "shared" in params:
+            y = y + layers.apply_mlp(params["shared"], x, cfg.activation)
+        return y, aux * cfg.moe.router_aux_weight
+    y, aux = _moe_sorted_group(params, cfg, x.reshape(B * S, d))
+    y = y.reshape(B, S, d)
+    if "shared" in params:
+        y = y + layers.apply_mlp(params["shared"], x, cfg.activation)
+    return y, aux * cfg.moe.router_aux_weight
+
+
+def _moe_sorted_group(params: Params, cfg, x2d: Array) -> Tuple[Array, Array]:
+    T, d = x2d.shape
+    k = cfg.moe.top_k
+    cap = capacity(T, cfg)
+    E = cfg.moe.num_experts
+    probs, gates, ids = router_topk(params["router"], x2d, cfg)
+
+    flat_e = ids.reshape(-1)  # (T*k,) expert of each slot, slot-major per token
+    flat_g = gates.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    # priority: lower token index first within an expert, matching GShard's
+    # cumsum order; stable sort by expert keeps token order within experts.
+    order = jnp.argsort(flat_e, stable=True)
+    se, sg, st = flat_e[order], flat_g[order], flat_tok[order]
+    # position within expert = rank - start_of_expert
+    ranks = jnp.arange(T * k)
+    starts = jnp.searchsorted(se, jnp.arange(E), side="left")
+    pos = ranks - jnp.take(starts, se)
+    keep = pos < cap
+    slot_idx = jnp.where(keep, se * cap + pos, E * cap)  # overflow bucket
+    xbuf = jnp.zeros((E * cap + 1, d), x2d.dtype).at[slot_idx].set(
+        jnp.where(keep[:, None], x2d[st], 0)
+    )
+    yec = expert_ffn(params, cfg, xbuf[:-1].reshape(E, cap, d))
+    ybuf = yec.reshape(E * cap, d)
+    contrib = jnp.where(keep[:, None], ybuf[jnp.minimum(slot_idx, E * cap - 1)], 0)
+    y = jnp.zeros((T, d), x2d.dtype).at[st].add(
+        contrib * sg[:, None].astype(x2d.dtype))
+    top1 = ids[:, 0]
+    frac = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return y, aux

@@ -1,0 +1,50 @@
+"""Token sampling utilities for the serving path."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def sample_logits(key, logits: Array, *, temperature: float = 1.0,
+                  top_k: int = 0, top_p: float = 0.0) -> Array:
+    """Sample token ids from (B, V) logits.
+
+    temperature=0 -> greedy; top_k keeps the k best; top_p keeps the
+    smallest nucleus whose probability mass >= top_p.  Filters compose
+    (top_k first, then top_p), matching the common serving convention.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k > 0 and top_k < logits.shape[-1]:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if top_p > 0.0 and top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep tokens until the cumulative mass passes top_p (inclusive)
+        keep_sorted = cum - probs < top_p
+        cutoff = jnp.max(jnp.where(keep_sorted, sorted_logits, -jnp.inf),
+                         axis=-1, keepdims=True)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1)
+
+
+def perplexity(logits: Array, labels: Array,
+               mask: Optional[Array] = None) -> Array:
+    """exp(mean token NLL) over (B, S, V) logits / (B, S) labels."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mean = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        mean = jnp.mean(nll)
+    return jnp.exp(mean)

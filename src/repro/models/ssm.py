@@ -1,0 +1,210 @@
+"""Mamba2 (SSD) block — chunked, matmul-dominant formulation for TPU.
+
+State space:  h_t = a_t * h_{t-1} + dt_t * (B_t  x_t^T),   y_t = C_t h_t + D x_t
+with a_t = exp(-dt_t * exp(A_log))  (scalar per head), h in R^{N x P}.
+
+The chunked (SSD) algorithm splits the sequence into chunks of length Q:
+  * intra-chunk: quadratic-in-Q masked matmul  (MXU-friendly)
+  * inter-chunk: a length-T/Q ``lax.scan`` carrying the (H, N, P) state
+so the lowered HLO is a short scan over big matmuls — exactly the structure
+the Mamba2 paper derives, adapted here to jnp/einsum (no CUDA scan
+primitives needed; the TPU analogue of their fused kernel is the chunk
+matmul batch, which XLA maps onto the MXU).
+
+Decode: O(1) recurrent step carrying (conv_state, ssm_state).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, module
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def dims(cfg) -> Tuple[int, int, int, int]:
+    """(d_inner, n_heads, head_dim P, state_dim N)."""
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    assert d_inner % s.head_dim == 0
+    return d_inner, d_inner // s.head_dim, s.head_dim, s.state_dim
+
+
+def init_mamba2(key, cfg, dtype) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, P, N = dims(cfg)
+    conv_ch = d_inner + 2 * N  # x plus B and C go through the conv
+    ks = jax.random.split(key, 5)
+    in_dim = 2 * d_inner + 2 * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": module.maybe_factorized(ks[0], d, in_dim, cfg, dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (s.conv_width, conv_ch), dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(0.01 * jnp.ones((H,), jnp.float32))),
+        "norm": layers.init_norm(d_inner, "rmsnorm", dtype),
+        "out_proj": module.maybe_factorized(ks[4], d_inner, d, cfg, dtype),
+    }
+
+
+def _split_proj(zxbcdt: Array, cfg):
+    d_inner, H, P, N = dims(cfg)
+    z, x, b, c, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    return z, x, b, c, dt
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over (B, T, C) with kernel (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return out + b[None, None, :]
+
+
+def ssd_chunked(
+    x: Array, dt: Array, A: Array, Bm: Array, Cm: Array, chunk: int,
+    init_state: Array | None = None,
+) -> Tuple[Array, Array]:
+    """Chunked selective-state-space scan.
+
+    x (B,T,H,P), dt (B,T,H) (post-softplus), A (H,) (positive decay rates),
+    Bm/Cm (B,T,N) (single group shared by all heads).
+    Returns (y (B,T,H,P), final_state (B,H,N,P)).
+    """
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Q
+
+    # log-decay per step: la_t = -dt_t * A  (shape B,T,H) — kept f32
+    la = (-dt * A[None, None, :]).astype(jnp.float32)
+    xw = x * dt[..., None].astype(x.dtype)  # dt-weighted input, model dtype
+
+    def reshape_c(a, extra=()):
+        return a.reshape(Bsz, nc, Q, *a.shape[2:])
+
+    xc, lac, bc, cc = reshape_c(xw), reshape_c(la), reshape_c(Bm), reshape_c(Cm)
+    cum = jnp.cumsum(lac, axis=2)  # (B,nc,Q,H) cumulative log decay in chunk
+    total = cum[:, :, -1]  # (B,nc,H)
+
+    # ---- intra-chunk (quadratic in Q) --------------------------------
+    # decay(i,j) = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q_i,Q_j,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B,nc,Qi,Qj)
+    y_intra = jnp.einsum(
+        "bcij,bcijh,bcjhp->bcihp", scores, decay.astype(scores.dtype), xc
+    )
+
+    # ---- chunk summary states ----------------------------------------
+    # S_c = sum_j exp(total - cum_j) B_j (xw_j)^T   -> (B,nc,H,N,P)
+    w = jnp.exp(total[:, :, None] - cum)  # (B,nc,Q,H)
+    S = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bc, w.astype(xc.dtype), xc)
+
+    # ---- inter-chunk scan ---------------------------------------------
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, N, P), x.dtype)
+
+    def step(h, inp):
+        s_c, tot_c = inp  # (B,H,N,P), (B,H)
+        h_new = h * jnp.exp(tot_c)[:, :, None, None].astype(h.dtype) + s_c
+        return h_new, h  # emit state *entering* the chunk
+
+    (h_final, h_in) = jax.lax.scan(
+        step,
+        init_state,
+        (jnp.moveaxis(S, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,nc,H,N,P) state entering chunk
+
+    # ---- inter-chunk contribution -------------------------------------
+    # y_inter_i = exp(cum_i) * C_i @ h_in
+    decay_in = jnp.exp(cum)[..., None, None].astype(x.dtype)  # (B,nc,Q,H,1,1)
+    y_inter = jnp.einsum(
+        "bcin,bcihnp->bcihp", cc, decay_in * h_in[:, :, None]
+    )
+    y = (y_intra + y_inter).reshape(Bsz, Tp, H, P)[:, :T]
+    return y, h_final
+
+
+def apply_mamba2(params: Params, cfg, u: Array) -> Array:
+    """Full-sequence Mamba2 block.  u: (B, T, d_model)."""
+    s = cfg.ssm
+    d_inner, H, P, N = dims(cfg)
+    zxbcdt = module.linear(params["in_proj"], u)
+    z, x, b, c, dt = _split_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([x, b, c], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"].astype(u.dtype),
+                                   params["conv_b"].astype(u.dtype)))
+    x, b, c = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    A = jnp.exp(params["A_log"])
+    xh = x.reshape(*x.shape[:2], H, P)
+    y, _ = ssd_chunked(xh, dt, A, b.astype(jnp.float32).astype(u.dtype),
+                       c.astype(jnp.float32).astype(u.dtype), s.chunk)
+    y = y + params["D"].astype(u.dtype)[None, None, :, None] * xh
+    y = y.reshape(*u.shape[:2], d_inner)
+    y = layers.apply_norm(params["norm"], y, "rmsnorm") * jax.nn.silu(z)
+    return module.linear(params["out_proj"], y)
+
+
+# ---------------------------------------------------------------------------
+# decode (single-token recurrent step)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2_cache(cfg, batch: int, dtype) -> Dict[str, Array]:
+    s = cfg.ssm
+    d_inner, H, P, N = dims(cfg)
+    conv_ch = d_inner + 2 * N
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, H, N, P), dtype),
+    }
+
+
+def apply_mamba2_decode(
+    params: Params, cfg, u: Array, cache: Dict[str, Array]
+) -> Tuple[Array, Dict[str, Array]]:
+    """One token.  u: (B, 1, d_model)."""
+    s = cfg.ssm
+    d_inner, H, P, N = dims(cfg)
+    zxbcdt = module.linear(params["in_proj"], u)
+    z, x, b, c, dt = _split_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([x, b, c], axis=-1)  # (B,1,conv_ch)
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,W,conv_ch)
+    w = params["conv_w"].astype(u.dtype)
+    out = jnp.einsum("bwc,wc->bc", hist, w) + params["conv_b"].astype(u.dtype)
+    xbc1 = jax.nn.silu(out)[:, None, :]
+    new_conv = hist[:, 1:]
+    x, b, c = jnp.split(xbc1, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    A = jnp.exp(params["A_log"])
+    a = jnp.exp(-dt[:, 0] * A[None, :])  # (B,H)
+    xh = x.reshape(x.shape[0], H, P)
+    dBx = jnp.einsum("bn,bhp->bhnp", b[:, 0], xh * dt[:, 0][..., None].astype(u.dtype))
+    state = cache["state"] * a[:, :, None, None].astype(u.dtype) + dBx
+    y = jnp.einsum("bn,bhnp->bhp", c[:, 0], state)
+    y = y + params["D"].astype(u.dtype)[None, :, None] * xh
+    y = y.reshape(u.shape[0], 1, d_inner)
+    y = layers.apply_norm(params["norm"], y, "rmsnorm") * jax.nn.silu(z)
+    return module.linear(params["out_proj"], y), {"conv": new_conv, "state": state}

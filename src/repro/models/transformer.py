@@ -1,0 +1,385 @@
+"""Stack assembly: decoder layers scanned over stacked params.
+
+Every family's stack is a (short) ``lax.scan`` over layer-stacked params so
+HLO size and compile time are depth-independent — an 88-layer granite
+lowers as fast as a 2-layer smoke model.  Remat (``jax.checkpoint``) wraps
+the scan body when ``cfg.remat``.
+
+Families:
+  dense / vlm        scan over identical decoder layers
+  moe                unrolled ``first_k_dense`` dense layers + scanned MoE layers
+  hybrid (zamba2)    scan over superblocks: ``attn_every`` Mamba2 layers then
+                     one *shared* attention+MLP block (captured params — the
+                     sharing is the point of the architecture)
+  ssm (xlstm)        scan over superblocks: (slstm_every-1) mLSTM + 1 sLSTM
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe as moe_lib, module, ssm, xlstm
+from repro.sharding.context import constrain_residual
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# dense decoder layer
+# ---------------------------------------------------------------------------
+
+
+def init_decoder_layer(key, cfg, use_moe: bool) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": layers.init_norm(cfg.d_model, cfg.norm, cfg.pdtype),
+        "attn": attention.init_attention(ks[0], cfg),
+        "ln2": layers.init_norm(cfg.d_model, cfg.norm, cfg.pdtype),
+    }
+    if use_moe:
+        p["moe"] = moe_lib.init_moe(ks[1], cfg, cfg.pdtype)
+    else:
+        p["mlp"] = layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, cfg, cfg.pdtype)
+    return p
+
+
+def decoder_layer(params: Params, cfg, x: Array, cos, sin,
+                  skip_blocks: bool = False) -> Tuple[Array, Array]:
+    """Returns (x, aux_loss)."""
+    h = layers.apply_norm(params["ln1"], x, cfg.norm)
+    attn_out = attention.self_attention(
+        params["attn"], cfg, h, cos, sin, skip_masked_blocks=skip_blocks
+    )
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_block:
+        if "moe" in params:
+            ffn_out, aux = moe_lib.apply_moe(params["moe"], cfg, h)
+        else:
+            ffn_out = layers.apply_mlp(params["mlp"], h, cfg.activation)
+        return x + attn_out + ffn_out, aux
+    x = x + attn_out
+    h2 = layers.apply_norm(params["ln2"], x, cfg.norm)
+    if "moe" in params:
+        ffn_out, aux = moe_lib.apply_moe(params["moe"], cfg, h2)
+    else:
+        ffn_out = layers.apply_mlp(params["mlp"], h2, cfg.activation)
+    return x + ffn_out, aux
+
+
+def decoder_layer_decode(params: Params, cfg, x: Array, ck, cv, cache_len,
+                         cos, sin, scales=None):
+    h = layers.apply_norm(params["ln1"], x, cfg.norm)
+    res = attention.decode_self_attention(
+        params["attn"], cfg, h, ck, cv, cache_len, cos, sin,
+        cache_scales=scales,
+    )
+    if scales is not None:
+        attn_out, ck, cv, scales = res
+    else:
+        attn_out, ck, cv = res
+    if cfg.parallel_block:
+        if "moe" in params:
+            ffn_out, _ = moe_lib.apply_moe(params["moe"], cfg, h)
+        else:
+            ffn_out = layers.apply_mlp(params["mlp"], h, cfg.activation)
+        out = x + attn_out + ffn_out
+    else:
+        x = x + attn_out
+        h2 = layers.apply_norm(params["ln2"], x, cfg.norm)
+        if "moe" in params:
+            ffn_out, _ = moe_lib.apply_moe(params["moe"], cfg, h2)
+        else:
+            ffn_out = layers.apply_mlp(params["mlp"], h2, cfg.activation)
+        out = x + ffn_out
+    if scales is not None:
+        return out, ck, cv, scales
+    return out, ck, cv
+
+
+# ---------------------------------------------------------------------------
+# dense / moe stacks
+# ---------------------------------------------------------------------------
+
+
+def init_stack(key, cfg) -> Params:
+    if cfg.moe is not None:
+        kd, km = jax.random.split(key)
+        fkd = cfg.moe.first_k_dense
+        p: Params = {}
+        if fkd:
+            p["dense_layers"] = module.stacked_init(
+                lambda k: init_decoder_layer(k, cfg, use_moe=False), kd, fkd
+            )
+        p["moe_layers"] = module.stacked_init(
+            lambda k: init_decoder_layer(k, cfg, use_moe=True), km,
+            cfg.num_layers - fkd,
+        )
+        return p
+    return {
+        "layers": module.stacked_init(
+            lambda k: init_decoder_layer(k, cfg, use_moe=False), key, cfg.num_layers
+        )
+    }
+
+
+def _scan_layers(body, x0, stacked_params, cfg):
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def f(carry, lp):
+        x, aux = carry
+        x, a = body(lp, x)
+        x = constrain_residual(x)  # bounds the remat/scan carry footprint
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(f, (x0, jnp.zeros((), jnp.float32)), stacked_params)
+    return x, aux
+
+
+def apply_stack(params: Params, cfg, x: Array, cos, sin,
+                skip_blocks: bool = False) -> Tuple[Array, Array]:
+    body = lambda lp, h: decoder_layer(lp, cfg, h, cos, sin, skip_blocks)
+    aux_total = jnp.zeros((), jnp.float32)
+    if "dense_layers" in params:
+        x, aux = _scan_layers(body, x, params["dense_layers"], cfg)
+        aux_total += aux
+    key = "moe_layers" if cfg.moe is not None else "layers"
+    x, aux = _scan_layers(body, x, params[key], cfg)
+    return x, aux_total + aux
+
+
+def decode_stack(params: Params, cfg, x: Array, cache: Dict[str, Array],
+                 cache_len, cos, sin) -> Tuple[Array, Dict[str, Array]]:
+    """cache: {"k": (L,B,S,KV,D), "v": same} stacked over *all* layers in
+    stack order (dense first); int8 variants add "k_scale"/"v_scale"
+    (L,B,S,KV)."""
+    quant = "k_scale" in cache
+
+    def f(carry, xs):
+        h = carry
+        if quant:
+            lp, ck, cv, ks_, vs_ = xs
+            h, ck, cv, (ks_, vs_) = decoder_layer_decode(
+                lp, cfg, h, ck, cv, cache_len, cos, sin, scales=(ks_, vs_))
+            return h, (ck, cv, ks_, vs_)
+        lp, ck, cv = xs
+        h, ck, cv = decoder_layer_decode(lp, cfg, h, ck, cv, cache_len, cos, sin)
+        return h, (ck, cv)
+
+    parts = []
+    if "dense_layers" in params:
+        parts.append(params["dense_layers"])
+    parts.append(params["moe_layers"] if cfg.moe is not None else params["layers"])
+    fkd = cfg.moe.first_k_dense if cfg.moe is not None else 0
+
+    new = {k: [] for k in cache}
+    off = 0
+    for part, n in zip(parts, ([fkd, cfg.num_layers - fkd] if cfg.moe is not None and fkd
+                               else [cfg.num_layers])):
+        sl = {k: jax.lax.dynamic_slice_in_dim(cache[k], off, n, axis=0)
+              for k in cache}
+        if quant:
+            x, (ck, cv, ks_, vs_) = jax.lax.scan(
+                f, x, (part, sl["k"], sl["v"], sl["k_scale"], sl["v_scale"]))
+            outs = {"k": ck, "v": cv, "k_scale": ks_, "v_scale": vs_}
+        else:
+            x, (ck, cv) = jax.lax.scan(f, x, (part, sl["k"], sl["v"]))
+            outs = {"k": ck, "v": cv}
+        for k in outs:
+            new[k].append(outs[k])
+        off += n
+    return x, {k: jnp.concatenate(v, 0) for k, v in new.items()}
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, num_layers: Optional[int] = None,
+                  dtype=None) -> Dict[str, Array]:
+    n = num_layers if num_layers is not None else cfg.num_layers
+    d = cfg.resolved_head_dim
+    shape = (n, batch, max_len, cfg.num_kv_heads, d)
+    if dtype is None and cfg.kv_cache_quant == "int8":
+        sshape = (n, batch, max_len, cfg.num_kv_heads)
+        return {"k": jnp.zeros(shape, jnp.int8), "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+    dt = dtype or cfg.cdtype
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+# ---------------------------------------------------------------------------
+# hybrid (zamba2): mamba superblocks + shared attention block
+# ---------------------------------------------------------------------------
+
+
+def init_shared_block(key, cfg) -> Params:
+    hb = cfg.hybrid
+    d_ff = hb.shared_d_ff or 4 * cfg.d_model
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": layers.init_norm(cfg.d_model, cfg.norm, cfg.pdtype),
+        "attn": attention.init_attention(ks[0], cfg),
+        "ln2": layers.init_norm(cfg.d_model, cfg.norm, cfg.pdtype),
+        "mlp": layers.init_mlp(ks[1], cfg.d_model, d_ff, cfg.activation, cfg, cfg.pdtype),
+    }
+
+
+def init_hybrid_stack(key, cfg) -> Params:
+    hb = cfg.hybrid
+    assert cfg.num_layers % hb.attn_every == 0, "layers must tile into superblocks"
+    km, ka, kn = jax.random.split(key, 3)
+    mamba = module.stacked_init(lambda k: ssm.init_mamba2(k, cfg, cfg.pdtype),
+                                km, cfg.num_layers)
+    nsuper = cfg.num_layers // hb.attn_every
+    # reshape leading axis (L, ...) -> (nsuper, attn_every, ...)
+    mamba = jax.tree_util.tree_map(
+        lambda a: a.reshape(nsuper, hb.attn_every, *a.shape[1:]), mamba
+    )
+    return {
+        "mamba": mamba,
+        "mamba_norms": jax.tree_util.tree_map(
+            lambda a: a.reshape(nsuper, hb.attn_every, *a.shape[1:]),
+            module.stacked_init(
+                lambda k: layers.init_norm(cfg.d_model, cfg.norm, cfg.pdtype),
+                kn, cfg.num_layers),
+        ),
+        "shared": init_shared_block(ka, cfg),
+    }
+
+
+def apply_hybrid(params: Params, cfg, x: Array, cos, sin,
+                 skip_blocks: bool = False) -> Tuple[Array, Array]:
+    shared = params["shared"]
+
+    def mamba_layer(lp, h):
+        norm_p, mp = lp
+        return h + ssm.apply_mamba2(mp, cfg, layers.apply_norm(norm_p, h, cfg.norm)), jnp.zeros((), jnp.float32)
+
+    def superblock(carry, xs):
+        h, aux = carry
+        norms, mps = xs
+        h, a = _scan_layers(mamba_layer, h, (norms, mps), cfg)
+        # shared attention + MLP block (same params every superblock)
+        hs = layers.apply_norm(shared["ln1"], h, cfg.norm)
+        h = h + attention.self_attention(shared["attn"], cfg, hs, cos, sin,
+                                         skip_masked_blocks=skip_blocks)
+        hm = layers.apply_norm(shared["ln2"], h, cfg.norm)
+        h = h + layers.apply_mlp(shared["mlp"], hm, cfg.activation)
+        return (constrain_residual(h), aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        superblock, (x, jnp.zeros((), jnp.float32)),
+        (params["mamba_norms"], params["mamba"]),
+    )
+    return x, aux
+
+
+def init_hybrid_cache(cfg, batch: int, max_len: int) -> Dict[str, Any]:
+    hb = cfg.hybrid
+    nsuper = cfg.num_layers // hb.attn_every
+    mcache = ssm.init_mamba2_cache(cfg, batch, cfg.cdtype)
+    # stack (nsuper, attn_every, ...)
+    mcache = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (nsuper, hb.attn_every, *a.shape)), mcache
+    )
+    kv = init_kv_cache(cfg, batch, max_len, num_layers=nsuper)
+    return {"mamba": mcache, "kv": kv}
+
+
+def decode_hybrid(params: Params, cfg, x: Array, cache, cache_len, cos, sin):
+    shared = params["shared"]
+
+    def mamba_layer(h, xs):
+        (norm_p, mp), mc = xs
+        out, mc = ssm.apply_mamba2_decode(mp, cfg, layers.apply_norm(norm_p, h, cfg.norm), mc)
+        return h + out, mc
+
+    def superblock(h, xs):
+        (norms, mps), mcs, ck, cv = xs
+        h, mcs = jax.lax.scan(mamba_layer, h, ((norms, mps), mcs))
+        hs = layers.apply_norm(shared["ln1"], h, cfg.norm)
+        attn_out, ck, cv = attention.decode_self_attention(
+            shared["attn"], cfg, hs, ck, cv, cache_len, cos, sin
+        )
+        h = h + attn_out
+        hm = layers.apply_norm(shared["ln2"], h, cfg.norm)
+        h = h + layers.apply_mlp(shared["mlp"], hm, cfg.activation)
+        return h, (mcs, ck, cv)
+
+    x, (mcs, ck, cv) = jax.lax.scan(
+        superblock, x,
+        ((params["mamba_norms"], params["mamba"]), cache["mamba"],
+         cache["kv"]["k"], cache["kv"]["v"]),
+    )
+    return x, {"mamba": mcs, "kv": {"k": ck, "v": cv}}
+
+
+# ---------------------------------------------------------------------------
+# xlstm stack
+# ---------------------------------------------------------------------------
+
+
+def init_xlstm_stack(key, cfg) -> Params:
+    xc = cfg.xlstm
+    per = xc.slstm_every
+    assert cfg.num_layers % per == 0
+    nsuper = cfg.num_layers // per
+    km, ks_ = jax.random.split(key)
+    m = module.stacked_init(lambda k: xlstm.init_mlstm(k, cfg, cfg.pdtype),
+                            km, nsuper * (per - 1))
+    m = jax.tree_util.tree_map(lambda a: a.reshape(nsuper, per - 1, *a.shape[1:]), m)
+    s = module.stacked_init(lambda k: xlstm.init_slstm(k, cfg, cfg.pdtype), ks_, nsuper)
+    return {"mlstm": m, "slstm": s}
+
+
+def apply_xlstm(params: Params, cfg, x: Array) -> Tuple[Array, Array]:
+    def mbody(lp, h):
+        return xlstm.apply_mlstm(lp, cfg, h), jnp.zeros((), jnp.float32)
+
+    def superblock(carry, xs):
+        h, aux = carry
+        mls, sl = xs
+        h, a = _scan_layers(mbody, h, mls, cfg)
+        h = xlstm.apply_slstm(sl, cfg, h)
+        return (constrain_residual(h), aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        superblock, (x, jnp.zeros((), jnp.float32)),
+        (params["mlstm"], params["slstm"]),
+    )
+    return x, aux
+
+
+def init_xlstm_cache(cfg, batch: int) -> Dict[str, Any]:
+    xc = cfg.xlstm
+    per = xc.slstm_every
+    nsuper = cfg.num_layers // per
+    mc = xlstm.init_mlstm_cache(cfg, batch, cfg.cdtype)
+    mc = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (nsuper, per - 1, *a.shape)), mc
+    )
+    sc = xlstm.init_slstm_state(cfg, batch, cfg.cdtype)
+    sc = jax.tree_util.tree_map(lambda a: jnp.broadcast_to(a, (nsuper, *a.shape)), sc)
+    return {"mlstm": mc, "slstm": sc}
+
+
+def decode_xlstm(params: Params, cfg, x: Array, cache):
+    def mbody(h, xs):
+        lp, mc = xs
+        h, mc = xlstm.apply_mlstm_decode(lp, cfg, h, mc)
+        return h, mc
+
+    def superblock(h, xs):
+        (mls, sl), mcs, sc = xs
+        h, mcs = jax.lax.scan(mbody, h, (mls, mcs))
+        h, sc = xlstm.apply_slstm_decode(sl, cfg, h, sc)
+        return h, (mcs, sc)
+
+    x, (mcs, scs) = jax.lax.scan(
+        superblock, x,
+        ((params["mlstm"], params["slstm"]), cache["mlstm"], cache["slstm"]),
+    )
+    return x, {"mlstm": mcs, "slstm": scs}

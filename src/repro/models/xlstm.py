@@ -1,0 +1,255 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, sequential recurrence)  [arXiv:2405.04517].
+
+mLSTM trains with the stabilized parallel (quadratic) form::
+
+    D[t,s] = sum_{r=s+1..t} log sig(f_r) + i_s          (s <= t)
+    m_t    = max_s D[t,s]
+    Ctil   = exp(D - m_t) * (q_t . k_s) / sqrt(d)
+    h_t    = (Ctil @ v) / max(|sum_s Ctil|, exp(-m_t))
+
+and decodes with the O(1) recurrence carrying (C, n, m).  sLSTM is
+inherently sequential — a ``lax.scan`` over time with per-head recurrent
+weights (this is the paper's own structure; there is no parallel form).
+
+Block layouts follow the xLSTM paper: mLSTM blocks are pre-LN residual
+with an up-projection, causal conv on the q/k path and output gating;
+sLSTM blocks are pre-LN residual followed by a gated feed-forward.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, module
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def mlstm_dims(cfg) -> Tuple[int, int, int, int]:
+    """(d_up, n_heads, d_qk per head, d_v per head)."""
+    x = cfg.xlstm
+    d_up = 2 * cfg.d_model
+    H = cfg.num_heads
+    dqk = int(d_up * x.qk_dim_factor) // H
+    dv = int(d_up * x.v_dim_factor) // H
+    return d_up, H, dqk, dv
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    d_up, H, dqk, dv = mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": layers.init_norm(d, cfg.norm, dtype),
+        "up": module.maybe_factorized(ks[0], d, 2 * d_up, cfg, dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (4, d_up), dtype),
+        "conv_b": jnp.zeros((d_up,), dtype),
+        "wq": module.maybe_factorized(ks[2], d_up, H * dqk, cfg, dtype),
+        "wk": module.maybe_factorized(ks[3], d_up, H * dqk, cfg, dtype),
+        "wv": module.maybe_factorized(ks[4], d_up, H * dv, cfg, dtype),
+        "wif": {"w": 0.1 * jax.random.normal(ks[5], (d_up, 2 * H), jnp.float32)},
+        "skip": jnp.ones((d_up,), dtype),
+        "out_norm": layers.init_norm(H * dv, "rmsnorm", dtype),
+        "down": module.maybe_factorized(ks[6], H * dv, d, cfg, dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    return sum(xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(W)) + b
+
+
+def mlstm_parallel(q: Array, k: Array, v: Array, i_pre: Array, f_pre: Array) -> Array:
+    """Stabilized parallel mLSTM.  q/k (B,T,H,dqk), v (B,T,H,dv),
+    i_pre/f_pre (B,T,H) pre-activations.  Returns (B,T,H,dv)."""
+    B, T, H, dqk = q.shape
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))  # (B,T,H)
+    F = jnp.cumsum(logf, axis=1)
+    # D[t,s] = F_t - F_s + i_s  for s<=t
+    D = F[:, :, None, :] - F[:, None, :, :] + i_pre.astype(jnp.float32)[:, None, :, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    D = jnp.where(mask[None, :, :, None], D, -jnp.inf)
+    m = jnp.max(D, axis=2)  # (B,T,H)
+    expD = jnp.exp(D - m[:, :, None, :])
+    scores = jnp.einsum("bthd,bshd->btsh", q, k) * (dqk ** -0.5)
+    C = scores.astype(jnp.float32) * expD
+    norm = jnp.maximum(jnp.abs(jnp.sum(C, axis=2)), jnp.exp(-m))  # (B,T,H)
+    h = jnp.einsum("btsh,bshd->bthd", C.astype(v.dtype), v)
+    return h / norm[..., None].astype(v.dtype)
+
+
+def apply_mlstm(params: Params, cfg, x: Array) -> Array:
+    """Full mLSTM residual block.  x: (B,T,d)."""
+    B, T, d = x.shape
+    d_up, H, dqk, dv = mlstm_dims(cfg)
+    h = layers.apply_norm(params["norm"], x, cfg.norm)
+    up = module.linear(params["up"], h)
+    a, z = jnp.split(up, [d_up], axis=-1)
+    ac = jax.nn.silu(_causal_conv(a, params["conv_w"].astype(x.dtype),
+                                  params["conv_b"].astype(x.dtype)))
+    q = module.linear(params["wq"], ac).reshape(B, T, H, dqk)
+    k = module.linear(params["wk"], ac).reshape(B, T, H, dqk)
+    v = module.linear(params["wv"], a).reshape(B, T, H, dv)
+    if_pre = a @ params["wif"]["w"].astype(x.dtype)  # (B,T,2H)
+    i_pre, f_pre = if_pre[..., :H], if_pre[..., H:]
+    ht = mlstm_parallel(q, k, v, i_pre, f_pre)
+    ht = ht.reshape(B, T, H * dv) + params["skip"][: H * dv].astype(x.dtype) * ac[
+        ..., : H * dv
+    ]
+    out = layers.apply_norm(params["out_norm"], ht, "rmsnorm")
+    out = out * jax.nn.silu(z[..., : H * dv])
+    return x + module.linear(params["down"], out)
+
+
+def init_mlstm_cache(cfg, batch: int, dtype) -> Dict[str, Array]:
+    d_up, H, dqk, dv = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dqk, dv), dtype),
+        "n": jnp.zeros((batch, H, dqk), dtype),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, 3, d_up), dtype),
+    }
+
+
+def apply_mlstm_decode(
+    params: Params, cfg, x: Array, cache: Dict[str, Array]
+) -> Tuple[Array, Dict[str, Array]]:
+    """One-token mLSTM step.  x: (B,1,d)."""
+    B, _, d = x.shape
+    d_up, H, dqk, dv = mlstm_dims(cfg)
+    h = layers.apply_norm(params["norm"], x, cfg.norm)
+    up = module.linear(params["up"], h)
+    a, z = jnp.split(up, [d_up], axis=-1)
+    hist = jnp.concatenate([cache["conv"], a], axis=1)  # (B,4,d_up)
+    w = params["conv_w"].astype(x.dtype)
+    ac = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, w) + params["conv_b"].astype(x.dtype))[:, None]
+    new_conv = hist[:, 1:]
+    q = module.linear(params["wq"], ac).reshape(B, H, dqk)
+    k = module.linear(params["wk"], ac).reshape(B, H, dqk)
+    v = module.linear(params["wv"], a).reshape(B, H, dv)
+    if_pre = (a @ params["wif"]["w"].astype(x.dtype))[:, 0]
+    i_pre, f_pre = if_pre[..., :H].astype(jnp.float32), if_pre[..., H:].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + cache["m"], i_pre)
+    fg = jnp.exp(logf + cache["m"] - m_new)[..., None]  # (B,H,1)
+    ig = jnp.exp(i_pre - m_new)[..., None]
+    C = cache["C"] * fg[..., None].astype(cache["C"].dtype) + (
+        ig.astype(v.dtype)[..., None] * k[..., None] * v[:, :, None, :]
+    )
+    n = cache["n"] * fg.astype(cache["n"].dtype) + ig.astype(k.dtype) * k
+    qs = q * (dqk ** -0.5)
+    num = jnp.einsum("bhd,bhdv->bhv", qs, C)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n)), jnp.exp(-m_new).astype(qs.dtype)
+    )
+    ht = (num / den[..., None]).reshape(B, 1, H * dv)
+    ht = ht + params["skip"][: H * dv].astype(x.dtype) * ac[..., : H * dv]
+    out = layers.apply_norm(params["out_norm"], ht, "rmsnorm")
+    out = out * jax.nn.silu(z[..., : H * dv])
+    y = x + module.linear(params["down"], out)
+    return y, {"C": C, "n": n, "m": m_new, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    px = cfg.xlstm.proj_factor
+    d_ff = 2 * int(d * px)  # even so the gated split is exact
+    return {
+        "norm": layers.init_norm(d, cfg.norm, dtype),
+        # input weights for 4 gates (i, f, z, o)
+        "wx": {"w": (d ** -0.5) * jax.random.normal(ks[0], (d, 4 * d), dtype)},
+        # per-head recurrent weights (H, dh, 4*dh)
+        "r": (dh ** -0.5) * jax.random.normal(ks[1], (H, dh, 4 * dh), dtype),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "gn": layers.init_norm(d, "rmsnorm", dtype),
+        "ff_up": module.maybe_factorized(ks[2], d, d_ff, cfg, dtype),
+        "ff_down": module.maybe_factorized(ks[3], d_ff // 2, d, cfg, dtype),
+    }
+
+
+def _slstm_cell(params, cfg, xg: Array, state):
+    """One time step.  xg: (B, 4d) input-gate preactivations (no recurrent
+    part yet).  state: dict(c, n, h, m) each (B, H, dh)."""
+    B = xg.shape[0]
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    rec = jnp.einsum("bhd,hdk->bhk", state["h"], params["r"].astype(xg.dtype))
+    pre = xg.reshape(B, H, 4 * dh) + rec + params["bias"].reshape(H, 4 * dh).astype(
+        jnp.float32
+    ).astype(xg.dtype)
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    i_pre = i_pre.astype(jnp.float32)
+    f_pre = f_pre.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    ig = jnp.exp(i_pre - m_new)
+    fg = jnp.exp(logf + state["m"] - m_new)
+    c = fg * state["c"] + ig * jnp.tanh(z_pre.astype(jnp.float32))
+    n = fg * state["n"] + ig
+    h = jax.nn.sigmoid(o_pre.astype(jnp.float32)) * c / jnp.maximum(n, 1e-6)
+    new = {"c": c, "n": n, "h": h.astype(state["h"].dtype), "m": m_new}
+    return new, h
+
+
+def init_slstm_state(cfg, batch: int, dtype) -> Dict[str, Array]:
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z(), "n": z(), "h": jnp.zeros((batch, H, dh), dtype),
+            "m": jnp.full((batch, H, dh), -1e30, jnp.float32)}
+
+
+def apply_slstm(params: Params, cfg, x: Array) -> Array:
+    """Full sLSTM residual block (sequential scan over T).  x: (B,T,d)."""
+    B, T, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    hin = layers.apply_norm(params["norm"], x, cfg.norm)
+    xg = hin @ params["wx"]["w"].astype(x.dtype)  # (B,T,4d)
+
+    def step(state, xt):
+        new, h = _slstm_cell(params, cfg, xt, state)
+        return new, h
+
+    state0 = init_slstm_state(cfg, B, x.dtype)
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(xg, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, T, d).astype(x.dtype)
+    hs = layers.apply_norm(params["gn"], hs, "rmsnorm")
+    up = module.linear(params["ff_up"], hs)
+    a, b = jnp.split(up, 2, axis=-1)
+    y = module.linear(params["ff_down"], jax.nn.gelu(a, approximate=True) * b)
+    return x + y
+
+
+def apply_slstm_decode(
+    params: Params, cfg, x: Array, state: Dict[str, Array]
+) -> Tuple[Array, Dict[str, Array]]:
+    B, _, d = x.shape
+    hin = layers.apply_norm(params["norm"], x, cfg.norm)
+    xg = (hin @ params["wx"]["w"].astype(x.dtype))[:, 0]
+    new, h = _slstm_cell(params, cfg, xg, state)
+    hs = h.reshape(B, 1, d).astype(x.dtype)
+    hs = layers.apply_norm(params["gn"], hs, "rmsnorm")
+    up = module.linear(params["ff_up"], hs)
+    a, b = jnp.split(up, 2, axis=-1)
+    y = module.linear(params["ff_down"], jax.nn.gelu(a, approximate=True) * b)
+    return x + y, new

@@ -1,0 +1,147 @@
+"""Pure-JAX optimizers (no external deps): SGD(+momentum), AdamW.
+
+Functional API mirroring optax:
+
+    opt = sgd(lr=0.01, momentum=0.9)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+``momentum_dtype``/``moment_dtype`` allow bf16 optimizer state for the
+memory-constrained giant configs (kimi-k2: see EXPERIMENTS.md §Dry-run).
+Learning rates may be floats or ``f(step) -> float`` schedules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: Schedule, step) -> jax.Array:
+    if callable(lr):
+        return jnp.asarray(lr(step), jnp.float32)
+    return jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple]  # (grads, state, params, step) -> (updates, state)
+    name: str = "custom"
+
+
+def sgd(lr: Schedule, momentum: float = 0.0, nesterov: bool = False,
+        momentum_dtype=None) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        mk = lambda p: jnp.zeros_like(p, dtype=momentum_dtype or p.dtype)
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree_util.tree_map(mk, params)}
+
+    def update(grads, state, params=None, step=None):
+        s = state["step"]
+        eta = _lr_at(lr, s)
+        if momentum == 0.0:
+            ups = jax.tree_util.tree_map(lambda g: (-eta * g).astype(g.dtype), grads)
+            return ups, {"step": s + 1}
+        mu = jax.tree_util.tree_map(
+            lambda m, g: (momentum * m.astype(jnp.float32) + g).astype(m.dtype),
+            state["mu"], grads,
+        )
+        if nesterov:
+            eff = jax.tree_util.tree_map(
+                lambda m, g: momentum * m.astype(jnp.float32) + g, mu, grads
+            )
+        else:
+            eff = jax.tree_util.tree_map(lambda m: m.astype(jnp.float32), mu)
+        ups = jax.tree_util.tree_map(lambda e, g: (-eta * e).astype(g.dtype), eff, grads)
+        return ups, {"step": s + 1, "mu": mu}
+
+    return Optimizer(init, update, "sgd")
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, moment_dtype=None) -> Optimizer:
+    def init(params):
+        mk = lambda p: jnp.zeros_like(p, dtype=moment_dtype or jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree_util.tree_map(mk, params),
+            "nu": jax.tree_util.tree_map(mk, params),
+        }
+
+    def update(grads, state, params, step=None):
+        s = state["step"] + 1
+        eta = _lr_at(lr, s)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(m.dtype),
+            state["mu"], grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: (b2 * v.astype(jnp.float32)
+                          + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(v.dtype),
+            state["nu"], grads)
+        bc1 = 1 - b1 ** s.astype(jnp.float32)
+        bc2 = 1 - b2 ** s.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mh = m.astype(jnp.float32) / bc1
+            vh = v.astype(jnp.float32) / bc2
+            step_ = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (-eta * step_).astype(p.dtype)
+
+        ups = jax.tree_util.tree_map(upd, mu, nu, params)
+        return ups, {"step": s, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update, "adamw")
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def linear_warmup(base: float, warmup_steps: int) -> Callable:
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        return base * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+    return f
+
+
+def cosine_schedule(base: float, total_steps: int, warmup_steps: int = 0,
+                    final_frac: float = 0.1) -> Callable:
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base * warm * cos
+    return f
+
+
+def make_optimizer(name: str, lr: Schedule, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "sgdm":
+        kw.setdefault("momentum", 0.9)
+        return sgd(lr, **kw)
+    if name == "sgdm_bf16":
+        kw.setdefault("momentum", 0.9)
+        kw.setdefault("momentum_dtype", jnp.bfloat16)
+        return sgd(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise ValueError(f"unknown optimizer {name}")

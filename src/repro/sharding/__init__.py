@@ -1,0 +1,5 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    param_specs,
+)

@@ -1,0 +1,103 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the launcher installs a context (mesh + the
+data-parallel axes + a residual-stream layout) and the model calls
+``constrain(x, kind)`` at layer boundaries.  Without a context the call is
+a no-op (CPU tests / FL simulation).
+
+Residual layouts (the §Perf hillclimb toggles these):
+  "d_sharded"   (dp, None, 'model')  — hidden dim sharded (baseline)
+  "seq_sharded" (dp, 'model', None)  — Megatron-style sequence parallelism
+  "replicated"  (dp, None, None)
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX = {"mesh": None, "dp": None, "residual": "d_sharded",
+        "attn_qseq": False, "moe_shardmap": False}
+
+
+def set_context(mesh, dp_axes, residual: str = "d_sharded",
+                attn_qseq: bool = False, moe_shardmap: bool = False) -> None:
+    _CTX.update(mesh=mesh, dp=dp_axes, residual=residual,
+                attn_qseq=attn_qseq, moe_shardmap=moe_shardmap)
+
+
+def clear_context() -> None:
+    _CTX.update(mesh=None, dp=None, residual="d_sharded", attn_qseq=False,
+                moe_shardmap=False)
+
+
+def get_context() -> dict:
+    return dict(_CTX)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, dp_axes, residual: str = "d_sharded"):
+    prev = dict(_CTX)
+    set_context(mesh, dp_axes, residual)
+    try:
+        yield
+    finally:
+        _CTX.update(prev)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _fit(spec_parts, shape, mesh):
+    out = []
+    for dim, axis in zip(shape, list(spec_parts) + [None] * (len(shape) - len(spec_parts))):
+        ok = axis is not None and dim % _axis_size(mesh, axis) == 0
+        out.append(axis if ok else None)
+    return P(*out)
+
+
+def constrain_attention_q(q, k, v):
+    """Context-parallel attention layout (§Perf iteration): shard the
+    QUERY sequence over the model axis and replicate k/v over it, so the
+    flash-attention block loops compute fully locally — k/v are gathered
+    once per layer instead of being resharded per (q-chunk, kv-chunk)
+    block.  Correctness is untouched (causal masking sees the full k/v).
+
+    q: (B, S, KV, G, D); k/v: (B, S, KV, D).
+    """
+    mesh = _CTX["mesh"]
+    if mesh is None or not _CTX["attn_qseq"] or q.shape[1] <= 1:
+        return q, k, v
+    dp = _CTX["dp"]
+    qspec = _fit((dp, "model", None, None, None), q.shape, mesh)
+    kvspec = _fit((dp, None, None, None), k.shape, mesh)
+    q = jax.lax.with_sharding_constraint(q, NamedSharding(mesh, qspec))
+    k = jax.lax.with_sharding_constraint(k, NamedSharding(mesh, kvspec))
+    v = jax.lax.with_sharding_constraint(v, NamedSharding(mesh, kvspec))
+    return q, k, v
+
+
+def constrain_residual(x):
+    """Apply the configured residual-stream layout to a (B, S, d) tensor."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    dp = _CTX["dp"]
+    layout = {
+        "d_sharded": (dp, None, "model"),
+        "seq_sharded": (dp, "model", None),
+        "replicated": (dp, None, None),
+    }[_CTX["residual"]]
+    spec = _fit(layout, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,237 @@
+"""Sharding rules: param-tree paths -> PartitionSpec.
+
+Conventions (per-pod mesh ("data", "model") = (16, 16); multi-pod adds a
+leading "pod" axis used for data parallelism and — where memory demands,
+e.g. kimi-k2 — extra parameter sharding):
+
+  * "column-parallel" projections (d -> heads/ff):  (..., d, out)  ->  ('data', 'model')
+    — model parallelism over heads/FFN, ZeRO-style FSDP over the d rows.
+  * "row-parallel" projections (heads/ff -> d):     (..., in, d)   ->  ('model', 'data')
+  * expert tensors (E, d, f):                        E -> 'model' (expert
+    parallel), d -> 'data' (FSDP).
+  * embeddings (V, d): vocab -> 'model', d -> 'data'.
+  * small/1D tensors (norms, biases, gates): replicated.
+
+Rules are keyed by path *suffix* of the UNSTACKED weight; any extra leading
+stack axes (layer scan: 1 extra; hybrid/xlstm superblocks: 2 extra) are
+padded with ``None``.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# ordered (regex on dotted path, base spec for trailing dims)
+_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    # --- embeddings -----------------------------------------------------
+    (r"(embed|unembed)\.table$", ("model", "data")),
+    # --- attention projections ------------------------------------------
+    (r"(attn|self_attn|cross_attn)\.w[qkv]\.w$", ("data", "model")),
+    (r"(attn|self_attn|cross_attn)\.wo\.w$", ("model", "data")),
+    # factorized (Heroes composition) projections
+    (r"\.w[qkvo]\.basis$", ("data", None)),
+    (r"\.w[qkvo]\.coeff$", (None, None, "model")),
+    # --- dense MLP -------------------------------------------------------
+    (r"mlp\.(gate|up)\.w$", ("data", "model")),
+    (r"mlp\.down\.w$", ("model", "data")),
+    (r"mlp\.(gate|up)\.basis$", ("data", None)),
+    (r"mlp\.(gate|up)\.coeff$", (None, None, "model")),
+    (r"mlp\.down\.basis$", ("model", None)),
+    (r"mlp\.down\.coeff$", (None, None, "data")),
+    # --- MoE ---------------------------------------------------------------
+    (r"moe.*router\.w$", ("data", None)),
+    (r"moe.*\.(gate|up)$", ("model", "data", None)),
+    (r"moe.*\.down$", ("model", None, "data")),
+    (r"shared\.(gate|up)\.w$", ("data", "model")),
+    (r"shared\.down\.w$", ("model", "data")),
+    # --- Mamba2 -----------------------------------------------------------
+    (r"in_proj\.w$", ("data", "model")),
+    (r"out_proj\.w$", ("model", "data")),
+    (r"in_proj\.basis$", ("data", None)),
+    (r"in_proj\.coeff$", (None, None, "model")),
+    (r"out_proj\.basis$", ("model", None)),
+    (r"out_proj\.coeff$", (None, None, "data")),
+    (r"conv_w$", (None, "model")),
+    (r"conv_b$", ("model",)),
+    (r"(A_log|D|dt_bias)$", (None,)),
+    # --- xLSTM --------------------------------------------------------------
+    (r"(up|wq|wk|wv|ff_up)\.w$", ("data", "model")),
+    (r"(down|ff_down)\.w$", ("model", "data")),
+    (r"(up|wq|wk|wv|ff_up)\.basis$", ("data", None)),
+    (r"(up|wq|wk|wv|ff_up)\.coeff$", (None, None, "model")),
+    (r"(down|ff_down)\.basis$", ("model", None)),
+    (r"(down|ff_down)\.coeff$", (None, None, "data")),
+    (r"wif\.w$", ("data", None)),
+    (r"wx\.w$", ("data", "model")),
+    (r"\br$", ("model", None, None)),
+    (r"skip$", (None,)),
+    (r"bias$", (None,)),
+    # --- norms / scalars ------------------------------------------------
+    (r"(ln1|ln2|ln_x|norm|out_norm|gn|final_norm)\.(scale|bias)$", (None,)),
+)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _fit_to_shape(spec: P, shape, mesh) -> P:
+    """Drop sharding on any dim the mesh axis doesn't divide."""
+    if mesh is None:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, parts):
+        out.append(axis if axis is not None and dim % _axis_size(mesh, axis) == 0
+                   else None)
+    return P(*out)
+
+
+def _spec_for(path: str, ndim: int) -> P:
+    for pat, base in _RULES:
+        if re.search(pat, path):
+            pad = ndim - len(base)
+            if pad < 0:  # rule longer than array (e.g. squeezed) — replicate
+                return P()
+            return P(*([None] * pad), *base)
+    return P()  # default: replicate
+
+
+def param_specs(params: Any, mesh=None, zero_pod: bool = False,
+                moe_ep: bool = False) -> Any:
+    """PartitionSpec tree mirroring ``params``.
+
+    mesh: when given, any sharded dim the mesh axis size doesn't divide
+      falls back to replication for that dim.
+    zero_pod: additionally shard the largest tensors over the 'pod' axis
+      (ZeRO across pods) — used by the trillion-param config.
+    moe_ep: weight-stationary expert parallelism — expert tensors shard
+      ONLY over 'model' (no FSDP on the data axis), matching the
+      shard_map EP schedule (repro.models.moe_shardmap).
+    """
+
+    def f(path, leaf):
+        name = ".".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        spec = _spec_for(name, leaf.ndim)
+        if moe_ep and re.search(r"moe.*\.(gate|up|down)$", name):
+            spec = P(*([None] * (leaf.ndim - 3)), "model", None, None)
+        if zero_pod:
+            spec = _add_pod(spec, leaf)
+        return _fit_to_shape(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def _add_pod(spec: P, leaf) -> P:
+    """Fold the pod axis into the first already-sharded dim (making it a
+    tuple axis) for big tensors; small tensors stay pod-replicated."""
+    if leaf.size < (1 << 20):
+        return spec
+    parts = list(spec)
+    for i, s in enumerate(parts):
+        if s == "model":
+            dim = leaf.shape[i]
+            if dim % (16 * 2) == 0:
+                parts[i] = ("pod", "model")
+                return P(*parts)
+    for i, s in enumerate(parts):
+        if s == "data":
+            dim = leaf.shape[i]
+            if dim % (16 * 2) == 0:
+                parts[i] = ("pod", "data")
+                return P(*parts)
+    return spec
+
+
+def batch_specs(batch_tree: Any, dp_axes, mesh=None) -> Any:
+    """Shard every batch leaf's leading (batch) dim over the data axes.
+    Falls back to fewer/no axes when the batch doesn't divide (long_500k
+    has global_batch=1 — necessarily replicated)."""
+
+    def f(leaf):
+        axes = dp_axes
+        if mesh is not None:
+            b = leaf.shape[0]
+            if b % _axis_size(mesh, axes) != 0:
+                if isinstance(axes, tuple):  # try dropping the pod axis
+                    for sub in (axes[1:], None):
+                        if sub is None or b % _axis_size(mesh, tuple(sub)) == 0:
+                            axes = tuple(sub) if sub else None
+                            break
+                else:
+                    axes = None
+        return P(axes, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map(f, batch_tree)
+
+
+def cache_specs(cache_tree: Any, cfg, dp_axes, mesh=None) -> Any:
+    """KV / recurrent cache sharding for decode.
+
+    Stacked KV caches are (L, B, S, KV, D): batch -> data axes, kv heads ->
+    'model' when they divide the axis; otherwise model-replicated.
+    Recurrent (mamba/xlstm) states are (stack..., B, ...): batch -> data.
+    """
+
+    def f(path, leaf):
+        name = ".".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if re.search(r"(k_scale|v_scale)$", name) and leaf.ndim == 4:
+            # int8-cache scales (L, B, S, KV): mirror the cache layout
+            if leaf.shape[3] % 16 == 0:
+                spec = P(None, dp_axes, None, "model")
+            else:
+                spec = P(None, dp_axes, "model", None)
+            return _fit_to_shape(spec, leaf.shape, mesh)
+        if re.search(r"(^|\.)(k|v|mem_k|mem_v)$", name) and leaf.ndim == 5:
+            # (L, B, S, KV, D): shard kv heads over 'model' when they
+            # divide; otherwise shard the cache length S (GSPMD handles the
+            # softmax over the sharded axis with a psum) — this is what
+            # keeps 32k/500k caches of MQA/GQA<16 archs within HBM.
+            if leaf.shape[3] % 16 == 0:
+                spec = P(None, dp_axes, None, "model", None)
+            else:
+                spec = P(None, dp_axes, "model", None, None)
+        elif re.search(r"mem_mask$", name):
+            spec = P(dp_axes, None)
+        else:
+            spec = _cache_state_spec(name, leaf, dp_axes)
+        return _fit_to_shape(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(f, cache_tree)
+
+
+def _cache_state_spec(name: str, leaf, dp_axes) -> P:
+    # mamba: cache["mamba"]["conv"]: (nsuper, per, B, W, C) / ["state"]:
+    # (nsuper, per, B, H, N, P).  xlstm similar.  encdec handled above.
+    if re.search(r"mamba\.(conv|state)", name):
+        pad = leaf.ndim - 1
+        if "state" in name:
+            return P(None, None, dp_axes, "model", None, None)
+        return P(None, None, dp_axes, None, "model")
+    if re.search(r"mlstm\.(C|n|m|conv)", name):
+        base = {"C": (None, None, dp_axes, "model", None, None),
+                "n": (None, None, dp_axes, "model", None),
+                "m": (None, None, dp_axes, "model"),
+                "conv": (None, None, dp_axes, None, "model")}
+        leafname = name.split(".")[-1]
+        return P(*base[leafname])
+    if re.search(r"slstm\.(c|n|h|m)$", name):
+        return P(None, dp_axes, "model", None)
+    return P()
+
+
+def dp_axes_for(mesh) -> Any:
+    """Data-parallel axes tuple for a mesh: ('pod','data') when multi-pod."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else "data"

@@ -1,0 +1,64 @@
+"""Config sanity: the full assigned configs match their published sizes."""
+
+import pytest
+
+from repro import configs
+
+# (arch, expected total params, tolerance) — published model-card numbers.
+# param_count() is an analytic estimate (attn + ffn + embeddings), so the
+# tolerance absorbs biases/norm params and minor structural differences.
+EXPECTED = {
+    "deepseek-coder-33b": (33.3e9, 0.10),
+    "gemma-2b": (2.5e9, 0.15),
+    "stablelm-3b": (2.8e9, 0.25),
+    "granite-34b": (34e9, 0.10),
+    "qwen2-vl-7b": (7.6e9, 0.15),
+    "olmoe-1b-7b": (6.9e9, 0.15),
+    "xlstm-125m": (125e6, 0.6),  # rough block structure
+    "zamba2-2.7b": (2.7e9, 0.35),
+    "seamless-m4t-medium": (1.2e9, 0.4),  # medium ~1.2B incl. codec we stub
+    "kimi-k2-1t-a32b": (1.03e12, 0.15),
+}
+
+
+@pytest.mark.parametrize("arch_id", configs.list_archs())
+def test_param_count_matches_model_card(arch_id):
+    cfg = configs.get_config(arch_id)
+    n = cfg.param_count()
+    want, tol = EXPECTED[arch_id]
+    assert abs(n - want) / want < tol, f"{arch_id}: {n/1e9:.2f}B vs {want/1e9:.2f}B"
+
+
+def test_kimi_active_params():
+    cfg = configs.get_config("kimi-k2-1t-a32b")
+    active = cfg.param_count(active_only=True)
+    # ~32B active per the model card (A32B)
+    assert 20e9 < active < 45e9, f"active {active/1e9:.1f}B"
+
+
+@pytest.mark.parametrize("arch_id", configs.list_archs())
+def test_exact_assignment_numbers(arch_id):
+    """The headline numbers from the assignment table are exact."""
+    cfg = configs.get_config(arch_id)
+    table = {
+        "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+    }
+    L, d, h, kv, ff, v = table[arch_id]
+    assert cfg.num_layers == L and cfg.d_model == d
+    assert cfg.num_heads == h and cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab == v
+    if arch_id == "olmoe-1b-7b":
+        assert cfg.moe.num_experts == 64 and cfg.moe.top_k == 8
+    if arch_id == "kimi-k2-1t-a32b":
+        assert cfg.moe.num_experts == 384 and cfg.moe.top_k == 8
+    if arch_id == "zamba2-2.7b":
+        assert cfg.ssm.state_dim == 64

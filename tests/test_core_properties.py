@@ -1,0 +1,166 @@
+"""Property-based tests (hypothesis) on the Heroes core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BoundState,
+    CompositionSpec,
+    aggregate_coefficient,
+    bound,
+    compose,
+    decompose,
+    gather_blocks,
+    init_factors,
+    select_blocks,
+    solve_rounds,
+    tau_star,
+)
+from repro.core.scheduler import HeroesScheduler, SchedulerConfig
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    p=st.integers(1, 3),
+    counters=st.lists(st.integers(0, 1000), min_size=9, max_size=9),
+)
+@settings(**SETTINGS)
+def test_select_blocks_picks_least_trained(p, counters):
+    spec = CompositionSpec(max_width=3, rank=4, base_in=8, base_out=8)
+    ids = select_blocks(np.asarray(counters), p, spec)
+    assert len(ids) == p * p and len(set(ids.tolist())) == p * p
+    chosen = sorted(counters[i] for i in ids)
+    rest = sorted(counters[i] for i in range(9) if i not in set(ids.tolist()))
+    if rest:
+        assert chosen[-1] <= rest[0] or chosen[-1] <= max(rest), \
+            "a selected block is trained more than an unselected one"
+        assert max(chosen) <= min(rest) + 0  # least-trained property
+
+
+@given(
+    p=st.integers(1, 3),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_compose_decompose_roundtrip(p, seed):
+    """Any weight composed from the basis decomposes back exactly."""
+    spec = CompositionSpec(max_width=3, rank=6, base_in=10, base_out=7, ksq=4)
+    v, u = init_factors(jax.random.PRNGKey(seed), spec)
+    ids = select_blocks(np.zeros(9), p, spec)
+    red = gather_blocks(u, ids)
+    w = compose(v, red, p, spec)
+    assert w.shape == spec.weight_shape(p)
+    red2 = decompose(w, v, p, spec)
+    np.testing.assert_allclose(np.asarray(red), np.asarray(red2), atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**16), nclients=st.integers(1, 5))
+@settings(**SETTINGS)
+def test_aggregation_mean_and_identity(seed, nclients):
+    """Blocks trained by k clients get their mean; untrained stay frozen."""
+    rng = np.random.default_rng(seed)
+    spec = CompositionSpec(max_width=2, rank=3, base_in=4, base_out=5)
+    g = jnp.asarray(rng.normal(size=(4, 3, 5)).astype(np.float32))
+    blocks, ids = [], []
+    for _ in range(nclients):
+        take = rng.choice(4, size=rng.integers(1, 5), replace=False)
+        ids.append(np.sort(take))
+        blocks.append(jnp.asarray(
+            rng.normal(size=(len(take), 3, 5)).astype(np.float32)))
+    out = aggregate_coefficient(g, blocks, ids)
+    touched = set(int(i) for a in ids for i in a)
+    for i in range(4):
+        if i not in touched:
+            np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(g[i]))
+        else:
+            contr = [b[list(a).index(i)] for b, a in zip(blocks, ids) if i in a]
+            np.testing.assert_allclose(
+                np.asarray(out[i]), np.mean([np.asarray(c) for c in contr], 0),
+                atol=1e-5)
+
+
+@given(
+    loss0=st.floats(0.1, 10.0),
+    L=st.floats(0.05, 20.0),
+    gsq=st.floats(0.01, 50.0),
+    ssq=st.floats(0.0, 10.0),
+    h=st.integers(1, 5000),
+)
+@settings(**SETTINGS)
+def test_tau_star_minimises_bound(loss0, L, gsq, ssq, h):
+    """tau* is the argmin of the bound over tau (convexity, Sec. V-B)."""
+    state = BoundState(loss0=loss0, smoothness=L, grad_sq=gsq, noise_sq=ssq, lr=0.01)
+    t = tau_star(state, h)
+    b0 = bound(state, h, t)
+    for mult in (0.5, 0.9, 1.1, 2.0):
+        assert b0 <= bound(state, h, t * mult) + 1e-9
+
+
+@given(
+    eps=st.floats(0.05, 5.0),
+    loss0=st.floats(0.5, 5.0),
+)
+@settings(**SETTINGS)
+def test_solve_rounds_is_minimal(eps, loss0):
+    state = BoundState(loss0=loss0, smoothness=1.0, grad_sq=2.0, noise_sq=0.5, lr=0.01)
+    h = solve_rounds(state, eps, h_max=200_000)
+    if h < 200_000:
+        assert bound(state, h, tau_star(state, h)) <= eps
+        if h > 1:
+            assert bound(state, h - 1, tau_star(state, h - 1)) > eps
+
+
+@given(seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_scheduler_respects_waiting_bound(seed):
+    """Every client's completion time is within rho of the makespan
+    whenever the tau window allows it (Eq. 24)."""
+    rng = np.random.default_rng(seed)
+    spec = CompositionSpec(max_width=3, rank=4, base_in=8, base_out=8)
+    mus = {n: float(rng.uniform(0.01, 0.2)) for n in range(6)}
+    nus = {n: float(rng.uniform(0.1, 1.0)) for n in range(6)}
+    cfg = SchedulerConfig(mu_max=1.0, rho=1.0, eps=1.0, tau_max=500)
+    sched = HeroesScheduler(
+        spec, cfg,
+        iter_time_fn=lambda n, p: mus[n] * p * p,
+        comm_time_fn=lambda n, p: nus[n],
+    )
+    state = BoundState(loss0=2.0, smoothness=1.0, grad_sq=1.0, noise_sq=0.3, lr=0.05)
+    plan = sched.plan_round(list(range(6)), state)
+    # Eq. (24) anchors every client to the PACESETTER's completion time
+    # (plan.makespan is the max — a slow client can exceed the anchor even
+    # at tau=1, which the bound does not constrain).
+    anchor = plan.assignments[plan.pacesetter].est_completion
+    for n, a in plan.assignments.items():
+        lo, hi = sched._tau_window(anchor, a.est_iter_time, a.est_comm_time)
+        if lo < hi and anchor >= a.est_comm_time + a.est_iter_time:
+            assert anchor - a.est_completion <= cfg.rho + a.est_iter_time + 1e-6
+
+
+@given(seed=st.integers(0, 500), rounds=st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_counter_balance_improves_over_naive(seed, rounds):
+    """The variance-minimising tau search keeps block-counter variance no
+    worse than always assigning the window's upper bound."""
+    rng = np.random.default_rng(seed)
+    spec = CompositionSpec(max_width=3, rank=4, base_in=8, base_out=8)
+    mus = {n: float(rng.uniform(0.01, 0.1)) for n in range(5)}
+    nus = {n: float(rng.uniform(0.05, 0.5)) for n in range(5)}
+    mk = lambda: HeroesScheduler(
+        spec, SchedulerConfig(mu_max=1.0, rho=2.0, eps=1.0, tau_max=100),
+        iter_time_fn=lambda n, p: mus[n] * p * p,
+        comm_time_fn=lambda n, p: nus[n],
+    )
+    state = BoundState(loss0=2.0, smoothness=1.0, grad_sq=1.0, noise_sq=0.3, lr=0.05)
+    smart = mk()
+    for _ in range(rounds):
+        smart.plan_round(list(range(5)), state)
+    naive = mk()
+    naive._variance_minimising_tau = lambda c, ids, lo, hi: hi
+    for _ in range(rounds):
+        naive.plan_round(list(range(5)), state)
+    assert smart.counter_variance() <= naive.counter_variance() + 1e-9

@@ -1,0 +1,56 @@
+"""Unit tests for the HLO text parser underpinning the roofline analysis."""
+
+from repro.launch.hlo_analysis import (_parse_op_line, _shape_bytes,
+                                       parse_computations)
+
+
+def test_parse_simple_op():
+    op = _parse_op_line("  %dot.1 = f32[64,32]{1,0} dot(%a, %b), "
+                        "lhs_contracting_dims={1}, rhs_contracting_dims={0}")
+    assert op.opcode == "dot"
+    assert op.operands[:2] == ["a", "b"]
+    assert "lhs_contracting_dims={1}" in op.attrs
+
+
+def test_parse_tuple_type_op():
+    line = ("  %while.5 = (s32[], f32[64,64]{1,0}, (f32[2]{0}, s32[])) "
+            "while(%tuple), condition=%cond.3, body=%body.2")
+    op = _parse_op_line(line)
+    assert op.opcode == "while"
+    assert op.operands == ["tuple"]
+    assert "body=%body.2" in op.attrs
+
+
+def test_parse_nested_parens_in_args():
+    line = "  %f = f32[8]{0} fusion(%x, %y), kind=kLoop, calls=%fused_computation.1"
+    op = _parse_op_line(line)
+    assert op.opcode == "fusion"
+    assert op.operands == ["x", "y"]
+
+
+def test_shape_bytes_tuple():
+    assert _shape_bytes("(f32[4], bf16[8], pred[3])") == 16 + 16 + 3
+    assert _shape_bytes("s32[]") == 4
+    assert _shape_bytes("f32[2,3]{1,0}") == 24
+
+
+def test_parse_computations_with_nested_tuple_headers():
+    hlo = """
+HloModule test
+
+%body.2 (arg: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %arg = (s32[], f32[4,4]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[4,4]{1,0} get-tuple-element(%arg), index=1
+  %d = f32[4,4]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[4,4]{1,0}) tuple(%i, %d)
+}
+
+ENTRY %main.9 (p: f32[4,4]) -> f32[4,4] {
+  %p = f32[4,4]{1,0} parameter(0)
+  ROOT %c = f32[4,4]{1,0} copy(%p)
+}
+"""
+    comps = parse_computations(hlo)
+    assert set(comps) == {"body.2", "main.9"}
+    assert any(op.opcode == "dot" for op in comps["body.2"].ops)

@@ -1,0 +1,135 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _mk(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("ksq,i,r,m,o", [
+    (1, 32, 8, 1, 16),      # tiny dense
+    (9, 40, 16, 4, 24),     # conv, p=2 (4 blocks), ragged dims
+    (1, 256, 64, 9, 128),   # aligned large, p=3
+    (4, 7, 4, 1, 5),        # deliberately unaligned
+])
+def test_compose_sweep(dtype, ksq, i, r, m, o):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(ksq * 1000 + i))
+    v = _mk(k1, (ksq, i, r), dtype)
+    u = _mk(k2, (m, r, o), dtype)
+    got = ops.compose(v, u)
+    want = ref.compose_ref(v, u)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,kv,g,d,window", [
+    (1, 64, 1, 1, 32, 0),     # MHA degenerate
+    (2, 100, 2, 3, 32, 0),    # GQA, ragged seq
+    (1, 128, 4, 1, 64, 32),   # sliding window
+    (2, 33, 1, 4, 16, 8),     # MQA + tiny window + ragged
+])
+def test_flash_attention_sweep(dtype, b, s, kv, g, d, window):
+    ks = jax.random.split(jax.random.PRNGKey(s * 7 + d), 3)
+    q = _mk(ks[0], (b, s, kv, g, d), dtype)
+    k = _mk(ks[1], (b, s, kv, d), dtype)
+    v = _mk(ks[2], (b, s, kv, d), dtype)
+    got = ops.flash_attention(q, k, v, window=window)
+    qf = jnp.transpose(q, (0, 2, 3, 1, 4)).reshape(b * kv * g, s, d)
+    kf = jnp.repeat(jnp.transpose(k, (0, 2, 1, 3)).reshape(b * kv, s, d), g, 0)
+    vf = jnp.repeat(jnp.transpose(v, (0, 2, 1, 3)).reshape(b * kv, s, d), g, 0)
+    want = ref.attention_ref(qf.astype(jnp.float32), kf.astype(jnp.float32),
+                             vf.astype(jnp.float32), window=window)
+    want = jnp.transpose(want.reshape(b, kv, g, s, d), (0, 3, 1, 2, 4))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=8 * TOL[dtype], rtol=8 * TOL[dtype],
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,kv,g,d", [
+    (2, 64, 2, 2, 32),
+    (1, 500, 1, 8, 64),   # MQA long ragged cache
+    (4, 33, 4, 1, 16),
+])
+def test_decode_attention_sweep(dtype, b, s, kv, g, d):
+    ks = jax.random.split(jax.random.PRNGKey(s + d), 3)
+    q = _mk(ks[0], (b, 1, kv, g, d), dtype)
+    k = _mk(ks[1], (b, s, kv, d), dtype)
+    v = _mk(ks[2], (b, s, kv, d), dtype)
+    lens = jnp.asarray(np.random.default_rng(0).integers(1, s + 1, b), jnp.int32)
+    got = ops.decode_attention(q, k, v, lens)
+    qf = q[:, 0].reshape(b * kv * g, d)
+    kf = jnp.repeat(jnp.transpose(k, (0, 2, 1, 3)).reshape(b * kv, s, d), g, 0)
+    vf = jnp.repeat(jnp.transpose(v, (0, 2, 1, 3)).reshape(b * kv, s, d), g, 0)
+    want = ref.decode_attention_ref(
+        qf.astype(jnp.float32), kf.astype(jnp.float32), vf.astype(jnp.float32),
+        jnp.repeat(lens, kv * g),
+    ).reshape(b, 1, kv, g, d)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=8 * TOL[dtype], rtol=8 * TOL[dtype],
+    )
+
+
+def test_flash_matches_model_attention():
+    """Pallas kernel vs the model's pure-JAX chunked flash attention."""
+    from repro.models.attention import flash_attention as model_flash
+
+    key = jax.random.PRNGKey(3)
+    B, S, KV, G, D = 2, 96, 2, 2, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, KV, G, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    a = model_flash(q, k, v, q_chunk=32, kv_chunk=16)
+    b_ = ops.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,q,n,p", [(4, 32, 8, 16), (2, 64, 16, 32),
+                                     (1, 16, 4, 8), (3, 24, 4, 12)])
+def test_ssd_chunk_sweep(dtype, b, q, n, p):
+    ks = jax.random.split(jax.random.PRNGKey(q + p), 5)
+    cb = _mk(ks[0], (b, q, n), dtype)
+    bb = _mk(ks[1], (b, q, n), dtype)
+    xw = _mk(ks[2], (b, q, p), dtype)
+    # cum (log-decay) stays f32 by contract — bf16 loses the relative
+    # decay precision over long chunks
+    cum = -jnp.cumsum(jax.nn.softplus(jax.random.normal(ks[3], (b, q))), 1)
+    hin = _mk(ks[4], (b, n, p), dtype)
+    got = ops.ssd_chunk(cb, bb, xw, cum, hin)
+    want = ref.ssd_chunk_ref(cb.astype(jnp.float32), bb.astype(jnp.float32),
+                             xw.astype(jnp.float32), cum,
+                             hin.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=16 * TOL[dtype], rtol=16 * TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 64), (2, 7, 96), (1, 130, 32)])
+def test_rmsnorm_sweep(dtype, shape):
+    ks = jax.random.split(jax.random.PRNGKey(sum(shape)), 2)
+    x = _mk(ks[0], shape, dtype)
+    scale = 1.0 + 0.1 * jax.random.normal(ks[1], (shape[-1],), jnp.float32)
+    got = ops.rmsnorm(x, scale)
+    want = ref.rmsnorm_ref(x.astype(jnp.float32), scale).astype(dtype)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=4 * TOL[dtype], rtol=4 * TOL[dtype])

@@ -1,0 +1,68 @@
+"""Subprocess smoke tests for the CLI launchers (train / serve / dryrun
+argument surface)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+ENV = {**os.environ, "PYTHONPATH": str(ROOT / "src")}
+
+
+def _run(args, timeout=420):
+    return subprocess.run(
+        [sys.executable, "-m", *args], cwd=ROOT, env=ENV,
+        capture_output=True, text=True, timeout=timeout,
+    )
+
+
+def test_train_launcher_smoke(tmp_path):
+    r = _run(["repro.launch.train", "--arch", "xlstm-125m", "--smoke",
+              "--steps", "3", "--batch", "2", "--seq", "16",
+              "--ckpt-dir", str(tmp_path), "--ckpt-every", "2"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "done." in r.stdout
+    assert list(tmp_path.glob("step_*")), "checkpoint not written"
+
+
+def test_train_launcher_composition():
+    r = _run(["repro.launch.train", "--arch", "stablelm-3b", "--smoke",
+              "--steps", "2", "--batch", "2", "--seq", "16", "--composition"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "composition=on" in r.stdout
+
+
+def test_serve_launcher_smoke():
+    r = _run(["repro.launch.serve", "--arch", "gemma-2b", "--smoke",
+              "--requests", "2", "--batch", "2", "--max-new", "2",
+              "--max-len", "32"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "served 2/2" in r.stdout
+
+
+def test_dryrun_help_surface():
+    """The dry-run CLI exposes every perf-variant flag used in §Perf."""
+    r = _run(["repro.launch.dryrun", "--help"], timeout=120)
+    assert r.returncode == 0
+    for flag in ("--both-meshes", "--skip-blocks", "--moe-sorted",
+                 "--residual", "--composition", "--compose-matmul",
+                 "--attn-qseq", "--no-remat", "--skip-existing"):
+        assert flag in r.stdout, flag
+
+
+def test_dryrun_single_pair_end_to_end(tmp_path):
+    """Full dry-run path (512 host devices, lower+compile+analyze) on the
+    cheapest (arch, shape) pair."""
+    r = _run(["repro.launch.dryrun", "--arch", "xlstm-125m",
+              "--shape", "long_500k", "--out", str(tmp_path)], timeout=420)
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-1500:])
+    out = list(tmp_path.glob("*.json"))
+    assert len(out) == 1
+    import json
+    rec = json.loads(out[0].read_text())
+    assert rec["devices"] == 256 and rec["kind"] == "decode"
+    assert rec["loop_scaled"]["dot_flops"] > 0
+    assert rec["memory"]["peak_bytes"] > 0

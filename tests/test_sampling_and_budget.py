@@ -1,0 +1,63 @@
+"""Tests: sampling utilities + budget-driven FL runs (paper Alg. 1 loop)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sampling import perplexity, sample_logits
+
+
+def test_greedy_and_temperature_limits():
+    logits = jnp.asarray([[0.0, 5.0, 1.0], [2.0, 0.0, -1.0]])
+    assert sample_logits(None, logits, temperature=0.0).tolist() == [1, 0]
+    # very low temperature ~ greedy
+    out = sample_logits(jax.random.PRNGKey(0), logits, temperature=1e-4)
+    assert out.tolist() == [1, 0]
+
+
+def test_top_k_restricts_support():
+    logits = jnp.asarray([[0.0, 5.0, 4.9, -10.0]])
+    keys = jax.random.split(jax.random.PRNGKey(0), 200)
+    samples = [int(sample_logits(k, logits, temperature=1.0, top_k=2)[0])
+               for k in keys]
+    assert set(samples) <= {1, 2}
+
+
+def test_top_p_keeps_nucleus():
+    # p(1)=0.9 dominates: top_p=0.5 must keep only token 1
+    logits = jnp.log(jnp.asarray([[0.05, 0.9, 0.05]]))
+    keys = jax.random.split(jax.random.PRNGKey(1), 100)
+    samples = {int(sample_logits(k, logits, temperature=1.0, top_p=0.5)[0])
+               for k in keys}
+    assert samples == {1}
+
+
+def test_perplexity_uniform():
+    V = 8
+    logits = jnp.zeros((2, 5, V))
+    labels = jnp.zeros((2, 5), jnp.int32)
+    np.testing.assert_allclose(float(perplexity(logits, labels)), V, rtol=1e-5)
+
+
+def test_run_until_budget_respects_limits():
+    from repro.fl import FLConfig, build_image_setup
+    from repro.fl.heterogeneity import HeterogeneityModel
+    from repro.fl.server import RUNNERS
+
+    model, px, py, test = build_image_setup(num_clients=8, seed=0)
+    cfg = FLConfig(num_clients=8, clients_per_round=3, eval_every=5,
+                   tau_fixed=3, tau_max=10)
+    het = HeterogeneityModel(8, seed=0)
+    runner = RUNNERS["heroes"](model, px, py, test, het, cfg, 3)
+    hist = runner.run_until_budget(time_budget=0.4)
+    # stops within one round of the budget
+    assert hist[-1].wall_time >= 0.4 or len(hist) == 10_000
+    assert len(hist) >= 1
+    before_last = hist[-2].wall_time if len(hist) > 1 else 0.0
+    assert before_last < 0.4
+
+    het2 = HeterogeneityModel(8, seed=0)
+    runner2 = RUNNERS["fedavg"](model, px, py, test, het2, cfg, 3)
+    hist2 = runner2.run_until_budget(traffic_budget=2e6)
+    assert hist2[-1].traffic_bytes >= 2e6
+    assert (len(hist2) < 2 or hist2[-2].traffic_bytes < 2e6)

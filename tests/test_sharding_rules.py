@@ -1,0 +1,110 @@
+"""Unit tests for the sharding rules and divisibility fallbacks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch import specs as specs_lib
+from repro.sharding import rules
+
+
+class FakeMesh:
+    """Minimal stand-in exposing .shape / .axis_names like jax.Mesh."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+PODMESH = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _specs_for(arch):
+    cfg = configs.get_config(arch)
+    pshape = specs_lib.params_shape(cfg)
+    return pshape, rules.param_specs(pshape, mesh=MESH)
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+def test_param_specs_divisible(arch):
+    """Every sharded dim must be divisible by its mesh axes."""
+    pshape, pspecs = _specs_for(arch)
+
+    def check(path, leaf, spec):
+        for dim, axis in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if axis is None:
+                continue
+            size = rules._axis_size(MESH, axis)
+            assert dim % size == 0, f"{path}: {leaf.shape} vs {spec}"
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), pshape, pspecs)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-coder-33b", "olmoe-1b-7b",
+                                  "granite-34b", "zamba2-2.7b"])
+def test_big_weights_are_sharded(arch):
+    """The dominant tensors must not be fully replicated."""
+    pshape, pspecs = _specs_for(arch)
+    leaves = jax.tree_util.tree_leaves_with_path(pshape)
+    specs = {jax.tree_util.keystr(p): s for p, s in
+             jax.tree_util.tree_leaves_with_path(
+                 pspecs, is_leaf=lambda x: isinstance(x, P))}
+    for path, leaf in leaves:
+        if leaf.size >= (1 << 24):  # >= 16M params
+            spec = specs[jax.tree_util.keystr(path)]
+            assert any(a is not None for a in spec), \
+                f"{jax.tree_util.keystr(path)} ({leaf.shape}) replicated"
+
+
+def test_batch_spec_fallback_for_batch1():
+    batch = {"tokens": jax.ShapeDtypeStruct((1, 64), jnp.int32)}
+    specs = rules.batch_specs(batch, "data", mesh=MESH)
+    assert specs["tokens"] == P(None, None)
+    specs2 = rules.batch_specs(batch, ("pod", "data"), mesh=PODMESH)
+    assert specs2["tokens"] == P(None, None)
+
+
+def test_cache_spec_kv_vs_seq_sharding():
+    # kv=16 divides the model axis -> shard heads
+    cfg16 = configs.get_config("olmoe-1b-7b")
+    cache = jax.eval_shape(
+        lambda: __import__("repro.models.model", fromlist=["model"]).init_cache(
+            cfg16, 32, 128))
+    spec = rules.cache_specs(cache, cfg16, "data", mesh=MESH)
+    assert spec["k"][3] == "model"
+    # kv=1 (MQA) -> shard cache length instead
+    cfg1 = configs.get_config("granite-34b")
+    cache1 = jax.eval_shape(
+        lambda: __import__("repro.models.model", fromlist=["model"]).init_cache(
+            cfg1, 32, 256))
+    spec1 = rules.cache_specs(cache1, cfg1, "data", mesh=MESH)
+    assert spec1["k"][2] == "model" and spec1["k"][3] is None
+
+
+def test_zero_pod_adds_pod_axis_to_big_tensors():
+    cfg = configs.get_config("kimi-k2-1t-a32b")
+    pshape = specs_lib.params_shape(cfg)
+    pspecs = rules.param_specs(pshape, mesh=PODMESH, zero_pod=True)
+    # expert tensors are the ~1T bulk: must carry the pod axis somewhere
+    moe_spec = pspecs["stack"]["moe_layers"]["moe"]["gate"]
+    assert any(isinstance(a, tuple) and "pod" in a for a in moe_spec), moe_spec
+
+
+def test_moe_sorted_matches_einsum_dispatch():
+    from repro.configs.base import ModelConfig, MoEConfig
+    from repro.models import moe
+
+    cfg = ModelConfig(arch_id="t", family="moe", num_layers=1, d_model=32,
+                      num_heads=4, num_kv_heads=4, d_ff=16, vocab=64,
+                      moe=MoEConfig(num_experts=8, top_k=2, d_expert=16))
+    p = moe.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 1024, 32))
+    y1, a1 = moe.apply_moe(p, cfg, x)
+    y2, a2 = moe.apply_moe_sorted(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+    np.testing.assert_allclose(float(a1), float(a2), atol=1e-6)
