@@ -1,0 +1,81 @@
+"""Engine benchmark: batched cohort trainer vs sequential per-client loop.
+
+Times repeated 10-client CNN rounds through the engine with the two
+local-training backends.  The sequential backend pays one jit dispatch
+per client per SGD step (tau * K dispatches/round); the cohort backend
+stacks the cohort into one compiled vmap+scan call.  Writes
+``BENCH_engine.json`` next to the repo root.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_engine.py [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def bench(scheme: str, trainer: str, rounds: int, warmup: int) -> dict:
+    from repro.fl import FLConfig, build_image_setup, build_runner
+
+    model, px, py, test = build_image_setup(num_clients=10, seed=0)
+    cfg = FLConfig(num_clients=10, clients_per_round=10, tau_fixed=10,
+                   eval_every=10_000, estimate=(scheme == "heroes"),
+                   trainer=trainer, seed=0)
+    eng = build_runner(scheme, model, px, py, test, cfg=cfg)
+    # warmup covers jit compilation; heroes needs more rounds because its
+    # scheduler varies (width, tau) shapes until the bucketed cache fills
+    for _ in range(warmup):
+        eng.run_round()
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        eng.run_round()
+    dt = time.perf_counter() - t0
+    return {"scheme": scheme, "trainer": trainer, "rounds": rounds,
+            "total_s": dt, "per_round_s": dt / rounds}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer repeated rounds (CI smoke)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: repo-root BENCH_engine.json)")
+    args = ap.parse_args()
+    rounds = 2 if args.fast else 10
+
+    results = {}
+    for scheme in ("fedavg", "heroes"):
+        warmup = 1 if args.fast else (8 if scheme == "heroes" else 2)
+        seq = bench(scheme, "sequential", rounds, warmup)
+        coh = bench(scheme, "cohort", rounds, warmup)
+        results[scheme] = {
+            "sequential_per_round_s": seq["per_round_s"],
+            "cohort_per_round_s": coh["per_round_s"],
+            "speedup": seq["per_round_s"] / coh["per_round_s"],
+            "rounds_timed": rounds,
+            "warmup_rounds": warmup,
+        }
+        print(f"{scheme:8s} sequential {seq['per_round_s']*1e3:8.1f} ms/round   "
+              f"cohort {coh['per_round_s']*1e3:8.1f} ms/round   "
+              f"speedup {results[scheme]['speedup']:.2f}x")
+
+    out = {
+        "benchmark": "engine_cohort_vs_sequential",
+        "setup": {"model": "cnn", "num_clients": 10, "clients_per_round": 10,
+                  "tau": 10, "batch_size": 16},
+        "results": results,
+    }
+    path = Path(args.out) if args.out else \
+        Path(__file__).resolve().parents[1] / "BENCH_engine.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

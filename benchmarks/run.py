@@ -19,6 +19,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig4,fig5,fig68,fig7,fig9,roofline,ablations")
+    ap.add_argument("--fast", action="store_true",
+                    help="cheap analytic sections only (CI smoke)")
     args = ap.parse_args()
 
     from benchmarks import (ablations, fig2_completion, fig4_training,
@@ -36,7 +38,12 @@ def main() -> None:
         "roofline": roofline.run,
         "ablations": ablations.run,
     }
-    wanted = args.only.split(",") if args.only else list(sections)
+    if args.only:
+        wanted = args.only.split(",")
+    elif args.fast:
+        wanted = ["fig2"]  # host-side analytic section, no training
+    else:
+        wanted = list(sections)
 
     print("name,value,derived")
     for name in wanted:

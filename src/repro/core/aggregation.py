@@ -19,7 +19,7 @@ Two implementations:
 
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -28,15 +28,31 @@ import numpy as np
 Array = jax.Array
 
 
-def aggregate_basis(client_bases: Sequence[Array]) -> Array:
-    """v^{h+1} = (1/K) sum_n v̄_n^h."""
-    return jnp.mean(jnp.stack(client_bases, axis=0), axis=0)
+def aggregate_basis(
+    client_bases: Sequence[Array],
+    weights: Optional[Sequence[float]] = None,
+    prev: Optional[Array] = None,
+) -> Array:
+    """v^{h+1} = (1/K) sum_n v̄_n^h.
+
+    With ``weights`` (semi-async staleness discount), each client's basis
+    is first blended toward ``prev`` (the current global basis) as
+    ``w * v̄_n + (1 - w) * prev`` — all-ones weights reduce to the plain
+    mean bitwise.
+    """
+    if weights is None:
+        return jnp.mean(jnp.stack(client_bases, axis=0), axis=0)
+    if prev is None:
+        raise ValueError("weighted aggregation needs the previous basis")
+    blended = [w * b + (1.0 - w) * prev for b, w in zip(client_bases, weights)]
+    return jnp.mean(jnp.stack(blended, axis=0), axis=0)
 
 
 def aggregate_coefficient(
     global_coeff: Array,
     client_blocks: Sequence[Array],
     client_block_ids: Sequence[np.ndarray],
+    weights: Optional[Sequence[float]] = None,
 ) -> Array:
     """Block-wise aggregation, Eq. (5).
 
@@ -45,6 +61,9 @@ def aggregate_coefficient(
       client_blocks: per client, updated reduced coefficient ``(m_n, R, O)``.
       client_block_ids: per client, the block indices (length ``m_n``)
         those rows correspond to.
+      weights: optional per-client staleness weights in [0, 1]; a client's
+        blocks are blended toward the current global blocks as
+        ``w * blocks + (1 - w) * global[ids]`` before the block mean.
 
     Returns:
       New complete coefficient; untrained blocks unchanged.
@@ -52,9 +71,14 @@ def aggregate_coefficient(
     num_blocks = global_coeff.shape[0]
     acc = jnp.zeros_like(global_coeff)
     cnt = jnp.zeros((num_blocks,), dtype=jnp.float32)
-    for blocks, ids in zip(client_blocks, client_block_ids):
+    if weights is None:
+        weights = [None] * len(client_blocks)
+    for blocks, ids, w in zip(client_blocks, client_block_ids, weights):
         ids = jnp.asarray(np.asarray(ids))
-        acc = acc.at[ids].add(blocks.astype(acc.dtype))
+        blocks = blocks.astype(acc.dtype)
+        if w is not None:
+            blocks = w * blocks + (1.0 - w) * global_coeff[ids]
+        acc = acc.at[ids].add(blocks)
         cnt = cnt.at[ids].add(1.0)
     trained = cnt > 0
     denom = jnp.where(trained, cnt, 1.0)[:, None, None]

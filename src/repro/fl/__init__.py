@@ -1,14 +1,17 @@
 """Federated-learning runtime: Heroes + baselines over a simulated
 heterogeneous edge network (paper Sec. III / VI)."""
 
+from repro.fl.engine import SCHEMES, build_engine, register_scheme  # noqa: F401
 from repro.fl.heterogeneity import HeterogeneityModel  # noqa: F401
 from repro.fl.models import MODELS, make_cnn, make_resnet, make_rnn  # noqa: F401
 from repro.fl.server import RUNNERS, FLConfig  # noqa: F401
 from repro.fl.simulation import (  # noqa: F401
     build_image_setup,
+    build_runner,
     build_text_setup,
     run_scheme,
     summarize,
     time_to_accuracy,
     traffic_to_accuracy,
 )
+from repro.fl.types import RoundLog  # noqa: F401

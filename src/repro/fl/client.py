@@ -36,13 +36,10 @@ def _ce(logits: Array, labels: Array) -> Array:
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_fns(model_key: str, width: int, factorized: bool):
-    from repro.fl import models as fl_models
-
-    # model defs are recreated deterministically from the registry key
-    name, mw, base, rank, ncls = model_key.split(":")
-    model = fl_models.MODELS[name](int(mw), int(base), int(rank), int(ncls)) \
-        if name != "rnn" else fl_models.MODELS[name](int(mw), int(base), int(rank), vocab=int(ncls))
+def _jitted_fns(model: FLModelDef, width: int, factorized: bool):
+    # Keyed on the model *instance* (FLModelDef hashes by identity): the
+    # old string registry key dropped constructor kwargs that are not part
+    # of the encoding (e.g. ``in_ch``), silently training the wrong model.
 
     def loss_fn(params, batch):
         w = (model.compose_all(params, width) if factorized
@@ -59,12 +56,6 @@ def _jitted_fns(model_key: str, width: int, factorized: bool):
         return jax.tree_util.tree_map(lambda p, gg: p - lr * gg, params, g)
 
     return loss_jit, grad_fn, sgd_step
-
-
-def model_key(model: FLModelDef) -> str:
-    any_spec = next(iter(model.specs.values()))
-    base = model.specs.get("wh", model.specs.get("conv2", any_spec)).base_in
-    return f"{model.name}:{any_spec.max_width}:{base}:{any_spec.rank}:{model.num_classes}"
 
 
 @dataclasses.dataclass
@@ -88,7 +79,7 @@ def local_train(
     estimate: bool = True,
 ) -> ClientResult:
     """tau local SGD iterations (Alg. 2 lines 4-9)."""
-    loss_jit, grad_fn, sgd_step = _jitted_fns(model_key(model), width, factorized)
+    loss_jit, grad_fn, sgd_step = _jitted_fns(model, width, factorized)
     params0 = reduced_params
     params = params0
     n = len(y)

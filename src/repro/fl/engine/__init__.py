@@ -1,0 +1,22 @@
+"""Layered FL engine: schemes as policy bundles over a shared core.
+
+See :mod:`repro.fl.engine.base` for the component contracts and
+:mod:`repro.fl.engine.registry` for the five paper schemes expressed as
+bundles.  ``build_engine`` is the main entry point; ``run_scheme`` in
+:mod:`repro.fl.simulation` routes through it by default.
+"""
+
+from repro.fl.engine.aggregators import (DenseMeanAggregator,  # noqa: F401
+                                         FlancAggregator, HeroesAggregator,
+                                         MaskedDenseAggregator)
+from repro.fl.engine.base import (Aggregator, AssignmentPolicy,  # noqa: F401
+                                  LocalTrainer, PayloadModel, RoundLoop)
+from repro.fl.engine.loops import SemiAsyncRoundLoop, SyncRoundLoop  # noqa: F401
+from repro.fl.engine.payload import DensePayload, FactorizedPayload  # noqa: F401
+from repro.fl.engine.policies import (FullWidthAssignment,  # noqa: F401
+                                      HeroesAssignment, TierWidthAssignment,
+                                      tier_width)
+from repro.fl.engine.registry import (SCHEMES, SchemeBundle,  # noqa: F401
+                                      build_engine, register_scheme)
+from repro.fl.engine.runner import EngineRunner  # noqa: F401
+from repro.fl.engine.trainers import CohortTrainer, SequentialTrainer  # noqa: F401

@@ -1,0 +1,218 @@
+"""Aggregators: global-state owners + merge rules per scheme.
+
+Each aggregator reproduces its legacy runner's merge bitwise when
+``weights is None`` (the synchronous path).  With per-client ``weights``
+(semi-async staleness discounting) every client contribution is first
+blended toward the *current* global state::
+
+    contrib_n = w_n * update_n + (1 - w_n) * global
+
+so a fully fresh client (w=1) merges exactly as in the synchronous rule
+and an infinitely stale one (w=0) is a no-op.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, convergence
+from repro.fl.client import ClientResult
+from repro.fl.engine.base import Aggregator, Assignment
+
+
+def _weight_list(results: Dict[int, ClientResult],
+                 weights: Optional[Dict[int, float]]):
+    if weights is None:
+        return None
+    return [float(weights.get(n, 1.0)) for n in results]
+
+
+class DenseMeanAggregator(Aggregator):
+    """FedAvg/ADP: plain parameter mean over the cohort."""
+
+    def init_global(self) -> None:
+        eng = self.eng
+        eng.params = eng.model.init_dense(jax.random.PRNGKey(eng.cfg.seed))
+
+    def client_params(self, n: int, assignment: Assignment) -> Any:
+        return self.eng.params
+
+    def aggregate(self, results, assigns, weights=None) -> None:
+        eng = self.eng
+        ws = _weight_list(results, weights)
+        if ws is None:
+            stacked = [r.params for r in results.values()]
+        else:
+            stacked = [
+                jax.tree_util.tree_map(lambda u, g, w=w: w * u + (1.0 - w) * g,
+                                       r.params, eng.params)
+                for r, w in zip(results.values(), ws)
+            ]
+        eng.params = jax.tree_util.tree_map(
+            lambda *xs: jnp.mean(jnp.stack(xs), 0), *stacked
+        )
+        self._update_bound(results)
+
+    def _update_bound(self, results) -> None:
+        eng = self.eng
+        ests = [r.estimates for r in results.values() if r.estimates]
+        if ests:
+            mean = {k: float(np.mean([e[k] for e in ests])) for k in ests[0]}
+            eng.bound_state = convergence.BoundState(
+                loss0=float(np.mean([r.loss_after for r in results.values()])),
+                smoothness=max(mean.get("L", 1.0), 1e-3),
+                grad_sq=mean.get("grad_sq", 1.0),
+                noise_sq=mean.get("sigma_sq", 0.5),
+                lr=eng.cfg.lr,
+            )
+
+    def evaluate(self) -> float:
+        eng = self.eng
+        ew = eng.eval_width
+        params = eng.params if ew == eng.P else eng.model.slice_dense(
+            eng.params, ew)
+        logits = eng.model.forward(params, ew, eng.test_batch)
+        return eng.acc_from_logits(logits)
+
+
+class MaskedDenseAggregator(DenseMeanAggregator):
+    """HeteroFL: element-wise mean over the clients covering each region."""
+
+    def client_params(self, n: int, assignment: Assignment) -> Any:
+        return self.eng.model.slice_dense(self.eng.params, assignment["width"])
+
+    def aggregate(self, results, assigns, weights=None) -> None:
+        eng = self.eng
+        new = {}
+        for name in eng.params:
+            full = eng.params[name]
+            acc = jnp.zeros_like(full)
+            cnt = jnp.zeros_like(full)
+            for n, r in results.items():
+                w = r.params[name]
+                if weights is not None:
+                    wn = float(weights.get(n, 1.0))
+                    region = full[tuple(slice(0, s) for s in w.shape)]
+                    w = wn * w + (1.0 - wn) * region
+                pad = [(0, full.shape[i] - w.shape[i]) for i in range(full.ndim)]
+                acc = acc + jnp.pad(w, pad)
+                cnt = cnt + jnp.pad(jnp.ones_like(w), pad)
+            covered = cnt > 0
+            new[name] = jnp.where(covered, acc / jnp.maximum(cnt, 1), full)
+        eng.params = new
+        self._update_bound(results)
+
+
+class FlancAggregator(Aggregator):
+    """Original NC: shared basis average + per-width coefficient average."""
+
+    def init_global(self) -> None:
+        eng = self.eng
+        full = eng.model.init_factorized(jax.random.PRNGKey(eng.cfg.seed))
+        # per-width coefficient sets: width p owns its own copy of the
+        # first blocks_for_width(p) blocks (original Flanc: no sharing)
+        self.basis = {name: full[name]["basis"] for name in full}
+        self.coeffs = {
+            p: {name: full[name]["coeff"][: eng.model.specs[name].blocks_for_width(p)]
+                for name in full}
+            for p in range(1, eng.P + 1)
+        }
+        eng.params = {"basis": self.basis, "coeffs": self.coeffs}
+
+    def client_params(self, n: int, assignment: Assignment) -> Any:
+        return self._width_params(assignment["width"])
+
+    def _width_params(self, p: int):
+        return {name: {"basis": self.basis[name], "coeff": self.coeffs[p][name]}
+                for name in self.basis}
+
+    def aggregate(self, results, assigns, weights=None) -> None:
+        def blend(n, name, key, prev):
+            v = results[n].params[name][key]
+            if weights is None:
+                return v
+            w = float(weights.get(n, 1.0))
+            return w * v + (1.0 - w) * prev
+
+        self.basis = {
+            name: jnp.mean(jnp.stack(
+                [blend(n, name, "basis", self.basis[name]) for n in results]), 0)
+            for name in self.basis
+        }
+        by_width: Dict[int, list] = {}
+        for n in results:
+            by_width.setdefault(assigns[n]["width"], []).append(n)
+        for p, ns in by_width.items():
+            self.coeffs[p] = {
+                name: jnp.mean(jnp.stack(
+                    [blend(n, name, "coeff", self.coeffs[p][name]) for n in ns]), 0)
+                for name in self.basis
+            }
+        self.eng.params = {"basis": self.basis, "coeffs": self.coeffs}
+
+    def evaluate(self) -> float:
+        eng = self.eng
+        ew = eng.eval_width
+        params = self._width_params(ew)
+        w = eng.model.compose_all(params, ew)
+        return eng.acc_from_logits(eng.model.forward(w, ew, eng.test_batch))
+
+
+class HeroesAggregator(Aggregator):
+    """Enhanced NC: basis average + block-wise coefficient merge (Eq. 5)."""
+
+    def init_global(self) -> None:
+        eng = self.eng
+        eng.params = eng.model.init_factorized(jax.random.PRNGKey(eng.cfg.seed))
+
+    def client_params(self, n: int, assignment: Assignment) -> Any:
+        return self.eng.model.reduce(
+            self.eng.params, assignment["width"],
+            assignment["hidden_ids"], assignment["anchored_ids"])
+
+    def aggregate(self, results, assigns, weights=None) -> None:
+        eng = self.eng
+        ws = _weight_list(results, weights)
+        new = {}
+        for name, spec in eng.model.specs.items():
+            ids_key = "hidden_ids" if spec.mode == "square" else "anchored_ids"
+            new[name] = {
+                "basis": aggregation.aggregate_basis(
+                    [r.params[name]["basis"] for r in results.values()],
+                    weights=ws, prev=eng.params[name]["basis"]),
+                "coeff": aggregation.aggregate_coefficient(
+                    eng.params[name]["coeff"],
+                    [r.params[name]["coeff"] for r in results.values()],
+                    [np.asarray(assigns[n][ids_key]) for n in results],
+                    weights=ws,
+                ),
+            }
+        eng.params = new
+        ests = [r.estimates for r in results.values() if r.estimates]
+        if ests:
+            mean = {k: float(np.mean([e[k] for e in ests])) for k in ests[0]}
+            eng.bound_state = convergence.BoundState(
+                loss0=max(float(np.mean(
+                    [r.loss_after for r in results.values()])), 1e-3),
+                smoothness=float(np.clip(mean.get("L", 1.0), 1e-3, 1e3)),
+                grad_sq=mean.get("grad_sq", 1.0),
+                noise_sq=mean.get("sigma_sq", 0.5),
+                lr=eng.cfg.lr,
+            )
+
+    def evaluate(self) -> float:
+        # evaluate the width-``eval_width`` sub-model built from the first
+        # blocks (the full set when eval_width == P, the usual case)
+        eng = self.eng
+        ew = eng.eval_width
+        square_spec = next(
+            s for s in eng.model.specs.values() if s.mode == "square")
+        hidden_ids = np.arange(square_spec.blocks_for_width(ew))
+        anch_ids = np.arange(min(ew, eng.P))
+        reduced = eng.model.reduce(eng.params, ew, hidden_ids, anch_ids)
+        w = eng.model.compose_all(reduced, ew)
+        return eng.acc_from_logits(eng.model.forward(w, ew, eng.test_batch))

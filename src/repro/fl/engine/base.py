@@ -1,0 +1,101 @@
+"""Component contracts of the layered FL engine.
+
+A *scheme* (FedAvg, ADP, HeteroFL, Flanc, Heroes, ...) is a bundle of
+five independently testable components wired to a shared
+:class:`~repro.fl.engine.runner.EngineRunner`:
+
+  AssignmentPolicy  who trains what: (width, tau, block ids) per client
+  PayloadModel      traffic accounting: bytes shipped per assignment
+  Aggregator        global-state owner: init / client view / merge / eval
+  LocalTrainer      client-update backend: sequential or batched cohort
+  RoundLoop         virtual-clock event loop: synchronous or semi-async
+
+Each component is bound to the runner with :meth:`setup` and reads the
+shared round state (``eng.round``, ``eng.wall``, ``eng.bound_state``,
+``eng.params``) through that back-reference.  The contract deliberately
+mirrors where the paper's five schemes actually differ (Sec. VI-B), so a
+new scheme is a policy bundle, not a runner subclass.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any, Dict, Optional, Sequence
+
+from repro.fl.client import ClientResult
+from repro.fl.types import RoundLog
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.fl.engine.runner import EngineRunner
+
+Assignment = Dict[str, Any]  # {"width": int, "tau": int, [block-id keys]}
+
+
+class Component:
+    """Base: every engine component is bound to one runner."""
+
+    eng: "EngineRunner"
+
+    def setup(self, eng: "EngineRunner") -> None:
+        self.eng = eng
+
+
+class AssignmentPolicy(Component):
+    """Decides (width, tau, tensor blocks) for a set of sampled clients.
+
+    ``assign`` may mutate policy-owned control state (block counters,
+    schedulers); the returned dict's insertion order is the order every
+    downstream consumer iterates in, which keeps histories reproducible.
+    """
+
+    def assign(self, clients: Sequence[int]) -> Dict[int, Assignment]:
+        raise NotImplementedError
+
+
+class PayloadModel(Component):
+    """Bytes shipped one way for one client's assignment."""
+
+    def bytes(self, assignment: Assignment) -> float:
+        raise NotImplementedError
+
+
+class Aggregator(Component):
+    """Owns the global model state: init, per-client view, merge, eval.
+
+    ``aggregate`` accepts optional per-client ``weights`` in [0, 1] used
+    by asynchronous loops for staleness discounting: a client's
+    contribution is blended as ``w * update + (1 - w) * current_global``
+    before the scheme's own merge rule runs, so ``weights=None`` (or all
+    ones) reproduces the synchronous rule bitwise.
+    """
+
+    def init_global(self) -> None:
+        raise NotImplementedError
+
+    def client_params(self, n: int, assignment: Assignment) -> Any:
+        """The parameter view shipped to client ``n`` this round."""
+        raise NotImplementedError
+
+    def aggregate(
+        self,
+        results: Dict[int, ClientResult],
+        assigns: Dict[int, Assignment],
+        weights: Optional[Dict[int, float]] = None,
+    ) -> None:
+        raise NotImplementedError
+
+    def evaluate(self) -> float:
+        raise NotImplementedError
+
+
+class LocalTrainer(Component):
+    """Runs the local updates for every assigned client of one dispatch."""
+
+    def train_all(self, assigns: Dict[int, Assignment]) -> Dict[int, ClientResult]:
+        raise NotImplementedError
+
+
+class RoundLoop(Component):
+    """Advances the virtual clock by one aggregation event."""
+
+    def run_round(self) -> RoundLog:
+        raise NotImplementedError

@@ -1,0 +1,139 @@
+"""Round event loops over the virtual clock.
+
+``SyncRoundLoop`` is the paper's round (Alg. 1 / Eq. 19): sample K
+clients, train all, aggregate, charge the makespan ``max_n (tau mu + nu)``
+to the wall clock.  Bitwise-identical histories to the legacy
+``BaseRunner.run_round``.
+
+``SemiAsyncRoundLoop`` keeps up to M clients in flight and aggregates as
+soon as the fastest K of them finish.  Stragglers stay in flight across
+aggregation events and merge later with a staleness-discounted weight
+``decay ** staleness`` (their update was computed against an older
+global model), the FedAsync/FedBuff-style rule adapted to every
+scheme's aggregator.  The wall clock advances event-by-event to the
+K-th completion, so fast clients stop paying for slow ones.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.fl.client import ClientResult
+from repro.fl.engine.base import Assignment, RoundLoop
+from repro.fl.types import RoundLog
+
+
+class SyncRoundLoop(RoundLoop):
+    """Synchronous makespan round (paper Eq. 19)."""
+
+    def run_round(self) -> RoundLog:
+        eng = self.eng
+        cfg = eng.cfg
+        eng.het.advance_round()
+        clients = eng.rng.choice(cfg.num_clients, cfg.clients_per_round,
+                                 replace=False)
+        assigns = eng.assignment.assign(list(map(int, clients)))
+        results = eng.trainer.train_all(assigns)
+        times = {}
+        for n, a in assigns.items():
+            mu = eng.het.iter_time(n, eng.flops_per_iter(a["width"]))
+            nu = eng.het.upload_time(n, eng.payload.bytes(a))
+            times[n] = a["tau"] * mu + nu
+            eng.traffic += 2 * eng.payload.bytes(a)  # down + up
+        eng.aggregator.aggregate(results, assigns)
+        makespan = max(times.values())
+        wait = float(np.mean([makespan - t for t in times.values()]))
+        eng.wall += makespan
+        eng.round += 1
+        acc = None
+        if eng.round % cfg.eval_every == 0 or eng.round == 1:
+            acc = eng.aggregator.evaluate()
+        log = RoundLog(eng.round, eng.wall, eng.traffic, makespan, wait,
+                       float(np.mean([a["tau"] for a in assigns.values()])), acc)
+        eng.history.append(log)
+        return log
+
+
+@dataclasses.dataclass
+class _InFlight:
+    client: int
+    assign: Assignment
+    result: ClientResult
+    finish: float  # absolute virtual time the upload lands at the PS
+    dispatched: int  # eng.round at dispatch (staleness = now - dispatched)
+
+
+class SemiAsyncRoundLoop(RoundLoop):
+    """Aggregate the fastest K of M in-flight clients per event.
+
+    One ``run_round`` call = one aggregation event.  Training results are
+    computed eagerly at dispatch against the then-current global state —
+    exactly what a straggler's update would contain when it finally
+    lands — and merged with weight ``staleness_decay ** staleness``.
+    """
+
+    def __init__(self, k: Optional[int] = None,
+                 staleness_decay: Optional[float] = None):
+        self._k_override = k
+        self._decay_override = staleness_decay
+
+    def setup(self, eng) -> None:
+        super().setup(eng)
+        cfg = eng.cfg
+        self.k = self._k_override or cfg.async_k \
+            or max(1, cfg.clients_per_round // 2)
+        self.decay = (self._decay_override if self._decay_override is not None
+                      else cfg.staleness_decay)
+        self.in_flight: List[_InFlight] = []
+
+    def _dispatch(self, clients: List[int]) -> None:
+        eng = self.eng
+        assigns = eng.assignment.assign(clients)
+        results = eng.trainer.train_all(assigns)
+        for n, a in assigns.items():
+            mu = eng.het.iter_time(n, eng.flops_per_iter(a["width"]))
+            nu = eng.het.upload_time(n, eng.payload.bytes(a))
+            eng.traffic += 2 * eng.payload.bytes(a)
+            self.in_flight.append(_InFlight(
+                n, a, results[n], eng.wall + a["tau"] * mu + nu, eng.round))
+
+    def run_round(self) -> RoundLog:
+        eng = self.eng
+        cfg = eng.cfg
+        eng.het.advance_round()
+        busy = {t.client for t in self.in_flight}
+        need = cfg.clients_per_round - len(self.in_flight)
+        if need > 0:
+            pool = np.array([c for c in range(cfg.num_clients) if c not in busy])
+            newly = eng.rng.choice(pool, min(need, len(pool)), replace=False)
+            self._dispatch(list(map(int, newly)))
+
+        self.in_flight.sort(key=lambda t: t.finish)
+        k = min(self.k, len(self.in_flight))
+        t_k = self.in_flight[k - 1].finish
+        done = [t for t in self.in_flight if t.finish <= t_k]
+        self.in_flight = [t for t in self.in_flight if t.finish > t_k]
+
+        results = {t.client: t.result for t in done}
+        assigns = {t.client: t.assign for t in done}
+        stale = sum(1 for t in done if eng.round > t.dispatched)
+        # all-fresh events take the cheap synchronous merge path
+        weights = None if stale == 0 else {
+            t.client: self.decay ** (eng.round - t.dispatched) for t in done}
+        eng.aggregator.aggregate(results, assigns, weights=weights)
+
+        makespan = t_k - eng.wall  # time since the previous aggregation
+        wait = float(np.mean([t_k - t.finish for t in done]))
+        eng.wall = t_k
+        eng.round += 1
+        acc = None
+        if eng.round % cfg.eval_every == 0 or eng.round == 1:
+            acc = eng.aggregator.evaluate()
+        log = RoundLog(eng.round, eng.wall, eng.traffic, makespan, wait,
+                       float(np.mean([a["tau"] for a in assigns.values()])),
+                       acc, stale=stale)
+        eng.history.append(log)
+        return log

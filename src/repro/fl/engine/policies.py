@@ -1,0 +1,133 @@
+"""Assignment policies: who trains which width / tau / blocks.
+
+These encode exactly the per-scheme differences of paper Sec. VI-B:
+
+  FullWidthAssignment   FedAvg / ADP — everyone at width P, identical tau
+                        (optionally the adaptive tau* of Eq. 26)
+  TierWidthAssignment   HeteroFL / Flanc — width by hardware tier,
+                        fixed tau
+  HeroesAssignment      Alg. 1 — greedy width growth, pacesetter tau*,
+                        variance-minimising tau, least-trained blocks
+
+``HeroesAssignment`` is also used by the legacy
+:class:`repro.fl.server.HeroesRunner`, which delegates its ``assign`` to
+this policy — the round-0 (predefined frequency) and planned paths share
+one block-selection/bookkeeping helper instead of the two copies the
+seed carried.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core import convergence
+from repro.core.composition import select_blocks
+from repro.core.scheduler import HeroesScheduler, SchedulerConfig
+from repro.fl.engine.base import Assignment, AssignmentPolicy
+from repro.fl.heterogeneity import HeterogeneityModel
+
+
+def tier_width(het: HeterogeneityModel, n: int, max_width: int) -> int:
+    """Static width by hardware tier (HeteroFL / Flanc assignment rule)."""
+    order = {"laptop": max_width, "agx_xavier": max(max_width - 1, 1),
+             "xavier_nx": max(max_width - 2, 1), "tx2": 1}
+    return min(order[het.clients[n].tier], max_width)
+
+
+class FullWidthAssignment(AssignmentPolicy):
+    """Everyone trains the full-width model with one shared tau."""
+
+    def __init__(self, adaptive_tau: bool = False):
+        self.adaptive_tau = adaptive_tau
+
+    def assign(self, clients: Sequence[int]) -> Dict[int, Assignment]:
+        eng = self.eng
+        tau = eng.cfg.tau_fixed
+        if self.adaptive_tau and eng.round > 0:
+            t = convergence.tau_star(eng.bound_state, max(200 - eng.round, 1))
+            tau = int(np.clip(round(t), 1, eng.cfg.tau_max))
+        return {n: {"width": eng.P, "tau": tau} for n in clients}
+
+
+class TierWidthAssignment(AssignmentPolicy):
+    """Width by hardware tier, fixed identical tau."""
+
+    def assign(self, clients: Sequence[int]) -> Dict[int, Assignment]:
+        eng = self.eng
+        return {n: {"width": tier_width(eng.het, n, eng.P),
+                    "tau": eng.cfg.tau_fixed} for n in clients}
+
+
+class HeroesAssignment(AssignmentPolicy):
+    """Heroes Alg. 1: scheduler-driven width/tau + least-trained blocks.
+
+    Owns the scheduler (hidden-layer P^2 counter) and the anchored-layer
+    P-block counter shared by the boundary layers (DESIGN.md §5).
+    """
+
+    def setup(self, eng) -> None:
+        super().setup(eng)
+        model, cfg = eng.model, eng.cfg
+        self.P = next(iter(model.specs.values())).max_width
+        square_spec = next(s for s in model.specs.values() if s.mode == "square")
+        self._anch_spec = next(
+            (s for s in model.specs.values() if s.mode != "square"), None)
+        mu_max = cfg.mu_max
+        if mu_max <= 0:
+            # auto: ~10x the median width-1 iteration time, so width
+            # assignments spread across tiers at any model scale
+            med = float(np.median([
+                eng.het.iter_time(n, eng.flops_per_iter(1))
+                for n in range(cfg.num_clients)]))
+            mu_max = 10.0 * med
+        self.scheduler = HeroesScheduler(
+            square_spec,
+            SchedulerConfig(mu_max=mu_max, rho=cfg.rho,
+                            eps=cfg.eps, tau_max=cfg.tau_max),
+            iter_time_fn=lambda n, p: eng.het.iter_time(n, eng.flops_per_iter(p)),
+            comm_time_fn=lambda n, p: eng.het.upload_time(
+                n, eng.model.factorized_bytes(p)),
+        )
+        # anchored layers share a P-block counter (DESIGN.md §5)
+        self.anchored_counters = np.zeros(self.P, np.int64)
+        self.last_plan = None
+
+    # -- shared block/anchored bookkeeping ---------------------------------
+    def _charge(self, width: int, tau: int, hidden_ids: np.ndarray,
+                predefined: bool) -> Assignment:
+        """Charge the anchored counter and build one client's assignment.
+
+        ``predefined`` is the round-0 rule (Alg. 1 h=0): anchored layers
+        take the first ``width`` blocks.  Planned rounds select the
+        least-trained anchored blocks, mirroring the hidden-layer rule.
+        """
+        if predefined:
+            anch_ids: Optional[np.ndarray] = np.arange(min(width, self.P))
+        elif self._anch_spec is not None:
+            anch_ids = select_blocks(self.anchored_counters, width, self._anch_spec)
+        else:
+            anch_ids = None
+        if anch_ids is not None:
+            self.anchored_counters[anch_ids] += tau
+        return {"width": width, "tau": tau,
+                "hidden_ids": hidden_ids, "anchored_ids": anch_ids}
+
+    def assign(self, clients: Sequence[int]) -> Dict[int, Assignment]:
+        eng = self.eng
+        if eng.round == 0:
+            # h=0: identical predefined frequency, no estimates yet (Alg. 1)
+            tau = eng.cfg.tau_fixed
+            out = {}
+            for n in clients:
+                width = self.scheduler.assign_width(n)
+                ids = select_blocks(self.scheduler.counters, width,
+                                    self.scheduler.spec)
+                self.scheduler.counters[ids] += tau
+                out[n] = self._charge(width, tau, ids, predefined=True)
+            return out
+        plan = self.scheduler.plan_round(clients, eng.bound_state)
+        self.last_plan = plan
+        return {n: self._charge(a.width, a.tau, a.block_ids, predefined=False)
+                for n, a in plan.assignments.items()}

@@ -1,0 +1,171 @@
+"""Scheme registry: a paper scheme is a policy bundle, not a subclass.
+
+``@register_scheme("name")`` registers a factory returning a
+:class:`SchemeBundle` — the five-component recipe for that scheme.
+``build_engine`` instantiates the bundle into an
+:class:`~repro.fl.engine.runner.EngineRunner`, picking the trainer and
+round loop from ``FLConfig`` (``cfg.trainer`` / ``cfg.round_mode``)
+unless explicit instances are passed.
+
+Adding a scheme::
+
+    @register_scheme("my_scheme")
+    def _my_scheme() -> SchemeBundle:
+        return SchemeBundle(
+            name="my_scheme",
+            assignment=lambda: MyAssignment(),
+            payload=lambda: FactorizedPayload(),
+            aggregator=lambda: MyAggregator(),
+            factorized=True,
+            estimate=lambda cfg: cfg.estimate,
+        )
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+from repro.fl.engine.aggregators import (Aggregator, DenseMeanAggregator,
+                                         FlancAggregator, HeroesAggregator,
+                                         MaskedDenseAggregator)
+from repro.fl.engine.base import AssignmentPolicy, LocalTrainer, PayloadModel, RoundLoop
+from repro.fl.engine.loops import SemiAsyncRoundLoop, SyncRoundLoop
+from repro.fl.engine.payload import DensePayload, FactorizedPayload
+from repro.fl.engine.policies import (FullWidthAssignment, HeroesAssignment,
+                                      TierWidthAssignment)
+from repro.fl.engine.runner import EngineRunner
+from repro.fl.engine.trainers import CohortTrainer, SequentialTrainer
+from repro.fl.types import FLConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemeBundle:
+    """Per-scheme component recipe (factories, so bundles are reusable)."""
+
+    name: str
+    assignment: Callable[[], AssignmentPolicy]
+    payload: Callable[[], PayloadModel]
+    aggregator: Callable[[], Aggregator]
+    factorized: bool  # clients train (basis, coeff) factors vs dense weights
+    estimate: Callable[[FLConfig], bool]  # ship (L, sigma^2, G^2) estimates?
+
+
+SCHEMES: Dict[str, Callable[[], SchemeBundle]] = {}
+
+
+def register_scheme(name: str):
+    """Decorator registering a ``() -> SchemeBundle`` factory."""
+
+    def deco(factory: Callable[[], SchemeBundle]):
+        SCHEMES[name] = factory
+        return factory
+
+    return deco
+
+
+TRAINERS: Dict[str, Callable[[], LocalTrainer]] = {
+    "sequential": SequentialTrainer,
+    "cohort": CohortTrainer,
+}
+
+ROUND_MODES: Dict[str, Callable[[], RoundLoop]] = {
+    "sync": SyncRoundLoop,
+    "semi_async": SemiAsyncRoundLoop,
+}
+
+
+def build_engine(scheme: str, model, parts_x, parts_y, test_batch, het,
+                 cfg: FLConfig, eval_width: Optional[int] = None, *,
+                 trainer: Optional[LocalTrainer] = None,
+                 loop: Optional[RoundLoop] = None) -> EngineRunner:
+    """Instantiate a registered scheme into a ready-to-run engine."""
+    if scheme not in SCHEMES:
+        raise KeyError(f"unknown scheme {scheme!r}; have {sorted(SCHEMES)}")
+    bundle = SCHEMES[scheme]()
+    if trainer is None:
+        if cfg.trainer not in TRAINERS:
+            raise ValueError(f"unknown trainer {cfg.trainer!r}")
+        trainer = TRAINERS[cfg.trainer]()
+    if loop is None:
+        if cfg.round_mode not in ROUND_MODES:
+            raise ValueError(f"unknown round_mode {cfg.round_mode!r}")
+        loop = ROUND_MODES[cfg.round_mode]()
+    if eval_width is None:
+        eval_width = next(iter(model.specs.values())).max_width
+    return EngineRunner(
+        bundle.name, model, parts_x, parts_y, test_batch, het, cfg,
+        eval_width,
+        assignment=bundle.assignment(),
+        payload=bundle.payload(),
+        aggregator=bundle.aggregator(),
+        trainer=trainer,
+        loop=loop,
+        factorized=bundle.factorized,
+        estimate=bundle.estimate(cfg),
+    )
+
+
+# --------------------------------------------------------------------------
+# The paper's five schemes as policy bundles (Sec. VI-B)
+# --------------------------------------------------------------------------
+
+
+@register_scheme("fedavg")
+def _fedavg() -> SchemeBundle:
+    return SchemeBundle(
+        name="fedavg",
+        assignment=lambda: FullWidthAssignment(adaptive_tau=False),
+        payload=lambda: DensePayload(sliced=False),
+        aggregator=DenseMeanAggregator,
+        factorized=False,
+        estimate=lambda cfg: False,
+    )
+
+
+@register_scheme("adp")
+def _adp() -> SchemeBundle:
+    return SchemeBundle(
+        name="adp",
+        assignment=lambda: FullWidthAssignment(adaptive_tau=True),
+        payload=lambda: DensePayload(sliced=False),
+        aggregator=DenseMeanAggregator,
+        factorized=False,
+        estimate=lambda cfg: True,
+    )
+
+
+@register_scheme("heterofl")
+def _heterofl() -> SchemeBundle:
+    return SchemeBundle(
+        name="heterofl",
+        assignment=TierWidthAssignment,
+        payload=lambda: DensePayload(sliced=True),
+        aggregator=MaskedDenseAggregator,
+        factorized=False,
+        estimate=lambda cfg: False,
+    )
+
+
+@register_scheme("flanc")
+def _flanc() -> SchemeBundle:
+    return SchemeBundle(
+        name="flanc",
+        assignment=TierWidthAssignment,
+        payload=FactorizedPayload,
+        aggregator=FlancAggregator,
+        factorized=True,
+        estimate=lambda cfg: False,
+    )
+
+
+@register_scheme("heroes")
+def _heroes() -> SchemeBundle:
+    return SchemeBundle(
+        name="heroes",
+        assignment=HeroesAssignment,
+        payload=FactorizedPayload,
+        aggregator=HeroesAggregator,
+        factorized=True,
+        estimate=lambda cfg: cfg.estimate,
+    )

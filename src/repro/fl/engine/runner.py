@@ -1,0 +1,96 @@
+"""The engine runner: shared round state + component wiring.
+
+Holds everything the five components share — model, data partitions,
+heterogeneity model, virtual wall clock, traffic meter, round counter,
+bound state, global params — and delegates each concern to its
+component.  Public surface matches the legacy ``BaseRunner`` (``run``,
+``run_round``, ``run_until_budget``, ``history``, ``eval_accuracy``) so
+drivers can swap backends without changes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import convergence
+from repro.fl.engine.base import (Aggregator, AssignmentPolicy, LocalTrainer,
+                                  PayloadModel, RoundLoop)
+from repro.fl.heterogeneity import HeterogeneityModel
+from repro.fl.models import FLModelDef
+from repro.fl.types import FLConfig, RoundLog
+
+
+class EngineRunner:
+    """A scheme = five components sharing this round state."""
+
+    def __init__(self, scheme: str, model: FLModelDef, parts_x, parts_y,
+                 test_batch, het: HeterogeneityModel, cfg: FLConfig,
+                 eval_width: int, *, assignment: AssignmentPolicy,
+                 payload: PayloadModel, aggregator: Aggregator,
+                 trainer: LocalTrainer, loop: RoundLoop,
+                 factorized: bool, estimate: bool):
+        self.scheme = scheme
+        self.model = model
+        self.parts_x, self.parts_y = parts_x, parts_y
+        self.test_batch = test_batch
+        self.het = het
+        self.cfg = cfg
+        self.eval_width = eval_width
+        self.rng = np.random.default_rng(cfg.seed)
+        self.wall = 0.0
+        self.traffic = 0.0
+        self.history: List[RoundLog] = []
+        self.round = 0
+        self.P = next(iter(model.specs.values())).max_width
+        self.params: Any = None  # owned/initialised by the aggregator
+        self.factorized = factorized
+        self.estimate = estimate
+        self.bound_state = convergence.BoundState(
+            loss0=2.3, smoothness=1.0, grad_sq=1.0, noise_sq=0.5, lr=cfg.lr)
+
+        self.assignment = assignment
+        self.payload = payload
+        self.aggregator = aggregator
+        self.trainer = trainer
+        self.loop = loop
+        for comp in (assignment, payload, aggregator, trainer, loop):
+            comp.setup(self)
+        aggregator.init_global()
+
+    # --- shared helpers ---------------------------------------------------
+    def flops_per_iter(self, width: int) -> float:
+        return self.model.flops_per_sample(width) * self.cfg.batch_size
+
+    def acc_from_logits(self, logits) -> float:
+        labels = self.test_batch["labels"]
+        pred = jnp.argmax(logits, -1)
+        return float(jnp.mean((pred == labels).astype(jnp.float32)))
+
+    def eval_accuracy(self) -> float:
+        return self.aggregator.evaluate()
+
+    # --- driving ----------------------------------------------------------
+    def run_round(self) -> RoundLog:
+        return self.loop.run_round()
+
+    def run(self, rounds: int) -> List[RoundLog]:
+        for _ in range(rounds):
+            self.run_round()
+        return self.history
+
+    def run_until_budget(self, time_budget: Optional[float] = None,
+                         traffic_budget: Optional[float] = None,
+                         max_rounds: int = 10_000) -> List[RoundLog]:
+        """Paper Alg. 1 outer loop: train while T <= T^max (and/or a
+        traffic budget)."""
+        assert time_budget or traffic_budget
+        for _ in range(max_rounds):
+            if time_budget is not None and self.wall >= time_budget:
+                break
+            if traffic_budget is not None and self.traffic >= traffic_budget:
+                break
+            self.run_round()
+        return self.history

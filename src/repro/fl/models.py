@@ -17,6 +17,7 @@ list, so the same network code serves both parameterisations.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Callable, Dict, List, Tuple
 
@@ -29,8 +30,17 @@ from repro.core.composition import CompositionSpec, compose, gather_blocks, init
 Array = jax.Array
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class FLModelDef:
+    """A width-scalable FL model.
+
+    ``eq=False`` keeps object-identity hashing: model defs hold dicts and
+    closures, and the client/trainer jit caches key on *this exact model
+    instance* rather than a lossy string encoding of its constructor args.
+    The ``make_*`` factories below are memoized so equal-config models are
+    the same instance and still share compiled functions.
+    """
+
     name: str
     specs: Dict[str, CompositionSpec]  # ordered: forward consumption order
     forward: Callable  # (weights: Dict[str, Array], width, batch) -> logits
@@ -108,6 +118,7 @@ def _conv(x: Array, w3: Array, k: int, stride: int = 1) -> Array:
 # ---------------------------------------------------------------------------
 
 
+@functools.lru_cache(maxsize=None)
 def make_cnn(max_width: int = 3, base: int = 8, rank: int = 8,
              num_classes: int = 10, in_ch: int = 3) -> FLModelDef:
     specs = {
@@ -142,6 +153,7 @@ def make_cnn(max_width: int = 3, base: int = 8, rank: int = 8,
 # ---------------------------------------------------------------------------
 
 
+@functools.lru_cache(maxsize=None)
 def make_resnet(max_width: int = 3, base: int = 8, rank: int = 8,
                 num_classes: int = 10, in_ch: int = 3) -> FLModelDef:
     specs = {
@@ -178,6 +190,7 @@ def make_resnet(max_width: int = 3, base: int = 8, rank: int = 8,
 # ---------------------------------------------------------------------------
 
 
+@functools.lru_cache(maxsize=None)
 def make_rnn(max_width: int = 3, base: int = 16, rank: int = 8,
              vocab: int = 64) -> FLModelDef:
     specs = {

@@ -15,7 +15,6 @@ schemes differ:
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -23,41 +22,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation, convergence
-from repro.core.composition import select_blocks
-from repro.core.scheduler import HeroesScheduler, SchedulerConfig
 from repro.fl import client as client_lib
+from repro.fl.engine.policies import HeroesAssignment, tier_width  # noqa: F401
 from repro.fl.heterogeneity import HeterogeneityModel
 from repro.fl.models import FLModelDef
-
-
-@dataclasses.dataclass
-class RoundLog:
-    round: int
-    wall_time: float  # cumulative virtual seconds
-    traffic_bytes: float  # cumulative
-    makespan: float  # this round's T^h
-    avg_wait: float  # this round's W^h
-    mean_tau: float
-    accuracy: Optional[float] = None
-
-
-@dataclasses.dataclass
-class FLConfig:
-    num_clients: int = 100
-    clients_per_round: int = 10
-    lr: float = 0.05
-    batch_size: int = 16
-    tau_fixed: int = 10
-    eval_every: int = 5
-    seed: int = 0
-    # Heroes scheduler knobs.  eps is the convergence threshold on the
-    # mean-square-gradient bound (Eq. 22) — it lives on the scale of
-    # G^2 + 18 sigma^2, so O(1) values are the useful regime.
-    mu_max: float = 0.0  # <=0 => auto (2.5x median width-1 iter time)
-    rho: float = 2.0
-    eps: float = 1.0
-    tau_max: int = 50
-    estimate: bool = True
+from repro.fl.types import FLConfig, RoundLog  # noqa: F401  (re-exported)
 
 
 class BaseRunner:
@@ -148,17 +117,6 @@ class BaseRunner:
         labels = self.test_batch["labels"]
         pred = jnp.argmax(logits, -1)
         return float(jnp.mean((pred == labels).astype(jnp.float32)))
-
-
-# ---------------------------------------------------------------------------
-# width assignment helpers
-# ---------------------------------------------------------------------------
-
-
-def tier_width(het: HeterogeneityModel, n: int, max_width: int) -> int:
-    order = {"laptop": max_width, "agx_xavier": max(max_width - 1, 1),
-             "xavier_nx": max(max_width - 2, 1), "tx2": 1}
-    return min(order[het.clients[n].tier], max_width)
 
 
 # ---------------------------------------------------------------------------
@@ -339,54 +297,29 @@ class HeroesRunner(BaseRunner):
         self.params = self.model.init_factorized(key)
         any_spec = next(iter(self.model.specs.values()))
         self.P = any_spec.max_width
-        square_spec = next(s for s in self.model.specs.values() if s.mode == "square")
-        mu_max = self.cfg.mu_max
-        if mu_max <= 0:
-            # auto: ~10x the median width-1 iteration time, so width
-            # assignments spread across tiers at any model scale
-            med = float(np.median([
-                self.het.iter_time(n, self.flops_per_iter(1))
-                for n in range(self.cfg.num_clients)]))
-            mu_max = 10.0 * med
-        self.scheduler = HeroesScheduler(
-            square_spec,
-            SchedulerConfig(mu_max=mu_max, rho=self.cfg.rho,
-                            eps=self.cfg.eps, tau_max=self.cfg.tau_max),
-            iter_time_fn=lambda n, p: self.het.iter_time(n, self.flops_per_iter(p)),
-            comm_time_fn=lambda n, p: self.het.upload_time(
-                n, self.model.factorized_bytes(p)),
-        )
-        # anchored layers share a P-block counter (DESIGN.md §5)
-        self.anchored_counters = np.zeros(self.P, np.int64)
         self.state = convergence.BoundState(
             loss0=2.3, smoothness=1.0, grad_sq=1.0, noise_sq=0.5, lr=self.cfg.lr)
+        # assignment (scheduler + block/anchored counters) is shared with
+        # the engine: one implementation, two runners
+        self._policy = HeroesAssignment()
+        self._policy.setup(self)
+
+    # the policy reads ``bound_state``; the legacy runner stores it as
+    # ``state`` — alias, so both names stay live.
+    @property
+    def bound_state(self) -> convergence.BoundState:
+        return self.state
+
+    @property
+    def scheduler(self):
+        return self._policy.scheduler
+
+    @property
+    def anchored_counters(self):
+        return self._policy.anchored_counters
 
     def assign(self, clients):
-        if self.round == 0:
-            # h=0: identical predefined frequency, no estimates yet (Alg. 1)
-            widths = {n: self.scheduler.assign_width(n) for n in clients}
-            out = {}
-            for n in clients:
-                ids = select_blocks(self.scheduler.counters, widths[n],
-                                    self.scheduler.spec)
-                self.scheduler.counters[ids] += self.cfg.tau_fixed
-                anch_ids = np.arange(min(widths[n], self.P))
-                self.anchored_counters[anch_ids] += self.cfg.tau_fixed
-                out[n] = {"width": widths[n], "tau": self.cfg.tau_fixed,
-                          "hidden_ids": ids, "anchored_ids": anch_ids}
-            return out
-        plan = self.scheduler.plan_round(clients, self.state)
-        self._plan = plan
-        out = {}
-        for n, a in plan.assignments.items():
-            anch_spec = next(s for s in self.model.specs.values() if s.mode != "square")
-            anch_ids = select_blocks(self.anchored_counters, a.width, anch_spec) \
-                if any(s.mode != "square" for s in self.model.specs.values()) else None
-            if anch_ids is not None:
-                self.anchored_counters[anch_ids] += a.tau
-            out[n] = {"width": a.width, "tau": a.tau,
-                      "hidden_ids": a.block_ids, "anchored_ids": anch_ids}
-        return out
+        return self._policy.assign(clients)
 
     def client_payload_bytes(self, a) -> float:
         return self.model.factorized_bytes(a["width"])

@@ -10,6 +10,7 @@ import numpy as np
 
 from repro.data import (SyntheticImageTask, SyntheticTextTask,
                         class_skew_partition, dirichlet_partition)
+from repro.fl.engine import build_engine
 from repro.fl.heterogeneity import HeterogeneityModel
 from repro.fl.models import MODELS, FLModelDef, make_cnn, make_resnet, make_rnn
 from repro.fl.server import RUNNERS, FLConfig, RoundLog
@@ -44,17 +45,45 @@ def build_text_setup(num_clients: int = 100, max_width: int = 3, seed: int = 0):
     return model, parts_x, parts_y, test_batch
 
 
-def run_scheme(scheme: str, model: FLModelDef, parts_x, parts_y, test_batch,
-               rounds: int, cfg: Optional[FLConfig] = None,
-               seed: int = 0,
-               tier_weights=(0.05, 0.15, 0.30, 0.50)) -> List[RoundLog]:
-    """tier_weights follow the paper's premise: high-performance clients
-    (laptops) are a small fraction of the edge fleet — this is exactly the
-    regime where original NC starves the largest coefficient (Sec. I)."""
+def build_runner(scheme: str, model: FLModelDef, parts_x, parts_y, test_batch,
+                 cfg: Optional[FLConfig] = None, seed: int = 0,
+                 tier_weights=(0.05, 0.15, 0.30, 0.50),
+                 backend: str = "engine"):
+    """Construct a ready-to-run runner for ``scheme``.
+
+    ``backend="engine"`` routes through the layered engine registry
+    (:mod:`repro.fl.engine`), which honours the ``FLConfig`` engine knobs
+    (``trainer``, ``round_mode``).  ``backend="legacy"`` uses the original
+    monolithic runner classes in :mod:`repro.fl.server`; the two produce
+    identical histories for the synchronous sequential configuration.
+    """
     cfg = cfg or FLConfig(num_clients=len(parts_x), seed=seed)
     het = HeterogeneityModel(cfg.num_clients, seed=seed, tier_weights=tier_weights)
     eval_width = next(iter(model.specs.values())).max_width
-    runner = RUNNERS[scheme](model, parts_x, parts_y, test_batch, het, cfg, eval_width)
+    if backend == "legacy":
+        if cfg.round_mode != "sync" or cfg.trainer != "sequential":
+            raise ValueError(
+                "the legacy backend only supports round_mode='sync' and "
+                "trainer='sequential'; use backend='engine'")
+        return RUNNERS[scheme](model, parts_x, parts_y, test_batch, het, cfg,
+                               eval_width)
+    if backend != "engine":
+        raise ValueError(f"unknown backend {backend!r}")
+    return build_engine(scheme, model, parts_x, parts_y, test_batch, het, cfg,
+                        eval_width)
+
+
+def run_scheme(scheme: str, model: FLModelDef, parts_x, parts_y, test_batch,
+               rounds: int, cfg: Optional[FLConfig] = None,
+               seed: int = 0,
+               tier_weights=(0.05, 0.15, 0.30, 0.50),
+               backend: str = "engine") -> List[RoundLog]:
+    """tier_weights follow the paper's premise: high-performance clients
+    (laptops) are a small fraction of the edge fleet — this is exactly the
+    regime where original NC starves the largest coefficient (Sec. I)."""
+    runner = build_runner(scheme, model, parts_x, parts_y, test_batch,
+                          cfg=cfg, seed=seed, tier_weights=tier_weights,
+                          backend=backend)
     return runner.run(rounds)
 
 

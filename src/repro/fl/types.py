@@ -1,0 +1,53 @@
+"""Shared FL runtime types.
+
+``FLConfig`` and ``RoundLog`` are consumed by both the legacy runner tree
+(:mod:`repro.fl.server`) and the layered engine (:mod:`repro.fl.engine`);
+they live here so neither layer imports the other for its data model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class RoundLog:
+    round: int
+    wall_time: float  # cumulative virtual seconds
+    traffic_bytes: float  # cumulative
+    makespan: float  # this round's T^h
+    avg_wait: float  # this round's W^h
+    mean_tau: float
+    accuracy: Optional[float] = None
+    stale: int = 0  # results merged with staleness >= 1 (semi-async only)
+
+
+@dataclasses.dataclass
+class FLConfig:
+    num_clients: int = 100
+    clients_per_round: int = 10
+    lr: float = 0.05
+    batch_size: int = 16
+    tau_fixed: int = 10
+    eval_every: int = 5
+    seed: int = 0
+    # Heroes scheduler knobs.  eps is the convergence threshold on the
+    # mean-square-gradient bound (Eq. 22) — it lives on the scale of
+    # G^2 + 18 sigma^2, so O(1) values are the useful regime.
+    mu_max: float = 0.0  # <=0 => auto (10x median width-1 iter time)
+    rho: float = 2.0
+    eps: float = 1.0
+    tau_max: int = 50
+    estimate: bool = True
+    # --- engine knobs (repro.fl.engine) ---------------------------------
+    # Local-training backend: "sequential" (one jit dispatch per client,
+    # bitwise-identical to the legacy runners) or "cohort" (clients with
+    # the same (width, batch) stacked into one vmap+scan compiled step).
+    trainer: str = "sequential"
+    # Round event loop: "sync" (paper Eq. 19 makespan round) or
+    # "semi_async" (aggregate the fastest K of M; stragglers merge later
+    # with a staleness-discounted weight).
+    round_mode: str = "sync"
+    async_k: int = 0  # K for semi_async; 0 => max(1, clients_per_round // 2)
+    staleness_decay: float = 0.5  # weight = decay ** staleness

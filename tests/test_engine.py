@@ -1,0 +1,198 @@
+"""Tests for the layered FL engine (repro.fl.engine).
+
+Covers: same-seed parity legacy-vs-registry for every scheme, the
+batched-cohort vs sequential trainer equivalence, the semi-async round
+loop, registry extensibility, and the model-identity jit-cache fix.
+"""
+
+import numpy as np
+import pytest
+
+from repro.fl import FLConfig, build_image_setup, build_runner, run_scheme
+from repro.fl.engine import (CohortTrainer, SchemeBundle, SequentialTrainer,
+                             build_engine, register_scheme)
+from repro.fl.engine.registry import SCHEMES
+from repro.fl.models import make_cnn
+from repro.fl.server import RUNNERS
+
+
+@pytest.fixture(scope="module")
+def image_setup():
+    return build_image_setup(num_clients=10, seed=0)
+
+
+def _cfg(**kw):
+    base = dict(num_clients=10, clients_per_round=4, eval_every=2,
+                tau_fixed=4, tau_max=15, estimate=True)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _assert_history_parity(ha, hb, acc_atol=1e-4):
+    assert len(ha) == len(hb)
+    for a, b in zip(ha, hb):
+        # traffic / virtual clock must match exactly
+        assert a.round == b.round
+        assert a.wall_time == b.wall_time
+        assert a.traffic_bytes == b.traffic_bytes
+        assert a.makespan == b.makespan
+        assert a.avg_wait == b.avg_wait
+        assert a.mean_tau == b.mean_tau
+        assert (a.accuracy is None) == (b.accuracy is None)
+        if a.accuracy is not None:
+            assert abs(a.accuracy - b.accuracy) <= acc_atol
+
+
+# ---------------------------------------------------------------------------
+# same-seed parity: legacy RUNNERS vs engine registry bundles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", sorted(SCHEMES))
+def test_engine_matches_legacy(scheme, image_setup):
+    model, px, py, test = image_setup
+    h_legacy = run_scheme(scheme, model, px, py, test, rounds=4, cfg=_cfg(),
+                          backend="legacy")
+    h_engine = run_scheme(scheme, model, px, py, test, rounds=4, cfg=_cfg(),
+                          backend="engine")
+    _assert_history_parity(h_legacy, h_engine)
+
+
+def test_legacy_entry_points_still_work(image_setup):
+    model, px, py, test = image_setup
+    cfg = _cfg()
+    from repro.fl.heterogeneity import HeterogeneityModel
+    het = HeterogeneityModel(cfg.num_clients, seed=0)
+    runner = RUNNERS["heroes"](model, px, py, test, het, cfg, 3)
+    hist = runner.run(2)
+    assert len(hist) == 2
+    # the deduplicated assignment path still exposes the scheduler state
+    assert runner.scheduler.counters.sum() > 0
+    assert runner.anchored_counters.sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# cohort trainer vs sequential trainer
+# ---------------------------------------------------------------------------
+
+
+def test_cohort_trainer_matches_sequential_results(image_setup):
+    """Same assignments, same data order: the vmapped cohort step must
+    reproduce the per-client sequential updates (up to float assoc)."""
+    model, px, py, test = image_setup
+    cfg = _cfg()
+    eng = build_runner("heroes", model, px, py, test, cfg=cfg)
+    assigns = eng.assignment.assign(list(range(4)))
+
+    seq, coh = SequentialTrainer(), CohortTrainer()
+    seq.setup(eng)
+    coh.setup(eng)
+    r_seq = seq.train_all(assigns)
+    r_coh = coh.train_all(assigns)
+
+    assert list(r_seq) == list(r_coh)
+    for n in r_seq:
+        a, b = r_seq[n], r_coh[n]
+        import jax
+        for la, lb in zip(jax.tree_util.tree_leaves(a.params),
+                          jax.tree_util.tree_leaves(b.params)):
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       atol=1e-5, rtol=1e-4)
+        assert abs(a.loss_before - b.loss_before) < 1e-4
+        assert abs(a.loss_after - b.loss_after) < 1e-4
+        for k in a.estimates:
+            np.testing.assert_allclose(a.estimates[k], b.estimates[k],
+                                       atol=1e-3, rtol=1e-2)
+
+
+def test_cohort_backend_end_to_end(image_setup):
+    """Full runs: cohort and sequential backends agree on the virtual
+    clock/traffic exactly and on accuracy within tolerance."""
+    model, px, py, test = image_setup
+    h_seq = run_scheme("fedavg", model, px, py, test, rounds=3, cfg=_cfg())
+    h_coh = run_scheme("fedavg", model, px, py, test, rounds=3,
+                       cfg=_cfg(trainer="cohort"))
+    _assert_history_parity(h_seq, h_coh, acc_atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# semi-async round loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", ["fedavg", "heroes"])
+def test_semi_async_round_mode(scheme, image_setup):
+    model, px, py, test = image_setup
+    cfg = _cfg(round_mode="semi_async", async_k=2, eval_every=4)
+    hist = run_scheme(scheme, model, px, py, test, rounds=8, cfg=cfg)
+    assert len(hist) == 8
+    walls = [h.wall_time for h in hist]
+    assert all(b > a for a, b in zip(walls, walls[1:])), "wall clock not monotone"
+    assert all(h.makespan > 0 and h.avg_wait >= 0 for h in hist)
+    # with K < M, stragglers must land in later rounds as stale merges
+    assert sum(h.stale for h in hist) > 0, "no staleness events logged"
+    accs = [h.accuracy for h in hist if h.accuracy is not None]
+    assert accs and np.isfinite(accs[-1])
+    traffics = [h.traffic_bytes for h in hist]
+    assert all(b >= a for a, b in zip(traffics, traffics[1:]))
+
+
+def test_semi_async_legacy_backend_rejected(image_setup):
+    model, px, py, test = image_setup
+    with pytest.raises(ValueError):
+        run_scheme("fedavg", model, px, py, test, rounds=1,
+                   cfg=_cfg(round_mode="semi_async"), backend="legacy")
+
+
+# ---------------------------------------------------------------------------
+# registry extensibility
+# ---------------------------------------------------------------------------
+
+
+def test_register_custom_scheme(image_setup):
+    """A new scheme is a bundle, not a runner subclass."""
+    from repro.fl.engine import (DenseMeanAggregator, DensePayload,
+                                 TierWidthAssignment)
+
+    @register_scheme("_test_tiered_fedavg")
+    def _bundle():
+        return SchemeBundle(
+            name="_test_tiered_fedavg",
+            assignment=TierWidthAssignment,
+            payload=lambda: DensePayload(sliced=False),
+            aggregator=DenseMeanAggregator,
+            factorized=False,
+            estimate=lambda cfg: False,
+        )
+
+    try:
+        model, px, py, test = image_setup
+        hist = run_scheme("_test_tiered_fedavg", model, px, py, test,
+                          rounds=1, cfg=_cfg())
+        assert len(hist) == 1 and hist[0].traffic_bytes > 0
+    finally:
+        SCHEMES.pop("_test_tiered_fedavg", None)
+
+
+# ---------------------------------------------------------------------------
+# jit-cache identity fix (repro.fl.client._jitted_fns)
+# ---------------------------------------------------------------------------
+
+
+def test_client_jit_cache_distinguishes_model_kwargs():
+    """Two CNNs differing only in a constructor kwarg the old string key
+    dropped (in_ch) must not share compiled functions."""
+    import jax
+    from repro.fl import client as client_lib
+
+    rng = np.random.default_rng(0)
+    for in_ch in (3, 1):
+        model = make_cnn(max_width=2, in_ch=in_ch)
+        params = model.init_factorized(jax.random.PRNGKey(0))
+        x = rng.normal(size=(8, 8, 8, in_ch)).astype(np.float32)
+        y = rng.integers(0, 10, size=8)
+        res = client_lib.local_train(
+            model, params, 2, 2, x, y, 0.05,
+            np.random.default_rng(1), batch_size=4,
+            factorized=True, estimate=False)
+        assert np.isfinite(res.loss_after)
