@@ -1,0 +1,150 @@
+"""Aggregation benchmark: host scatter loop vs compiled collective merge.
+
+Times the Heroes block-wise merge (Eq. 5, basis mean + masked block
+mean) on a synthetic multi-layer coefficient workload at growing cohort
+sizes.  The host path is the per-client eager loop the engine used
+before the collective backend (one ``at[ids].add`` scatter dispatch per
+client per layer — O(K) dispatches per merge); the collective path
+stacks dense zero-padded contributions on the host and merges the whole
+cohort in ONE compiled call (``CollectiveMerger.merge_factorized``).
+Writes ``BENCH_aggregation.json`` next to the repo root.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_aggregation.py [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+class _Spec:
+    mode = "square"
+
+
+def make_workload(k: int, p: int = 4, rank: int = 16, out: int = 32,
+                  layers: int = 4, seed: int = 0):
+    """K clients, each training a random width-w subset of P^2 blocks."""
+    from repro.fl.client import ClientResult
+
+    rng = np.random.default_rng(seed)
+    nb = p * p
+    names = [f"layer{i}" for i in range(layers)]
+    prev = {
+        name: {
+            "basis": jax.numpy.asarray(
+                rng.normal(size=(p, rank, out)).astype(np.float32)),
+            "coeff": jax.numpy.asarray(
+                rng.normal(size=(nb, rank, out)).astype(np.float32)),
+        }
+        for name in names
+    }
+    results, assigns = {}, {}
+    for n in range(k):
+        width = int(rng.integers(1, p + 1))
+        m = width * width
+        ids = np.sort(rng.choice(nb, size=m, replace=False))
+        params = {
+            name: {
+                "basis": rng.normal(size=(p, rank, out)).astype(np.float32),
+                "coeff": rng.normal(size=(m, rank, out)).astype(np.float32),
+            }
+            for name in names
+        }
+        results[n] = ClientResult(params, {}, 0.0, 0.0)
+        assigns[n] = {"hidden_ids": ids}
+    specs = {name: _Spec() for name in names}
+    return prev, specs, results, assigns
+
+
+def merge_host(prev, specs, results, assigns):
+    """The pre-collective engine merge: per-layer eager scatter loop."""
+    from repro.core import aggregation
+
+    new = {}
+    for name in specs:
+        new[name] = {
+            "basis": aggregation.aggregate_basis(
+                [r.params[name]["basis"] for r in results.values()]),
+            "coeff": aggregation.aggregate_coefficient(
+                prev[name]["coeff"],
+                [r.params[name]["coeff"] for r in results.values()],
+                [np.asarray(assigns[n]["hidden_ids"]) for n in results],
+            ),
+        }
+    return new
+
+
+def _block(tree):
+    jax.block_until_ready(jax.tree_util.tree_leaves(tree))
+
+
+def bench(k: int, reps: int, warmup: int) -> dict:
+    from repro.fl.engine.collective import CollectiveMerger
+
+    prev, specs, results, assigns = make_workload(k)
+    merger = CollectiveMerger()
+
+    for fn in (lambda: merge_host(prev, specs, results, assigns),
+               lambda: merger.merge_factorized(prev, specs, results,
+                                               assigns)):
+        for _ in range(warmup):
+            _block(fn())
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _block(merge_host(prev, specs, results, assigns))
+    host_s = (time.perf_counter() - t0) / reps
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _block(merger.merge_factorized(prev, specs, results, assigns))
+    coll_s = (time.perf_counter() - t0) / reps
+
+    return {"clients": k, "host_ms": host_s * 1e3,
+            "collective_ms": coll_s * 1e3, "speedup": host_s / coll_s}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller cohorts / fewer reps (CI smoke)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: repo-root "
+                         "BENCH_aggregation.json)")
+    args = ap.parse_args()
+    cohorts = (10, 50) if args.fast else (10, 50, 200)
+    reps = 3 if args.fast else 10
+
+    results = []
+    for k in cohorts:
+        r = bench(k, reps=reps, warmup=2)
+        results.append(r)
+        print(f"K={k:4d}  host {r['host_ms']:8.1f} ms   "
+              f"collective {r['collective_ms']:8.1f} ms   "
+              f"speedup {r['speedup']:.1f}x")
+
+    out = {
+        "benchmark": "aggregation_host_vs_collective",
+        "setup": {"layers": 4, "max_width": 4, "num_blocks": 16,
+                  "rank": 16, "out": 32,
+                  "devices": len(jax.devices()),
+                  "reps": reps},
+        "results": results,
+    }
+    path = Path(args.out) if args.out else \
+        Path(__file__).resolve().parents[1] / "BENCH_aggregation.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

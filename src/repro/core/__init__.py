@@ -15,7 +15,10 @@ from repro.core.aggregation import (  # noqa: F401
     aggregate_coefficient,
     aggregate_factorized,
     masked_block_mean,
+    masked_block_merge,
+    ordered_sum,
     scatter_contribution,
+    scatter_contributions_host,
 )
 from repro.core.convergence import BoundState, bound, solve_rounds, tau_star, total_time  # noqa: F401
 from repro.core.scheduler import (  # noqa: F401

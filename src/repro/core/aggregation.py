@@ -15,17 +15,44 @@ Two implementations:
                             mesh-native formulation used by the distributed
                             launcher (identical math, shardable on the data
                             axis).
+``masked_block_merge``    — stacked form of the same rule: contributions
+                            laid out on a leading client axis, accumulated
+                            with a fixed left-to-right ``ordered_sum`` so a
+                            single compiled call reproduces the host scatter
+                            loop *bitwise*, optionally followed by a
+                            ``psum`` when the client axis is sharded over a
+                            device mesh (``axis_name``).
+
+Bitwise contract: floating-point addition is not associative, so any
+reduction that wants to reproduce the host loop exactly must add client
+contributions in the same order the host loop did.  ``ordered_sum`` is
+that reduction (a ``lax.scan`` fold — XLA's ``reduce`` is free to
+re-associate and measurably does on CPU); zero-padded rows are exact
+no-ops under IEEE addition, which is what makes the dense zero-padded
+contribution form equivalent to the sparse scatter form.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 Array = jax.Array
+
+
+def ordered_sum(stacked: Array) -> Array:
+    """Sum over the leading axis with fixed left-to-right association.
+
+    Bitwise-identical to the eager loop ``acc = acc + stacked[k]`` (and,
+    with zero-padded contributions, to ``acc.at[ids].add(blocks)`` host
+    scatters in the same client order) — unlike ``jnp.sum``, whose
+    reduce order XLA may re-associate.
+    """
+    init = jnp.zeros_like(stacked[0])
+    return jax.lax.scan(lambda acc, x: (acc + x, None), init, stacked)[0]
 
 
 def aggregate_basis(
@@ -66,7 +93,10 @@ def aggregate_coefficient(
         ``w * blocks + (1 - w) * global[ids]`` before the block mean.
 
     Returns:
-      New complete coefficient; untrained blocks unchanged.
+      New complete coefficient in ``global_coeff.dtype`` (the per-block
+      counters are kept in float32 — exact for any realistic cohort — and
+      cast to the coefficient dtype only for the division, so bf16/f16
+      coefficients are not silently upcast); untrained blocks unchanged.
     """
     num_blocks = global_coeff.shape[0]
     acc = jnp.zeros_like(global_coeff)
@@ -81,7 +111,7 @@ def aggregate_coefficient(
         acc = acc.at[ids].add(blocks)
         cnt = cnt.at[ids].add(1.0)
     trained = cnt > 0
-    denom = jnp.where(trained, cnt, 1.0)[:, None, None]
+    denom = jnp.where(trained, cnt, 1.0)[:, None, None].astype(acc.dtype)
     mean = acc / denom
     return jnp.where(trained[:, None, None], mean, global_coeff)
 
@@ -113,12 +143,43 @@ def aggregate_factorized(
 def scatter_contribution(
     updated_blocks: Array, block_ids: Array, num_blocks: int
 ) -> tuple[Array, Array]:
-    """Client-side: dense zero-padded contribution + mask for masked psum."""
+    """Client-side: dense zero-padded contribution + mask for masked psum.
+
+    ``block_ids`` with duplicates contribute additively (matching the
+    host path's ``at[ids].add``): the dense row receives the sum of the
+    duplicate rows and the mask counts each occurrence.
+    """
     r, o = updated_blocks.shape[-2:]
-    dense = jnp.zeros((num_blocks, r, o), updated_blocks.dtype).at[block_ids].set(
+    dense = jnp.zeros((num_blocks, r, o), updated_blocks.dtype).at[block_ids].add(
         updated_blocks
     )
-    mask = jnp.zeros((num_blocks,), jnp.float32).at[block_ids].set(1.0)
+    mask = jnp.zeros((num_blocks,), jnp.float32).at[block_ids].add(1.0)
+    return dense, mask
+
+
+def scatter_contributions_host(
+    client_blocks: Sequence[np.ndarray],
+    client_block_ids: Sequence[np.ndarray],
+    num_blocks: int,
+    dtype=None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack per-client dense contributions + masks on the host.
+
+    One numpy pass instead of ``2K`` eager device scatters; the result is
+    shipped to the device once and merged in a single compiled call.
+    Duplicate ids within a client accumulate (``np.add.at``), matching
+    the host scatter loop.
+    """
+    k = len(client_blocks)
+    first = np.asarray(client_blocks[0])
+    r, o = first.shape[-2:]
+    dense = np.zeros((k, num_blocks, r, o),
+                     dtype or first.dtype)
+    mask = np.zeros((k, num_blocks), np.float32)
+    for j, (blocks, ids) in enumerate(zip(client_blocks, client_block_ids)):
+        ids = np.asarray(ids)
+        np.add.at(dense[j], ids, np.asarray(blocks, dtype=dense.dtype))
+        np.add.at(mask[j], ids, 1.0)
     return dense, mask
 
 
@@ -132,5 +193,32 @@ def masked_block_mean(
     total = jax.lax.psum(dense_contrib, axis_name)
     count = jax.lax.psum(mask, axis_name)
     trained = count > 0
-    denom = jnp.where(trained, count, 1.0)[:, None, None]
+    denom = jnp.where(trained, count, 1.0)[:, None, None].astype(total.dtype)
     return jnp.where(trained[:, None, None], total / denom, prev_coeff)
+
+
+def masked_block_merge(
+    dense_stack: Array, mask_stack: Array, prev_coeff: Array,
+    axis_name: Optional[str] = None,
+) -> Array:
+    """Eq. (5) over a stacked client axis: ordered local fold, then psum.
+
+    ``dense_stack``/``mask_stack`` carry the (local shard of the) client
+    axis in front.  Without ``axis_name`` this is the single-device form
+    and reproduces :func:`aggregate_coefficient` with ``weights=None``
+    *bitwise* (same left-to-right addition order; zero-padded rows are
+    exact no-ops).  With ``axis_name`` the local partial sums are
+    combined with ``psum`` — clients sharded over a mesh axis — which
+    re-associates across devices (parity to float tolerance).
+
+    Returns the merged coefficient in ``prev_coeff.dtype``.
+    """
+    total = ordered_sum(dense_stack)
+    count = ordered_sum(mask_stack)
+    if axis_name is not None:
+        total = jax.lax.psum(total, axis_name)
+        count = jax.lax.psum(count, axis_name)
+    trained = count > 0
+    denom = jnp.where(trained, count, 1.0)[:, None, None].astype(total.dtype)
+    mean = total / denom
+    return jnp.where(trained[:, None, None], mean, prev_coeff)

@@ -9,6 +9,15 @@ blended toward the *current* global state::
 
 so a fully fresh client (w=1) merges exactly as in the synchronous rule
 and an infinitely stale one (w=0) is a no-op.
+
+Two merge backends share each rule: the default *collective* path
+(``eng.merger``, repro.fl.engine.collective) stacks the cohort's dense
+zero-padded contributions and merges them in ONE compiled call —
+sharded over a client device axis when a mesh is present — and the
+*host* path (``_aggregate_host``, selected with
+``FLConfig(agg_backend="host")``) keeps the original per-client eager
+scatter loops as the independent parity reference.  On one device the
+two are bitwise-identical with ``weights=None``.
 """
 
 from __future__ import annotations
@@ -43,6 +52,15 @@ class DenseMeanAggregator(Aggregator):
 
     def aggregate(self, results, assigns, weights=None) -> None:
         eng = self.eng
+        if eng.merger is not None:
+            eng.params = eng.merger.merge_dense_mean(eng.params, results,
+                                                     weights)
+        else:
+            self._aggregate_host(results, weights)
+        self._update_bound(results)
+
+    def _aggregate_host(self, results, weights) -> None:
+        eng = self.eng
         ws = _weight_list(results, weights)
         if ws is None:
             stacked = [r.params for r in results.values()]
@@ -55,7 +73,6 @@ class DenseMeanAggregator(Aggregator):
         eng.params = jax.tree_util.tree_map(
             lambda *xs: jnp.mean(jnp.stack(xs), 0), *stacked
         )
-        self._update_bound(results)
 
     def _update_bound(self, results) -> None:
         eng = self.eng
@@ -87,6 +104,15 @@ class MaskedDenseAggregator(DenseMeanAggregator):
 
     def aggregate(self, results, assigns, weights=None) -> None:
         eng = self.eng
+        if eng.merger is not None:
+            eng.params = eng.merger.merge_masked_dense(eng.params, results,
+                                                       weights)
+        else:
+            self._aggregate_host(results, weights)
+        self._update_bound(results)
+
+    def _aggregate_host(self, results, weights) -> None:
+        eng = self.eng
         new = {}
         for name in eng.params:
             full = eng.params[name]
@@ -104,7 +130,6 @@ class MaskedDenseAggregator(DenseMeanAggregator):
             covered = cnt > 0
             new[name] = jnp.where(covered, acc / jnp.maximum(cnt, 1), full)
         eng.params = new
-        self._update_bound(results)
 
 
 class FlancAggregator(Aggregator):
@@ -131,6 +156,16 @@ class FlancAggregator(Aggregator):
                 for name in self.basis}
 
     def aggregate(self, results, assigns, weights=None) -> None:
+        eng = self.eng
+        if eng.merger is not None:
+            widths = {n: assigns[n]["width"] for n in results}
+            self.basis, self.coeffs = eng.merger.merge_flanc(
+                self.basis, self.coeffs, results, widths, weights)
+            eng.params = {"basis": self.basis, "coeffs": self.coeffs}
+            return
+        self._aggregate_host(results, assigns, weights)
+
+    def _aggregate_host(self, results, assigns, weights) -> None:
         def blend(n, name, key, prev):
             v = results[n].params[name][key]
             if weights is None:
@@ -176,6 +211,25 @@ class HeroesAggregator(Aggregator):
 
     def aggregate(self, results, assigns, weights=None) -> None:
         eng = self.eng
+        if eng.merger is not None:
+            eng.params = eng.merger.merge_factorized(
+                eng.params, eng.model.specs, results, assigns, weights)
+        else:
+            self._aggregate_host(results, assigns, weights)
+        ests = [r.estimates for r in results.values() if r.estimates]
+        if ests:
+            mean = {k: float(np.mean([e[k] for e in ests])) for k in ests[0]}
+            eng.bound_state = convergence.BoundState(
+                loss0=max(float(np.mean(
+                    [r.loss_after for r in results.values()])), 1e-3),
+                smoothness=float(np.clip(mean.get("L", 1.0), 1e-3, 1e3)),
+                grad_sq=mean.get("grad_sq", 1.0),
+                noise_sq=mean.get("sigma_sq", 0.5),
+                lr=eng.cfg.lr,
+            )
+
+    def _aggregate_host(self, results, assigns, weights) -> None:
+        eng = self.eng
         ws = _weight_list(results, weights)
         new = {}
         for name, spec in eng.model.specs.items():
@@ -192,17 +246,6 @@ class HeroesAggregator(Aggregator):
                 ),
             }
         eng.params = new
-        ests = [r.estimates for r in results.values() if r.estimates]
-        if ests:
-            mean = {k: float(np.mean([e[k] for e in ests])) for k in ests[0]}
-            eng.bound_state = convergence.BoundState(
-                loss0=max(float(np.mean(
-                    [r.loss_after for r in results.values()])), 1e-3),
-                smoothness=float(np.clip(mean.get("L", 1.0), 1e-3, 1e3)),
-                grad_sq=mean.get("grad_sq", 1.0),
-                noise_sq=mean.get("sigma_sq", 0.5),
-                lr=eng.cfg.lr,
-            )
 
     def evaluate(self) -> float:
         # evaluate the width-``eval_width`` sub-model built from the first

@@ -66,6 +66,12 @@ class Aggregator(Component):
     contribution is blended as ``w * update + (1 - w) * current_global``
     before the scheme's own merge rule runs, so ``weights=None`` (or all
     ones) reproduces the synchronous rule bitwise.
+
+    Merges run through the engine's collective backend (``eng.merger``,
+    one compiled call per round, clients on a device axis when a mesh is
+    present — staleness weights included) unless
+    ``FLConfig(agg_backend="host")`` selects the per-client eager
+    scatter loop kept as the parity reference.
     """
 
     def init_global(self) -> None:
@@ -88,7 +94,13 @@ class Aggregator(Component):
 
 
 class LocalTrainer(Component):
-    """Runs the local updates for every assigned client of one dispatch."""
+    """Runs the local updates for every assigned client of one dispatch.
+
+    Returned ``ClientResult.params`` trees are host-resident (numpy):
+    the collective aggregation backend scatters them into dense
+    zero-padded contributions + masks on the host and ships the stacked
+    cohort to the device in one transfer per round.
+    """
 
     def train_all(self, assigns: Dict[int, Assignment]) -> Dict[int, ClientResult]:
         raise NotImplementedError

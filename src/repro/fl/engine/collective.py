@@ -1,0 +1,438 @@
+"""Collective aggregation backend: one compiled merge per round.
+
+The host aggregators merge a cohort with a Python loop of per-client
+eager scatters — O(K) dispatches per layer, and the server state can
+never leave one device.  This backend makes the paper's block-wise merge
+(Eq. 5) the mesh-native ``masked_block_mean`` path end to end:
+
+  1. *prep* (host, numpy): every client result is turned into a dense
+     zero-padded contribution + mask (``scatter_contributions_host``) —
+     the contract from ``repro.core.aggregation``.  Staleness weights
+     (semi-async) are blended here, client-side, exactly as the host
+     rule does: ``w * update + (1 - w) * global``.
+  2. *merge* (device, compiled): ONE jit call per round folds the
+     stacked contributions with a fixed left-to-right ``ordered_sum``
+     and divides by the mask counts.  On a multi-device mesh the client
+     axis is laid out on ``sharding.fl.COHORT_AXIS`` via ``shard_map``
+     and the partial sums meet in a ``jax.lax.psum``; merged
+     coefficient tensors can stay *sharded over their block axis*
+     (``shard_blocks``, per tensor where the block count divides the
+     mesh) so the server state scales past one device.
+
+Bitwise contract: on a single device the merged state is bitwise-equal
+to the host aggregators with ``weights=None`` — the ordered fold adds
+the same values in the same order (zero rows are IEEE no-ops), the
+basis/dense means lower to the identical ``jnp.mean`` reduce, and all
+staleness blends run in numpy float32 (same correctly-rounded ops the
+host's eager blend uses).  Across devices the psum re-associates the
+fold, so multi-device parity is to float tolerance.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, FrozenSet, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+
+from repro.core import aggregation
+from repro.sharding import fl as flsh
+
+
+def _np_blend(update, w: float, prev):
+    """Numpy mirror of the host blend ``w * update + (1 - w) * prev``.
+
+    Scalars are cast to the update dtype first (matching jax weak-typed
+    promotion) and ``1 - w`` is rounded from the python double exactly
+    like the host's eager ``(1.0 - w) * prev``.
+    """
+    update = np.asarray(update)
+    dt = update.dtype.type
+    return dt(w) * update + dt(1.0 - w) * np.asarray(prev, update.dtype)
+
+
+def _weight_of(weights: Optional[Dict[int, float]], n: int) -> Optional[float]:
+    if weights is None:
+        return None
+    return float(weights.get(n, 1.0))
+
+
+def _pad_rows(stack: np.ndarray, k_pad: int) -> np.ndarray:
+    """Zero-pad the leading client axis to ``k_pad`` rows."""
+    if stack.shape[0] == k_pad:
+        return stack
+    pad = [(0, k_pad - stack.shape[0])] + [(0, 0)] * (stack.ndim - 1)
+    return np.pad(stack, pad)
+
+
+# ---------------------------------------------------------------------------
+# single-device compiled merges (bitwise vs the host loops), jitted once at
+# module level so every merger shares one trace cache
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _fact_1d(stacked):
+    """{name: {bases, dense, mask, prev}} -> {name: {basis, coeff}}."""
+    return {
+        name: {
+            "basis": jnp.mean(t["bases"], 0),
+            "coeff": aggregation.masked_block_merge(
+                t["dense"], t["mask"], t["prev"]),
+        }
+        for name, t in stacked.items()
+    }
+
+
+@jax.jit
+def _mean_1d(stacked):
+    """Plain mean over the client axis, leaf-wise (FedAvg/ADP)."""
+    return jax.tree_util.tree_map(lambda x: jnp.mean(x, 0), stacked)
+
+
+@jax.jit
+def _masked_1d(stacked):
+    """{name: {padded, cnt, prev}} -> {name: merged} (HeteroFL)."""
+    out = {}
+    for name, t in stacked.items():
+        acc = aggregation.ordered_sum(t["padded"])
+        cnt = aggregation.ordered_sum(t["cnt"])
+        out[name] = jnp.where(cnt > 0, acc / jnp.maximum(cnt, 1), t["prev"])
+    return out
+
+
+@jax.jit
+def _flanc_1d(stacked):
+    """Basis mean over all clients + per-width coefficient means."""
+    basis = {name: jnp.mean(b, 0) for name, b in stacked["bases"].items()}
+    coeffs = {
+        p: {name: jnp.mean(c, 0) for name, c in group.items()}
+        for p, group in stacked["groups"].items()
+    }
+    return basis, coeffs
+
+
+class CollectiveMerger:
+    """Owns the compiled merge functions for one engine instance.
+
+    ``mesh=None`` is the single-device fallback (bitwise vs the host
+    path); with a mesh, clients ride the ``COHORT_AXIS`` and merges run
+    under ``shard_map`` + ``psum``.  ``shard_blocks=True`` keeps merged
+    coefficient tensors sharded over their block axis, per tensor,
+    wherever the block count divides the mesh.
+    """
+
+    def __init__(self, mesh=None, shard_blocks: bool = False):
+        self.mesh = mesh
+        self.shard_blocks = shard_blocks and mesh is not None
+        # mesh merge fns, built lazily per variant; a plain instance dict
+        # (not lru_cache-on-method, which would pin the merger + its
+        # executables in a class-level cache for the process lifetime)
+        self._mesh_fns: Dict[Any, Any] = {}
+
+    # -- mesh (shard_map) merge builders -----------------------------------
+
+    def _mesh_fact_fn(self, shard_names: FrozenSet[str]):
+        key = ("fact", shard_names)
+        if key in self._mesh_fns:
+            return self._mesh_fns[key]
+        mesh, axis = self.mesh, flsh.COHORT_AXIS
+        ndev = mesh.devices.size
+        contrib, repl = flsh.contribution_spec(), flsh.replicated_spec()
+
+        def per_device(stacked, k_real):
+            out = {}
+            for name, t in stacked.items():
+                bsum = jax.lax.psum(aggregation.ordered_sum(t["bases"]), axis)
+                basis = bsum / k_real.astype(bsum.dtype)
+                coeff = aggregation.masked_block_merge(
+                    t["dense"], t["mask"], t["prev"], axis_name=axis)
+                if name in shard_names:
+                    per = coeff.shape[0] // ndev
+                    idx = jax.lax.axis_index(axis)
+                    coeff = jax.lax.dynamic_slice_in_dim(
+                        coeff, idx * per, per, axis=0)
+                out[name] = {"basis": basis, "coeff": coeff}
+            return out
+
+        per_name_in = {"bases": contrib, "dense": contrib, "mask": contrib,
+                       "prev": repl}
+
+        def merge(stacked, k_real):
+            f = shard_map(
+                per_device, mesh=mesh,
+                in_specs=({n: per_name_in for n in stacked}, repl),
+                out_specs={n: {"basis": repl,
+                               "coeff": flsh.block_spec()
+                               if n in shard_names else repl}
+                           for n in stacked})
+            return f(stacked, k_real)
+
+        fn = jax.jit(merge)
+        self._mesh_fns[key] = fn
+        return fn
+
+    def _mesh_mean_fn(self):
+        if "mean" in self._mesh_fns:
+            return self._mesh_fns["mean"]
+        mesh, axis = self.mesh, flsh.COHORT_AXIS
+        contrib, repl = flsh.contribution_spec(), flsh.replicated_spec()
+
+        def per_device(stacked, k_real):
+            return jax.tree_util.tree_map(
+                lambda x: jax.lax.psum(aggregation.ordered_sum(x), axis)
+                / k_real.astype(x.dtype), stacked)
+
+        def merge(stacked, k_real):
+            f = shard_map(
+                per_device, mesh=mesh,
+                in_specs=(jax.tree_util.tree_map(lambda _: contrib, stacked),
+                          repl),
+                out_specs=jax.tree_util.tree_map(lambda _: repl, stacked))
+            return f(stacked, k_real)
+
+        fn = jax.jit(merge)
+        self._mesh_fns["mean"] = fn
+        return fn
+
+    def _mesh_masked_fn(self):
+        if "masked" in self._mesh_fns:
+            return self._mesh_fns["masked"]
+        mesh, axis = self.mesh, flsh.COHORT_AXIS
+        contrib, repl = flsh.contribution_spec(), flsh.replicated_spec()
+
+        def per_device(stacked):
+            out = {}
+            for name, t in stacked.items():
+                acc = jax.lax.psum(aggregation.ordered_sum(t["padded"]), axis)
+                cnt = jax.lax.psum(aggregation.ordered_sum(t["cnt"]), axis)
+                out[name] = jnp.where(cnt > 0, acc / jnp.maximum(cnt, 1),
+                                      t["prev"])
+            return out
+
+        def merge(stacked):
+            per_in = {"padded": contrib, "cnt": contrib, "prev": repl}
+            f = shard_map(per_device, mesh=mesh,
+                          in_specs=({n: per_in for n in stacked},),
+                          out_specs={n: repl for n in stacked})
+            return f(stacked)
+
+        fn = jax.jit(merge)
+        self._mesh_fns["masked"] = fn
+        return fn
+
+    def _mesh_flanc_fn(self):
+        if "flanc" in self._mesh_fns:
+            return self._mesh_fns["flanc"]
+        mesh, axis = self.mesh, flsh.COHORT_AXIS
+        contrib, repl = flsh.contribution_spec(), flsh.replicated_spec()
+
+        def per_device(stacked, k_real):
+            basis = {
+                name: jax.lax.psum(aggregation.ordered_sum(b), axis)
+                / k_real.astype(b.dtype)
+                for name, b in stacked["bases"].items()
+            }
+            onehot = stacked["onehot"]  # (K_local, P)
+            coeffs = {}
+            for p, group in stacked["prevs"].items():
+                sel = jax.lax.psum(jnp.sum(onehot[:, p - 1]), axis)
+                coeffs[p] = {}
+                for name, prev in group.items():
+                    total = jax.lax.psum(
+                        jnp.einsum("k,k...->...", onehot[:, p - 1],
+                                   stacked["dense"][name]), axis)
+                    nb = prev.shape[0]
+                    mean = total[:nb] / jnp.maximum(sel, 1).astype(total.dtype)
+                    coeffs[p][name] = jnp.where(sel > 0, mean, prev)
+            return basis, coeffs
+
+        def merge(stacked, k_real):
+            in_specs = ({
+                "bases": {n: contrib for n in stacked["bases"]},
+                "onehot": contrib,
+                "dense": {n: contrib for n in stacked["dense"]},
+                "prevs": {p: {n: repl for n in g}
+                          for p, g in stacked["prevs"].items()},
+            }, repl)
+            out_specs = ({n: repl for n in stacked["bases"]},
+                         {p: {n: repl for n in g}
+                          for p, g in stacked["prevs"].items()})
+            f = shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
+            return f(stacked, k_real)
+
+        fn = jax.jit(merge)
+        self._mesh_fns["flanc"] = fn
+        return fn
+
+    # -- prep + dispatch ----------------------------------------------------
+
+    def merge_factorized(self, prev_params, specs, results, assigns,
+                         weights=None):
+        """Heroes merge: basis mean + Eq. 5 block-wise coefficient merge."""
+        k = len(results)
+        k_pad = flsh.pad_cohort(k, self.mesh)
+        stacked: Dict[str, Dict[str, Any]] = {}
+        for name, spec in specs.items():
+            ids_key = "hidden_ids" if spec.mode == "square" else "anchored_ids"
+            prev_c = prev_params[name]["coeff"]
+            prev_c_np = prev_b_np = None
+            bases, blocks, ids = [], [], []
+            for n, r in results.items():
+                b = np.asarray(r.params[name]["basis"])
+                c = np.asarray(r.params[name]["coeff"])
+                i = np.asarray(assigns[n][ids_key])
+                w = _weight_of(weights, n)
+                if w is not None:
+                    if prev_c_np is None:
+                        prev_c_np = np.asarray(prev_c)
+                        prev_b_np = np.asarray(prev_params[name]["basis"])
+                    b = _np_blend(b, w, prev_b_np)
+                    c = _np_blend(c, w, prev_c_np[i])
+                bases.append(b)
+                blocks.append(c)
+                ids.append(i)
+            dense, mask = aggregation.scatter_contributions_host(
+                blocks, ids, num_blocks=prev_c.shape[0])
+            stacked[name] = {
+                "bases": _pad_rows(np.stack(bases), k_pad),
+                "dense": _pad_rows(dense, k_pad),
+                "mask": _pad_rows(mask, k_pad),
+                "prev": prev_c,
+            }
+        if self.mesh is None:
+            return _fact_1d(stacked)
+        shard_names: FrozenSet[str] = frozenset()
+        if self.shard_blocks:
+            shard_names = frozenset(
+                n for n, t in stacked.items()
+                if flsh.can_shard_blocks(t["prev"].shape[0], self.mesh))
+        return self._mesh_fact_fn(shard_names)(stacked, jnp.float32(k))
+
+    def merge_dense_mean(self, prev_params, results, weights=None):
+        """FedAvg/ADP: plain parameter mean over the cohort."""
+        k = len(results)
+        k_pad = flsh.pad_cohort(k, self.mesh)
+        prev_np = None
+        trees = []
+        for n, r in results.items():
+            w = _weight_of(weights, n)
+            if w is None:
+                trees.append(jax.tree_util.tree_map(np.asarray, r.params))
+            else:
+                if prev_np is None:
+                    prev_np = jax.tree_util.tree_map(np.asarray, prev_params)
+                trees.append(jax.tree_util.tree_map(
+                    lambda u, g, w=w: _np_blend(u, w, g), r.params, prev_np))
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: _pad_rows(np.stack(xs), k_pad), *trees)
+        if self.mesh is None:
+            return _mean_1d(stacked)
+        return self._mesh_mean_fn()(stacked, jnp.float32(k))
+
+    def merge_masked_dense(self, prev_params, results, weights=None):
+        """HeteroFL: element-wise mean over the covering clients."""
+        k_pad = flsh.pad_cohort(len(results), self.mesh)
+        stacked = {}
+        for name, full in prev_params.items():
+            full_np = None
+            pads, cnts = [], []
+            for n, r in results.items():
+                wv = np.asarray(r.params[name])
+                w = _weight_of(weights, n)
+                if w is not None:
+                    if full_np is None:
+                        full_np = np.asarray(full)
+                    region = full_np[tuple(slice(0, s) for s in wv.shape)]
+                    wv = _np_blend(wv, w, region)
+                pad = [(0, full.shape[i] - wv.shape[i])
+                       for i in range(wv.ndim)]
+                pads.append(np.pad(wv, pad))
+                cnts.append(np.pad(np.ones_like(wv), pad))
+            stacked[name] = {"padded": _pad_rows(np.stack(pads), k_pad),
+                             "cnt": _pad_rows(np.stack(cnts), k_pad),
+                             "prev": full}
+        if self.mesh is None:
+            return _masked_1d(stacked)
+        return self._mesh_masked_fn()(stacked)
+
+    def merge_flanc(self, basis, coeffs, results, widths, weights=None):
+        """Flanc: shared basis mean + per-width coefficient means.
+
+        ``widths`` maps client -> assigned width (which coefficient set
+        the client trained).  Returns ``(new_basis, new_coeffs)`` where
+        widths nobody trained keep their previous coefficients.
+        """
+        k = len(results)
+        names = list(basis)
+        max_width = max(coeffs)
+        bases = {name: [] for name in names}
+        for n, r in results.items():
+            w = _weight_of(weights, n)
+            for name in names:
+                b = np.asarray(r.params[name]["basis"])
+                if w is not None:
+                    b = _np_blend(b, w, np.asarray(basis[name]))
+                bases[name].append(b)
+
+        if self.mesh is None:
+            by_width: Dict[int, List[int]] = {}
+            for n in results:
+                by_width.setdefault(widths[n], []).append(n)
+            groups = {}
+            for p, ns in by_width.items():
+                groups[p] = {}
+                for name in names:
+                    rows = []
+                    for n in ns:
+                        c = np.asarray(results[n].params[name]["coeff"])
+                        w = _weight_of(weights, n)
+                        if w is not None:
+                            c = _np_blend(c, w, np.asarray(coeffs[p][name]))
+                        rows.append(c)
+                    groups[p][name] = np.stack(rows)
+            new_basis, merged = _flanc_1d(
+                {"bases": {n: np.stack(b) for n, b in bases.items()},
+                 "groups": groups})
+            new_coeffs = dict(coeffs)
+            for p, g in merged.items():
+                new_coeffs[p] = g
+            return new_basis, new_coeffs
+
+        # mesh path: every client contributes ONE zero-padded dense coeff
+        # (padded to the width-P block count) plus a one-hot width row;
+        # per-width means select rows through the one-hot.
+        k_pad = flsh.pad_cohort(k, self.mesh)
+        onehot = np.zeros((k_pad, max_width), np.float32)
+        dense = {name: [] for name in names}
+        for j, n in enumerate(results):
+            p = widths[n]
+            onehot[j, p - 1] = 1.0
+            for name in names:
+                c = np.asarray(results[n].params[name]["coeff"])
+                w = _weight_of(weights, n)
+                if w is not None:
+                    c = _np_blend(c, w, np.asarray(coeffs[p][name]))
+                nb_max = coeffs[max_width][name].shape[0]
+                pad = [(0, nb_max - c.shape[0])] + [(0, 0)] * (c.ndim - 1)
+                dense[name].append(np.pad(c, pad))
+        stacked = {
+            "bases": {n: _pad_rows(np.stack(b), k_pad)
+                      for n, b in bases.items()},
+            "onehot": onehot,
+            "dense": {n: _pad_rows(np.stack(rows), k_pad)
+                      for n, rows in dense.items()},
+            "prevs": {p: {n: coeffs[p][n] for n in names} for p in coeffs},
+        }
+        return self._mesh_flanc_fn()(stacked, jnp.float32(k))
+
+
+def build_merger(cfg) -> CollectiveMerger:
+    """Merger per the engine config: mesh when >1 device is visible."""
+    mesh = flsh.cohort_mesh(getattr(cfg, "agg_devices", 0))
+    return CollectiveMerger(mesh,
+                            shard_blocks=getattr(cfg, "shard_server_state",
+                                                 False))

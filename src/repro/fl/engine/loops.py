@@ -12,6 +12,11 @@ aggregation events and merge later with a staleness-discounted weight
 global model), the FedAsync/FedBuff-style rule adapted to every
 scheme's aggregator.  The wall clock advances event-by-event to the
 K-th completion, so fast clients stop paying for slow ones.
+
+Both loops hand the same ``weights`` dict to ``aggregator.aggregate``;
+with the collective backend the staleness blend is folded into the
+dense contribution prep, so semi-async events use the identical
+compiled merge as synchronous rounds (no separate weighted path).
 """
 
 from __future__ import annotations

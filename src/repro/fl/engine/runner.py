@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import convergence
+from repro.fl.engine import collective
 from repro.fl.engine.base import (Aggregator, AssignmentPolicy, LocalTrainer,
                                   PayloadModel, RoundLoop)
 from repro.fl.heterogeneity import HeterogeneityModel
@@ -48,6 +49,14 @@ class EngineRunner:
         self.params: Any = None  # owned/initialised by the aggregator
         self.factorized = factorized
         self.estimate = estimate
+        # collective merge backend (one compiled call per round; clients
+        # on a device axis when a mesh is available) — aggregators fall
+        # back to their host scatter loops when cfg.agg_backend == "host".
+        self.merger = None
+        if cfg.agg_backend == "collective":
+            self.merger = collective.build_merger(cfg)
+        elif cfg.agg_backend != "host":
+            raise ValueError(f"unknown agg_backend {cfg.agg_backend!r}")
         self.bound_state = convergence.BoundState(
             loss0=2.3, smoothness=1.0, grad_sq=1.0, noise_sq=0.5, lr=cfg.lr)
 

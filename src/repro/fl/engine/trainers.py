@@ -17,6 +17,11 @@ Minibatch indices are drawn on the host with the exact per-client RNG
 stream the sequential path uses (``default_rng((seed, round, n))``,
 tau draws then 3 estimate draws), so the two backends see the same data
 order.
+
+Both backends return *host-resident* (numpy) result params: the
+collective aggregation backend (repro.fl.engine.collective) scatters
+them into dense zero-padded contributions in one numpy pass and ships
+the stacked cohort to the device once, instead of K round-trips.
 """
 
 from __future__ import annotations
@@ -36,20 +41,28 @@ from repro.fl.models import FLModelDef
 
 
 class SequentialTrainer(LocalTrainer):
-    """One ``local_train`` call per client (legacy-equivalent backend)."""
+    """One ``local_train`` call per client (legacy-equivalent backend).
+
+    Result params are pulled to the host (numpy) — the contract shared
+    with :class:`CohortTrainer` — so the collective aggregation prep can
+    build its dense zero-padded contributions in one numpy pass instead
+    of K per-client device round-trips.
+    """
 
     def train_all(self, assigns: Dict[int, Assignment]) -> Dict[int, ClientResult]:
         eng = self.eng
         out = {}
         for n, a in assigns.items():
             params = eng.aggregator.client_params(n, a)
-            out[n] = client_lib.local_train(
+            res = client_lib.local_train(
                 eng.model, params, a["width"], a["tau"],
                 eng.parts_x[n], eng.parts_y[n], eng.cfg.lr,
                 np.random.default_rng((eng.cfg.seed, eng.round, n)),
                 eng.cfg.batch_size, factorized=eng.factorized,
                 estimate=eng.estimate,
             )
+            out[n] = ClientResult(jax.device_get(res.params), res.estimates,
+                                  res.loss_before, res.loss_after)
         return out
 
 

@@ -51,3 +51,16 @@ class FLConfig:
     round_mode: str = "sync"
     async_k: int = 0  # K for semi_async; 0 => max(1, clients_per_round // 2)
     staleness_decay: float = 0.5  # weight = decay ** staleness
+    # Aggregation backend: "collective" (default — dense zero-padded
+    # contributions + masks merged in ONE compiled call; clients laid out
+    # on a device axis via shard_map/psum when >1 device is visible;
+    # bitwise-equal to the host rule on a single device) or "host" (the
+    # legacy per-client eager scatter loop, kept as the parity reference).
+    agg_backend: str = "collective"
+    agg_devices: int = 0  # cap the cohort mesh; 0 => all local devices
+    # Factorized (Heroes-style) schemes only: keep merged coefficient
+    # tensors sharded over their block axis, per tensor, when the block
+    # count divides the mesh (server state scales past one device).
+    # Dense/per-width scheme states have no block axis and stay
+    # replicated.  Only meaningful with a multi-device mesh.
+    shard_server_state: bool = False

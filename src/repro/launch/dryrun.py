@@ -87,6 +87,26 @@ def collective_bytes(hlo_text: str) -> dict:
     return out
 
 
+def _peak_bytes(mem):
+    """Peak per-device bytes across jax versions.
+
+    Older jaxlib exposed ``peak_memory_in_bytes``; current
+    ``CompiledMemoryStats`` dropped it, so fall back to the standard
+    estimate argument + output + temp - alias.
+    """
+    peak = getattr(mem, "peak_memory_in_bytes", None)
+    if peak:
+        return peak
+    parts = [getattr(mem, a, None) for a in
+             ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes")]
+    if all(p is None for p in parts):
+        return None
+    total = sum(p or 0 for p in parts)
+    total -= getattr(mem, "alias_size_in_bytes", 0) or 0
+    return max(total, 0)
+
+
 def _shardings(tree_specs, mesh):
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), tree_specs,
@@ -196,10 +216,12 @@ def lower_pair(arch_id: str, shape_name: str, multi_pod: bool,
     compile_s = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    from repro.launch import hlo_analysis
+    # cost_analysis() returns [dict] on current jax, dict on older — the
+    # shared helper normalizes (same one tests/test_system.py uses)
+    cost = hlo_analysis.flat_cost_analysis(compiled.cost_analysis())
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
-    from repro.launch import hlo_analysis
     loop_scaled = hlo_analysis.analyze(hlo)
 
     result = {
@@ -219,7 +241,7 @@ def lower_pair(arch_id: str, shape_name: str, multi_pod: bool,
             "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
             "output_bytes": getattr(mem, "output_size_in_bytes", None),
             "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "peak_bytes": _peak_bytes(mem),
             "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
         },
         "cost": {
@@ -325,11 +347,16 @@ def main() -> int:
                                  moe_shardmap=args.moe_shardmap)
                 hlo_txt = res.pop("_hlo_text", None)
                 if hlo_txt is not None:
-                    import zstandard
                     hdir = outdir / "hlo"
                     hdir.mkdir(exist_ok=True)
-                    (hdir / f"{tag}.hlo.zst").write_bytes(
-                        zstandard.compress(hlo_txt.encode()))
+                    try:
+                        import zstandard
+                        (hdir / f"{tag}.hlo.zst").write_bytes(
+                            zstandard.compress(hlo_txt.encode()))
+                    except ImportError:  # optional dep; stdlib fallback
+                        import gzip
+                        (hdir / f"{tag}.hlo.gz").write_bytes(
+                            gzip.compress(hlo_txt.encode()))
                 path.write_text(json.dumps(res, indent=1))
                 m = res["memory"]
                 print(

@@ -156,9 +156,27 @@ def _split_args(args: str) -> List[str]:
     tok = "".join(cur).strip()
     if tok:
         out.append(tok)
-    # operands are the leading %refs; attributes like dims= come after —
-    # keep only tokens that look like %refs
-    return [t for t in out if t.startswith("%") or re.match(r"^[\w.\-]+$", t)]
+    # Current XLA prints each operand with its type ("f32[32,32]{1,0}
+    # %dot.0"); older dumps printed the bare %ref.  Keep the trailing
+    # %ref field of each token, dropping attribute tokens (dims=...).
+    refs = []
+    for t in out:
+        t = t.split()[-1]
+        if t.startswith("%") or re.match(r"^[\w.\-]+$", t):
+            refs.append(t.lstrip("%"))
+    return refs
+
+
+def flat_cost_analysis(cost) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returned a dict of properties; current jax returns a
+    one-element list of that dict (one entry per executable module).
+    Always returns a plain dict ({} for an empty analysis).
+    """
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
 
 
 def _called_computations(op: Op) -> List[str]:

@@ -3,3 +3,12 @@ from repro.sharding.rules import (  # noqa: F401
     cache_specs,
     param_specs,
 )
+from repro.sharding.fl import (  # noqa: F401
+    COHORT_AXIS,
+    block_spec,
+    can_shard_blocks,
+    cohort_mesh,
+    contribution_spec,
+    pad_cohort,
+    replicated_spec,
+)

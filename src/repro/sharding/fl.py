@@ -1,0 +1,66 @@
+"""FL aggregation sharding: the cohort device mesh + coefficient layouts.
+
+The engine's collective merge lays *clients* out on a 1-D mesh axis
+(``COHORT_AXIS``): each device folds its local shard of the stacked
+contributions in order, then a ``psum`` combines the partial sums
+(repro.core.aggregation.masked_block_merge).  The same axis doubles as
+the *block* axis for the merged coefficient when the server state is
+sharded (``FLConfig.shard_server_state``): after the psum every device
+keeps its contiguous slice of the ``P^2`` block dimension, so the global
+coefficient tensor never needs to be replicated.
+
+All helpers degrade to ``None``/no-ops on a single device — the engine
+then uses the compiled single-device fallback, which is bitwise-equal to
+the host scatter loop.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+COHORT_AXIS = "cohort"
+
+
+def cohort_mesh(max_devices: int = 0) -> Optional[Mesh]:
+    """1-D mesh over the local devices, or ``None`` when only one exists.
+
+    ``max_devices > 0`` caps the mesh (useful to pin tests to a size);
+    0 means all local devices.
+    """
+    devs = jax.devices()
+    if max_devices > 0:
+        devs = devs[:max_devices]
+    if len(devs) < 2:
+        return None
+    return Mesh(np.array(devs), (COHORT_AXIS,))
+
+
+def contribution_spec() -> P:
+    """Layout of stacked client contributions: client axis on the mesh."""
+    return P(COHORT_AXIS)
+
+
+def replicated_spec() -> P:
+    return P()
+
+
+def block_spec() -> P:
+    """Block-axis-sharded layout for the merged coefficient tensor."""
+    return P(COHORT_AXIS)
+
+
+def pad_cohort(k: int, mesh: Optional[Mesh]) -> int:
+    """Padded client count: next multiple of the mesh size (1 device: k)."""
+    if mesh is None:
+        return k
+    n = mesh.devices.size
+    return ((k + n - 1) // n) * n
+
+
+def can_shard_blocks(num_blocks: int, mesh: Optional[Mesh]) -> bool:
+    """Block sharding needs the block axis divisible by the mesh."""
+    return mesh is not None and num_blocks % mesh.devices.size == 0
