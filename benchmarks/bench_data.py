@@ -1,0 +1,127 @@
+"""Data-pipeline benchmark: streaming loader vs materialize-everything.
+
+Three measurements, written to ``BENCH_data.json``:
+
+  * setup    — building the per-client shards: ShardViews over one
+               global array vs the legacy per-client copies.
+  * loader   — host batch throughput of ``ClientDataLoader.draw_round``
+               (the exact cohort-trainer draw + gather) over both shard
+               kinds, in gathered MB/s.
+  * rounds   — end-to-end ``run_scheme`` cohort rounds at 20+ sampled
+               clients with streaming vs materialized shards (the
+               acceptance bar: streaming must not be slower).
+
+Usage:  PYTHONPATH=src python benchmarks/bench_data.py [--fast] [--out F]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+NUM_CLIENTS = 24
+K = 20  # sampled clients per round (the "20+ clients" criterion)
+
+
+def bench_setup(streaming: bool, reps: int) -> float:
+    from repro.fl import build_image_setup
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        build_image_setup(num_clients=NUM_CLIENTS, seed=0,
+                          streaming=streaming)
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_loader(streaming: bool, rounds: int) -> dict:
+    from repro.data import ClientDataLoader, load_dataset, partition_dataset
+
+    ds = load_dataset("synthetic_image", seed=0)
+    parts = partition_dataset(ds, "dirichlet", NUM_CLIENTS, 0, gamma_pct=40.0)
+    loader = ClientDataLoader.from_dataset(ds, parts, streaming=streaming)
+    tau, bs = 10, 16
+    # warmup one pass
+    for n in range(NUM_CLIENTS):
+        loader.draw_round(n, seed=0, rnd=0, tau=tau, batch_size=bs,
+                          estimate=True)
+    nbytes = 0
+    t0 = time.perf_counter()
+    for r in range(1, rounds + 1):
+        for n in range(NUM_CLIENTS):
+            xs, ys, est = loader.draw_round(n, seed=0, rnd=r, tau=tau,
+                                            batch_size=bs, estimate=True)
+            nbytes += xs.nbytes + ys.nbytes + est[0].nbytes + est[1].nbytes
+    dt = time.perf_counter() - t0
+    return {"gathered_mb": nbytes / 1e6, "seconds": dt,
+            "mb_per_s": nbytes / 1e6 / dt}
+
+
+def bench_rounds(streaming: bool, rounds: int, warmup: int) -> float:
+    from repro.fl import FLConfig, build_image_setup, build_runner
+
+    model, px, py, test = build_image_setup(num_clients=NUM_CLIENTS, seed=0,
+                                            streaming=streaming)
+    cfg = FLConfig(num_clients=NUM_CLIENTS, clients_per_round=K, tau_fixed=5,
+                   eval_every=10_000, estimate=False, trainer="cohort",
+                   seed=0)
+    eng = build_runner("fedavg", model, px, py, test, cfg=cfg)
+    for _ in range(warmup):
+        eng.run_round()
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        eng.run_round()
+    return (time.perf_counter() - t0) / rounds
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer repetitions (CI smoke)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: repo-root BENCH_data.json)")
+    args = ap.parse_args()
+    reps = 2 if args.fast else 5
+    loader_rounds = 5 if args.fast else 40
+    e2e_rounds = 2 if args.fast else 10
+    warmup = 1 if args.fast else 3
+
+    results = {
+        "config": {"num_clients": NUM_CLIENTS, "clients_per_round": K,
+                   "fast": args.fast},
+        "setup": {
+            "streaming_s": bench_setup(True, reps),
+            "materialized_s": bench_setup(False, reps),
+        },
+        "loader": {
+            "streaming": bench_loader(True, loader_rounds),
+            "materialized": bench_loader(False, loader_rounds),
+        },
+        # interleaved best-of-2 per mode: the first end-to-end run in a
+        # process pays one-time pool/compile warmup that would otherwise
+        # bias whichever mode runs first
+        "rounds": {
+            "streaming_per_round_s": min(
+                bench_rounds(True, e2e_rounds, warmup) for _ in range(2)),
+            "materialized_per_round_s": min(
+                bench_rounds(False, e2e_rounds, warmup) for _ in range(2)),
+        },
+    }
+    r = results["rounds"]
+    r["ratio_streaming_over_materialized"] = (
+        r["streaming_per_round_s"] / r["materialized_per_round_s"])
+    out = Path(args.out) if args.out else \
+        Path(__file__).resolve().parents[1] / "BENCH_data.json"
+    out.write_text(json.dumps(results, indent=2))
+    print(json.dumps(results, indent=2))
+    if r["ratio_streaming_over_materialized"] > 1.15:
+        print("WARNING: streaming pipeline >15% slower than materialized",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

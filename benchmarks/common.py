@@ -16,11 +16,25 @@ from repro.fl import (FLConfig, build_image_setup, build_text_setup,  # noqa: E4
 SCHEMES = ["fedavg", "adp", "heterofl", "flanc", "heroes"]
 
 
-def quick_cfg(num_clients: int = 20) -> FLConfig:
-    return FLConfig(
+def quick_cfg(num_clients: int = 20, **overrides) -> FLConfig:
+    base = dict(
         num_clients=num_clients, clients_per_round=5, eval_every=2,
         tau_fixed=5, tau_max=25, lr=0.08, batch_size=16, estimate=True,
     )
+    base.update(overrides)
+    return FLConfig(**base)
+
+
+def data_setup(task: str = "synthetic_image", num_clients: int = 20,
+               seed: int = 0, **kw):
+    """Registry-driven setup for figure benches: any registered dataset
+    (``synthetic_image``/``cifar10``/``synthetic_text``/``shakespeare``)
+    under its default partitioner; kwargs pass through to
+    :func:`repro.fl.simulation.build_setup` (``partitioner=``,
+    ``data_root=``, ``task_kw=``, ...)."""
+    from repro.fl.simulation import build_setup
+
+    return build_setup(task, num_clients=num_clients, seed=seed, **kw)
 
 
 def run_all_schemes(model, px, py, test, rounds: int, cfg: FLConfig,

@@ -1,7 +1,48 @@
+"""Federated dataset subsystem.
+
+Three registries + a streaming pipeline (docs/DATA.md):
+
+  * datasets      — ``register_dataset`` / ``load_dataset``: synthetic
+                    stand-ins and real-format loaders (CIFAR-10 binary/
+                    npz, Shakespeare text) behind one
+                    :class:`FederatedDataset` container with named
+                    splits; loaders fall back to deterministic synthetic
+                    generation when files are absent and cache outputs
+                    as npz keyed by (task, seed, preprocessing).
+  * partitioners  — ``register_partitioner`` / ``partition_dataset``:
+                    the paper's Γ / φ schemes plus iid and natural
+                    (per-speaker) splits, composable with any dataset.
+  * streaming     — :class:`ClientDataLoader` / :class:`ShardView`: per-
+                    client minibatch streams under the engine's host RNG
+                    contract, gathered lazily from one global array and
+                    prefetched ahead of the device step.
+"""
+
+from repro.data.base import (  # noqa: F401
+    DATASETS,
+    FederatedDataset,
+    load_dataset,
+    register_dataset,
+)
+from repro.data.partition import (  # noqa: F401
+    PARTITIONERS,
+    class_skew_partition,
+    dirichlet_partition,
+    iid_partition,
+    natural_partition,
+    partition_dataset,
+    register_partitioner,
+)
+from repro.data.streaming import (  # noqa: F401
+    ClientDataLoader,
+    ShardView,
+    make_shards,
+    round_batch_indices,
+)
 from repro.data.synthetic import (  # noqa: F401
     SyntheticImageTask,
     SyntheticTextTask,
-    dirichlet_partition,
-    class_skew_partition,
     lm_batches,
 )
+from repro.data import cifar10 as _cifar10  # noqa: F401  (registers "cifar10")
+from repro.data import shakespeare as _shakespeare  # noqa: F401  ("shakespeare")

@@ -1,0 +1,71 @@
+"""Dataset-subsystem smoke: one ``run_scheme`` round per registry loader.
+
+CI leg (offline by construction — loaders fall back to deterministic
+synthetic generation) exercising the full path dataset registry ->
+partitioner registry -> streaming shards -> engine round -> eval::
+
+    PYTHONPATH=src python -m repro.data.smoke [--cache-dir DIR] [--scheme S]
+
+Exits non-zero on any non-finite accuracy or loader failure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--cache-dir", default=None,
+                    help="npz cache directory (shared across CI runs)")
+    ap.add_argument("--data-root", default=None,
+                    help="optional real-data directory (default: fallback)")
+    ap.add_argument("--scheme", default="heroes",
+                    help="scheme to drive each loader with")
+    args = ap.parse_args(argv)
+
+    import numpy as np
+
+    from repro.fl import FLConfig, run_scheme
+    from repro.fl.simulation import build_image_setup, build_text_setup
+
+    cfg = FLConfig(num_clients=8, clients_per_round=3, tau_fixed=2,
+                   tau_max=6, eval_every=1, batch_size=8, trainer="cohort")
+    setups = {
+        "synthetic_image": lambda: build_image_setup(
+            num_clients=8, seed=0, task="synthetic_image"),
+        "cifar10": lambda: build_image_setup(
+            num_clients=8, seed=0, task="cifar10", max_width=2,
+            data_root=args.data_root, cache_dir=args.cache_dir,
+            task_kw={"train_size": 512, "test_size": 128}),
+        "synthetic_text": lambda: build_text_setup(
+            num_clients=8, seed=0, task="synthetic_text"),
+        "shakespeare": lambda: build_text_setup(
+            num_clients=8, seed=0, task="shakespeare", max_width=2,
+            data_root=args.data_root, cache_dir=args.cache_dir,
+            task_kw={"train_size": 512, "test_size": 128}),
+    }
+    failures = 0
+    for name, build in setups.items():
+        t0 = time.time()
+        try:
+            model, px, py, test = build()
+            hist = run_scheme(args.scheme, model, px, py, test, rounds=1,
+                              cfg=cfg)
+            acc = hist[-1].accuracy
+            ok = acc is not None and np.isfinite(acc)
+        except Exception as e:  # noqa: BLE001 — smoke must report, not die
+            print(f"FAIL  {name}: {type(e).__name__}: {e}")
+            failures += 1
+            continue
+        status = "ok" if ok else "FAIL (non-finite accuracy)"
+        failures += 0 if ok else 1
+        print(f"{status:4}  {name}: acc={acc:.3f} "
+              f"clients={len(px)} ({time.time() - t0:.1f}s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,15 +1,17 @@
-"""Synthetic datasets + Non-IID partitioners.
-
-The container is offline, so CIFAR-10 / ImageNet-100 / Shakespeare are
-replaced by *learnable* synthetic stand-ins with the same shapes and the
-same Non-IID partition machinery the paper uses:
+"""Synthetic in-memory tasks (the offline stand-ins).
 
   * SyntheticImageTask — images from class-conditional Gaussians passed
     through a fixed random "teacher" projection: linearly separable enough
     to show convergence curves, noisy enough to be non-trivial.
   * SyntheticTextTask — next-character prediction from a fixed random
     n-gram transition table (Shakespeare stand-in).
-  * dirichlet / class-skew partitioners — the paper's Γ / φ schemes.
+
+Both are registered in the dataset registry (``synthetic_image`` /
+``synthetic_text``) so they compose with the same partitioner registry
+and streaming pipelines as the real-format loaders in
+:mod:`repro.data.cifar10` / :mod:`repro.data.shakespeare`.  The Γ / φ
+partitioners that used to live here moved to :mod:`repro.data.partition`
+(re-exported below for compatibility).
 """
 
 from __future__ import annotations
@@ -18,6 +20,12 @@ import dataclasses
 from typing import Dict, List, Tuple
 
 import numpy as np
+
+from repro.data.base import FederatedDataset, register_dataset
+from repro.data.partition import (  # noqa: F401  (back-compat re-export)
+    class_skew_partition,
+    dirichlet_partition,
+)
 
 
 @dataclasses.dataclass
@@ -84,56 +92,52 @@ class SyntheticTextTask:
         self.test = gen(self.num_test)
 
 
-def dirichlet_partition(labels: np.ndarray, num_clients: int, gamma_pct: float,
-                        seed: int = 0) -> List[np.ndarray]:
-    """Paper's Γ scheme: Γ% of each client's samples from one class, the
-    rest spread evenly.  Γ=1/num_classes*100 ~ IID."""
-    rng = np.random.default_rng(seed)
-    classes = np.unique(labels)
-    idx_by_class = {c: list(rng.permutation(np.where(labels == c)[0])) for c in classes}
-    n_per_client = len(labels) // num_clients
-    frac = gamma_pct / 100.0
-    out = []
-    for n in range(num_clients):
-        main_c = classes[n % len(classes)]
-        want_main = int(round(frac * n_per_client))
-        take = []
-        pool = idx_by_class[main_c]
-        take += [pool.pop() for _ in range(min(want_main, len(pool)))]
-        rest = n_per_client - len(take)
-        others = [c for c in classes]
-        for i in range(rest):
-            c = others[i % len(others)]
-            pool = idx_by_class[c]
-            if pool:
-                take.append(pool.pop())
-        out.append(np.asarray(take, np.int64))
-    return out
-
-
-def class_skew_partition(labels: np.ndarray, num_clients: int, missing: int,
-                         seed: int = 0) -> List[np.ndarray]:
-    """Paper's φ scheme (ImageNet-100): each client LACKS ``missing``
-    classes; equal volume from each present class."""
-    rng = np.random.default_rng(seed)
-    classes = np.unique(labels)
-    idx_by_class = {c: list(rng.permutation(np.where(labels == c)[0])) for c in classes}
-    n_per_client = len(labels) // num_clients
-    out = []
-    for n in range(num_clients):
-        lacking = set(rng.choice(classes, size=missing, replace=False)) if missing else set()
-        present = [c for c in classes if c not in lacking]
-        take = []
-        per_c = max(1, n_per_client // len(present))
-        for c in present:
-            pool = idx_by_class[c]
-            take += [pool.pop() for _ in range(min(per_c, len(pool)))]
-        out.append(np.asarray(take[:n_per_client], np.int64))
-    return out
-
-
 def lm_batches(seqs: np.ndarray, batch: int, rng: np.random.Generator):
     """Yield (tokens, labels) next-token batches from (N, L+1) sequences."""
     idx = rng.integers(0, len(seqs), batch)
     chunk = seqs[idx]
     return chunk[:, :-1], chunk[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# registry adapters
+# ---------------------------------------------------------------------------
+
+
+@register_dataset("synthetic_image")
+def load_synthetic_image(seed: int = 0, noise: float = 1.2,
+                         data_root=None, cache_dir=None,
+                         **task_kw) -> FederatedDataset:
+    """SyntheticImageTask as a registry dataset (bitwise-stable arrays).
+
+    ``data_root``/``cache_dir`` are accepted for loader-signature parity
+    but unused: generation is already in-memory deterministic.
+    """
+    task = SyntheticImageTask(seed=seed, noise=noise, **task_kw)
+    return FederatedDataset(
+        name="synthetic_image",
+        splits={"train": (task.x_train, task.y_train),
+                "test": (task.x_test, task.y_test)},
+        metadata={"modality": "image", "num_classes": task.num_classes,
+                  "hw": task.hw, "channels": task.channels,
+                  "source": "synthetic", "seed": seed},
+    )
+
+
+@register_dataset("synthetic_text")
+def load_synthetic_text(seed: int = 0, data_root=None, cache_dir=None,
+                        **task_kw) -> FederatedDataset:
+    """SyntheticTextTask as a registry dataset.
+
+    No natural ids: the ``natural`` partitioner falls back to the
+    contiguous shards the pre-registry text path used, byte-identical.
+    """
+    task = SyntheticTextTask(seed=seed, **task_kw)
+    return FederatedDataset(
+        name="synthetic_text",
+        splits={"train": (task.train[:, :-1], task.train[:, 1:]),
+                "test": (task.test[:, :-1], task.test[:, 1:])},
+        metadata={"modality": "text", "vocab": task.vocab,
+                  "seq_len": task.seq_len, "source": "synthetic",
+                  "seed": seed},
+    )

@@ -8,6 +8,7 @@ from repro.fl.server import RUNNERS, FLConfig  # noqa: F401
 from repro.fl.simulation import (  # noqa: F401
     build_image_setup,
     build_runner,
+    build_setup,
     build_text_setup,
     run_scheme,
     summarize,

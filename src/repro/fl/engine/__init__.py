@@ -20,4 +20,5 @@ from repro.fl.engine.policies import (FullWidthAssignment,  # noqa: F401
 from repro.fl.engine.registry import (SCHEMES, SchemeBundle,  # noqa: F401
                                       build_engine, register_scheme)
 from repro.fl.engine.runner import EngineRunner  # noqa: F401
-from repro.fl.engine.trainers import CohortTrainer, SequentialTrainer  # noqa: F401
+from repro.fl.engine.trainers import (CohortTrainer,  # noqa: F401
+                                      ProximalTrainer, SequentialTrainer)

@@ -92,8 +92,9 @@ class DenseMeanAggregator(Aggregator):
         ew = eng.eval_width
         params = eng.params if ew == eng.P else eng.model.slice_dense(
             eng.params, ew)
-        logits = eng.model.forward(params, ew, eng.test_batch)
-        return eng.acc_from_logits(logits)
+        # streamed over cfg.eval_batch_size slices (full batch when <= 0)
+        return eng.acc_streaming(
+            lambda batch: eng.model.forward(params, ew, batch))
 
 
 class MaskedDenseAggregator(DenseMeanAggregator):
@@ -194,7 +195,8 @@ class FlancAggregator(Aggregator):
         ew = eng.eval_width
         params = self._width_params(ew)
         w = eng.model.compose_all(params, ew)
-        return eng.acc_from_logits(eng.model.forward(w, ew, eng.test_batch))
+        return eng.acc_streaming(
+            lambda batch: eng.model.forward(w, ew, batch))
 
 
 class HeroesAggregator(Aggregator):
@@ -258,4 +260,5 @@ class HeroesAggregator(Aggregator):
         anch_ids = np.arange(min(ew, eng.P))
         reduced = eng.model.reduce(eng.params, ew, hidden_ids, anch_ids)
         w = eng.model.compose_all(reduced, ew)
-        return eng.acc_from_logits(eng.model.forward(w, ew, eng.test_batch))
+        return eng.acc_streaming(
+            lambda batch: eng.model.forward(w, ew, batch))

@@ -35,7 +35,8 @@ from repro.fl.engine.payload import DensePayload, FactorizedPayload
 from repro.fl.engine.policies import (FullWidthAssignment, HeroesAssignment,
                                       TierWidthAssignment)
 from repro.fl.engine.runner import EngineRunner
-from repro.fl.engine.trainers import CohortTrainer, SequentialTrainer
+from repro.fl.engine.trainers import (CohortTrainer, ProximalTrainer,
+                                      SequentialTrainer)
 from repro.fl.types import FLConfig
 
 
@@ -49,6 +50,10 @@ class SchemeBundle:
     aggregator: Callable[[], Aggregator]
     factorized: bool  # clients train (basis, coeff) factors vs dense weights
     estimate: Callable[[FLConfig], bool]  # ship (L, sigma^2, G^2) estimates?
+    # Optional scheme-owned local solver (e.g. FedProx's proximal SGD).
+    # When set it overrides ``cfg.trainer``; explicit ``build_engine``
+    # trainer instances still win.
+    trainer: Optional[Callable[[FLConfig], LocalTrainer]] = None
 
 
 SCHEMES: Dict[str, Callable[[], SchemeBundle]] = {}
@@ -84,9 +89,12 @@ def build_engine(scheme: str, model, parts_x, parts_y, test_batch, het,
         raise KeyError(f"unknown scheme {scheme!r}; have {sorted(SCHEMES)}")
     bundle = SCHEMES[scheme]()
     if trainer is None:
-        if cfg.trainer not in TRAINERS:
-            raise ValueError(f"unknown trainer {cfg.trainer!r}")
-        trainer = TRAINERS[cfg.trainer]()
+        if bundle.trainer is not None:
+            trainer = bundle.trainer(cfg)
+        else:
+            if cfg.trainer not in TRAINERS:
+                raise ValueError(f"unknown trainer {cfg.trainer!r}")
+            trainer = TRAINERS[cfg.trainer]()
     if loop is None:
         if cfg.round_mode not in ROUND_MODES:
             raise ValueError(f"unknown round_mode {cfg.round_mode!r}")
@@ -156,6 +164,23 @@ def _flanc() -> SchemeBundle:
         aggregator=FlancAggregator,
         factorized=True,
         estimate=lambda cfg: False,
+    )
+
+
+@register_scheme("fedprox")
+def _fedprox() -> SchemeBundle:
+    """FedProx (Li et al.): FedAvg's assignment/payload/merge with a
+    proximal local solver — validates that a scheme needing a custom
+    LocalTrainer still drops in as a bundle (ROADMAP "More schemes as
+    bundles").  ``FLConfig.prox_mu`` sets the proximal coefficient."""
+    return SchemeBundle(
+        name="fedprox",
+        assignment=lambda: FullWidthAssignment(adaptive_tau=False),
+        payload=lambda: DensePayload(sliced=False),
+        aggregator=DenseMeanAggregator,
+        factorized=False,
+        estimate=lambda cfg: False,
+        trainer=lambda cfg: ProximalTrainer(),
     )
 
 

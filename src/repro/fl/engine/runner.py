@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import convergence
+from repro.data.streaming import ClientDataLoader
 from repro.fl.engine import collective
 from repro.fl.engine.base import (Aggregator, AssignmentPolicy, LocalTrainer,
                                   PayloadModel, RoundLoop)
@@ -36,6 +37,9 @@ class EngineRunner:
         self.scheme = scheme
         self.model = model
         self.parts_x, self.parts_y = parts_x, parts_y
+        # per-client minibatch streams (host RNG contract + prefetch);
+        # shards may be lazy ShardViews — see repro.data.streaming
+        self.data = ClientDataLoader(parts_x, parts_y)
         self.test_batch = test_batch
         self.het = het
         self.cfg = cfg
@@ -77,6 +81,38 @@ class EngineRunner:
         labels = self.test_batch["labels"]
         pred = jnp.argmax(logits, -1)
         return float(jnp.mean((pred == labels).astype(jnp.float32)))
+
+    def eval_batches(self):
+        """The test split in ``cfg.eval_batch_size`` slices (one full
+        batch when <= 0 — the bitwise-parity default)."""
+        tb = self.test_batch
+        n = int(tb["labels"].shape[0])
+        bs = self.cfg.eval_batch_size
+        if bs <= 0 or bs >= n:
+            yield tb
+            return
+        for i in range(0, n, bs):
+            yield {k: v[i:i + bs] for k, v in tb.items()}
+
+    def acc_streaming(self, logits_fn) -> float:
+        """Accuracy of ``logits_fn(batch)`` streamed over the test set.
+
+        With ``eval_batch_size <= 0`` this is exactly the legacy
+        full-batch ``acc_from_logits`` computation; otherwise correct
+        predictions are accumulated slice-by-slice so evaluation memory
+        stays O(eval_batch_size) instead of O(test set).
+        """
+        bs = self.cfg.eval_batch_size
+        n = int(self.test_batch["labels"].shape[0])
+        if bs <= 0 or bs >= n:
+            return self.acc_from_logits(logits_fn(self.test_batch))
+        correct, total = 0.0, 0
+        for batch in self.eval_batches():
+            pred = jnp.argmax(logits_fn(batch), -1)
+            correct += float(jnp.sum((pred == batch["labels"])
+                                     .astype(jnp.float32)))
+            total += int(np.prod(batch["labels"].shape))
+        return correct / total
 
     def eval_accuracy(self) -> float:
         return self.aggregator.evaluate()

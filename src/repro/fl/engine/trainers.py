@@ -13,12 +13,20 @@ no-op), so the per-client math is identical to the sequential loop up to
 float re-association — the dispatch count per round drops from
 ``sum_n tau_n`` to one call per cohort.
 
-Minibatch indices are drawn on the host with the exact per-client RNG
-stream the sequential path uses (``default_rng((seed, round, n))``,
-tau draws then 3 estimate draws), so the two backends see the same data
-order.
+Minibatch indices are drawn on the host through the engine's
+:class:`~repro.data.ClientDataLoader` (``eng.data``) under the exact
+per-client RNG stream the sequential path uses
+(``default_rng((seed, round, n))``, tau draws then 3 estimate draws),
+so the two backends see the same data order.  Shards may be lazy
+:class:`~repro.data.ShardView`s — only the touched minibatches are
+gathered — and the cohort backend prefetches the next group's host
+batches on a background thread while the device runs the current one.
 
-Both backends return *host-resident* (numpy) result params: the
+``ProximalTrainer`` is the FedProx local solver: the same sequential
+contract with the proximal pull ``mu * (w - w_global)`` added to every
+SGD step, so FedProx drops in as a scheme bundle without core changes.
+
+All backends return *host-resident* (numpy) result params: the
 collective aggregation backend (repro.fl.engine.collective) scatters
 them into dense zero-padded contributions in one numpy pass and ships
 the stacked cohort to the device once, instead of K round-trips.
@@ -27,13 +35,14 @@ the stacked cohort to the device once, instead of K round-trips.
 from __future__ import annotations
 
 import functools
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import estimator
+from repro.data.streaming import round_batch_indices
 from repro.fl import client as client_lib
 from repro.fl.client import ClientResult
 from repro.fl.engine.base import Assignment, LocalTrainer
@@ -148,16 +157,23 @@ class CohortTrainer(LocalTrainer):
         eng = self.eng
         groups: Dict[tuple, List[int]] = {}
         for n, a in assigns.items():
-            b_eff = min(eng.cfg.batch_size, len(eng.parts_y[n]))
+            b_eff = min(eng.cfg.batch_size, eng.data.num_samples(n))
             groups.setdefault((a["width"], b_eff), []).append(n)
+        # host batch prep streams through the loader one group ahead of
+        # the device step (numpy-only on the worker thread)
+        specs = list(groups.items())
+        prepared = eng.data.prefetch(
+            specs, lambda s: self._prepare_group(s[0][1], s[1], assigns))
         results: Dict[int, ClientResult] = {}
-        for (width, b_eff), ns in groups.items():
-            results.update(self._train_group(width, b_eff, ns, assigns))
+        for ((width, b_eff), ns), prep in zip(specs, prepared):
+            results.update(self._train_group(width, ns, assigns, prep))
         return {n: results[n] for n in assigns}
 
-    def _train_group(self, width: int, b_eff: int, ns: List[int],
-                     assigns: Dict[int, Assignment]) -> Dict[int, ClientResult]:
-        eng, model, cfg = self.eng, self.eng.model, self.eng.cfg
+    def _prepare_group(self, b_eff: int, ns: List[int],
+                       assigns: Dict[int, Assignment]):
+        """Host-side batch staging for one cohort group (numpy only —
+        safe to run on the prefetch thread)."""
+        eng, cfg = self.eng, self.eng.cfg
         taus = [max(assigns[n]["tau"], 1) for n in ns]
         # bucketed padding (bounded recompiles under varying assignments)
         tau_pad = taus[0] if len(set(taus)) == 1 else _next_pow2(max(taus))
@@ -165,27 +181,20 @@ class CohortTrainer(LocalTrainer):
         c_pad = n_real if n_real == cfg.clients_per_round \
             else _next_pow2(n_real)
 
-        client_params = []
         xs_steps, ys_steps, xs_est, ys_est = [], [], [], []
         for n, tau in zip(ns, taus):
-            client_params.append(eng.aggregator.client_params(n, assigns[n]))
-            x, y = np.asarray(eng.parts_x[n]), np.asarray(eng.parts_y[n])
-            nsamp = len(y)
-            rng = np.random.default_rng((cfg.seed, eng.round, n))
-            # same draw order as the sequential path: tau training batches...
-            idx = np.stack([rng.integers(0, nsamp, b_eff) for _ in range(tau)])
-            if tau < tau_pad:  # masked padding steps reuse the last batch
-                idx = np.concatenate(
-                    [idx, np.broadcast_to(idx[-1], (tau_pad - tau, b_eff))])
-            xs_steps.append(x[idx])
-            ys_steps.append(y[idx])
-            if eng.estimate:  # ... then 3 estimate batches
-                eidx = np.stack([rng.integers(0, nsamp, b_eff)
-                                 for _ in range(3)])
-                xs_est.append(x[eidx])
-                ys_est.append(y[eidx])
+            # same draw order as the sequential path: tau training
+            # batches, then 3 estimate batches (padding steps reuse the
+            # last batch — they are masked no-ops in the scan)
+            xs, ys, est = eng.data.draw_round(
+                n, seed=cfg.seed, rnd=eng.round, tau=tau, batch_size=b_eff,
+                estimate=eng.estimate, tau_pad=tau_pad)
+            xs_steps.append(xs)
+            ys_steps.append(ys)
+            if est is not None:
+                xs_est.append(est[0])
+                ys_est.append(est[1])
         for _ in range(c_pad - n_real):  # masked clone clients
-            client_params.append(client_params[0])
             xs_steps.append(xs_steps[0])
             ys_steps.append(ys_steps[0])
             if eng.estimate:
@@ -194,21 +203,35 @@ class CohortTrainer(LocalTrainer):
         taus_arr = np.zeros((c_pad,), np.int32)
         taus_arr[:n_real] = taus
 
+        xkey = "tokens" if eng.model.name == "rnn" else "x"
+        batches = {  # (C, tau_pad, B, ...) -> (tau_pad, C, B, ...)
+            xkey: np.moveaxis(np.stack(xs_steps), 0, 1),
+            "labels": np.moveaxis(np.stack(ys_steps), 0, 1),
+        }
+        est_batches = None
+        if eng.estimate:
+            est_batches = {xkey: np.stack(xs_est), "labels": np.stack(ys_est)}
+        return batches, est_batches, taus_arr, c_pad
+
+    def _train_group(self, width: int, ns: List[int],
+                     assigns: Dict[int, Assignment],
+                     prep) -> Dict[int, ClientResult]:
+        eng, model, cfg = self.eng, self.eng.model, self.eng.cfg
+        batches_np, est_np, taus_arr, c_pad = prep
+
+        client_params = [eng.aggregator.client_params(n, assigns[n])
+                         for n in ns]
+        client_params += [client_params[0]] * (c_pad - len(ns))
         stacked = jax.tree_util.tree_map(
             lambda *leaves: jnp.stack(leaves), *client_params)
-        xkey = "tokens" if model.name == "rnn" else "x"
-        batches = {  # (C, tau_pad, B, ...) -> (tau_pad, C, B, ...)
-            xkey: jnp.asarray(np.moveaxis(np.stack(xs_steps), 0, 1)),
-            "labels": jnp.asarray(np.moveaxis(np.stack(ys_steps), 0, 1)),
-        }
+        batches = {k: jnp.asarray(v) for k, v in batches_np.items()}
 
         train_fn, est_fn = _cohort_fns(model, width, eng.factorized)
         final, loss_b, loss_a = train_fn(stacked, batches,
                                          jnp.asarray(taus_arr), cfg.lr)
         ests = None
-        if eng.estimate:
-            est_batches = {xkey: jnp.asarray(np.stack(xs_est)),
-                           "labels": jnp.asarray(np.stack(ys_est))}
+        if est_np is not None:
+            est_batches = {k: jnp.asarray(v) for k, v in est_np.items()}
             ests = est_fn(stacked, final, est_batches)
             ests = {k: np.asarray(v) for k, v in ests.items()}
 
@@ -219,4 +242,65 @@ class CohortTrainer(LocalTrainer):
             params = jax.tree_util.tree_map(lambda v, j=j: v[j], final)
             est = {k: float(v[j]) for k, v in ests.items()} if ests else {}
             out[n] = ClientResult(params, est, float(loss_b[j]), float(loss_a[j]))
+        return out
+
+
+@functools.lru_cache(maxsize=32)
+def _prox_fns(model: FLModelDef, width: int, factorized: bool):
+    """Compiled FedProx step/loss, keyed on the model instance."""
+
+    def loss_fn(params, batch):
+        w = (model.compose_all(params, width) if factorized
+             else {k: v for k, v in params.items()})
+        logits = model.forward(w, width, batch)
+        return client_lib._ce(logits, batch["labels"])
+
+    grad_fn = jax.grad(loss_fn)
+
+    @jax.jit
+    def prox_step(params, anchor, batch, lr, mu):
+        g = grad_fn(params, batch)
+        return jax.tree_util.tree_map(
+            lambda p, a, gg: p - lr * (gg + mu * (p - a)), params, anchor, g)
+
+    return jax.jit(loss_fn), prox_step
+
+
+class ProximalTrainer(LocalTrainer):
+    """FedProx local solver: SGD on ``f(w) + (mu/2) ||w - w_global||^2``.
+
+    Identical dispatch/RNG contract to :class:`SequentialTrainer`
+    (minibatch indices come from the same ``round_batch_indices``
+    stream), with the proximal pull toward the received global view
+    added to every step — ``mu = 0`` reproduces FedAvg's local updates
+    bitwise.  ``mu`` defaults to ``FLConfig.prox_mu``.
+    """
+
+    def __init__(self, mu: Optional[float] = None):
+        self._mu = mu
+
+    def train_all(self, assigns: Dict[int, Assignment]) -> Dict[int, ClientResult]:
+        eng, cfg = self.eng, self.eng.cfg
+        mu = cfg.prox_mu if self._mu is None else self._mu
+        xkey = "tokens" if eng.model.name == "rnn" else "x"
+        out: Dict[int, ClientResult] = {}
+        for n, a in assigns.items():
+            loss_fn, prox_step = _prox_fns(eng.model, a["width"],
+                                           eng.factorized)
+            anchor = eng.aggregator.client_params(n, a)
+            nsamp = eng.data.num_samples(n)
+            b_eff = min(cfg.batch_size, nsamp)
+            tau = max(a["tau"], 1)
+            idx, _ = round_batch_indices(cfg.seed, eng.round, n, nsamp,
+                                         tau, b_eff, estimate=False)
+            params, first = anchor, None
+            for t in range(tau):
+                xb, yb = eng.data.gather(n, idx[t])
+                batch = {xkey: jnp.asarray(xb), "labels": jnp.asarray(yb)}
+                if first is None:
+                    first = batch
+                params = prox_step(params, anchor, batch, cfg.lr, mu)
+            out[n] = ClientResult(jax.device_get(params), {},
+                                  float(loss_fn(anchor, first)),
+                                  float(loss_fn(params, first)))
         return out

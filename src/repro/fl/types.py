@@ -51,6 +51,14 @@ class FLConfig:
     round_mode: str = "sync"
     async_k: int = 0  # K for semi_async; 0 => max(1, clients_per_round // 2)
     staleness_decay: float = 0.5  # weight = decay ** staleness
+    # FedProx proximal coefficient (the "fedprox" bundle's local solver:
+    # every SGD step adds mu * (w - w_global); 0 reproduces FedAvg).
+    prox_mu: float = 0.01
+    # Engine evaluation streams the test set in slices of this many
+    # samples; <= 0 evaluates the full test batch in one forward (the
+    # legacy behaviour, bitwise-identical histories).  The legacy
+    # backend ignores this knob and always evaluates full-batch.
+    eval_batch_size: int = 0
     # Aggregation backend: "collective" (default — dense zero-padded
     # contributions + masks merged in ONE compiled call; clients laid out
     # on a device axis via shard_map/psum when >1 device is visible;

@@ -1,0 +1,430 @@
+"""Tests for the federated dataset subsystem (repro.data).
+
+Covers: partitioner-registry invariants (disjointness / coverage),
+loader fallback byte-determinism across processes, the npz cache, shard
+views + the streaming RNG contract, registry-loader end-to-end runs for
+every scheme, and streaming-vs-materialized history parity.
+"""
+
+import hashlib
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.data import (ClientDataLoader, PARTITIONERS, ShardView,
+                        load_dataset, make_shards, partition_dataset,
+                        round_batch_indices)
+from repro.data.cache import cache_key, cache_path, cached, load_arrays
+from repro.fl import FLConfig, build_image_setup, build_text_setup, run_scheme
+from repro.fl.engine.registry import SCHEMES
+
+# ---------------------------------------------------------------------------
+# partitioner properties
+# ---------------------------------------------------------------------------
+
+_LABEL_SETS = [
+    np.repeat(np.arange(10), 60),            # balanced, divisible
+    np.random.default_rng(3).integers(0, 7, 501),  # ragged, odd N
+]
+
+
+def _flat(parts):
+    return np.concatenate([p for p in parts if len(p)]) if parts else np.empty(0)
+
+
+@pytest.mark.parametrize("labels", _LABEL_SETS, ids=["balanced", "ragged"])
+@pytest.mark.parametrize("name,kw", [
+    ("dirichlet", {"gamma_pct": 60.0}),
+    ("class_skew", {"missing": 2}),
+    ("iid", {}),
+    ("natural", {}),
+])
+def test_partitions_disjoint_and_in_range(name, kw, labels):
+    num_clients = 8
+    parts = PARTITIONERS[name](labels, num_clients, seed=0, metadata={}, **kw)
+    assert len(parts) == num_clients
+    flat = _flat(parts)
+    assert len(np.unique(flat)) == len(flat), "an index was assigned twice"
+    assert flat.min() >= 0 and flat.max() < len(labels)
+
+
+@pytest.mark.parametrize("labels", _LABEL_SETS, ids=["balanced", "ragged"])
+@pytest.mark.parametrize("name", ["iid", "natural"])
+def test_full_coverage_partitioners(name, labels):
+    """iid/natural cover every train index exactly once."""
+    parts = PARTITIONERS[name](labels, 8, seed=0, metadata={})
+    np.testing.assert_array_equal(np.sort(_flat(parts)),
+                                  np.arange(len(labels)))
+
+
+def test_dirichlet_volume_bound_and_skew():
+    # Γ caps each client at n_per_client; later clients may under-fill
+    # as class pools deplete (documented in repro.data.partition)
+    labels = np.repeat(np.arange(10), 120)
+    parts = partition_dataset_like(labels, "dirichlet", 10, gamma_pct=80.0)
+    n_per_client = len(labels) // 10
+    for n, p in enumerate(parts):
+        assert 0 < len(p) <= n_per_client
+        main = np.bincount(labels[p], minlength=10).max() / len(p)
+        assert main >= 0.7, "Γ=80% main-class share not respected"
+
+
+def test_class_skew_misses_classes():
+    labels = np.repeat(np.arange(10), 60)
+    parts = partition_dataset_like(labels, "class_skew", 6, missing=3)
+    for p in parts:
+        present = np.unique(labels[p])
+        assert len(present) <= 10 - 3
+
+
+def partition_dataset_like(labels, name, num_clients, **kw):
+    return PARTITIONERS[name](labels, num_clients, seed=0, metadata={}, **kw)
+
+
+def test_natural_partition_keeps_groups_whole():
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, 12, 400)
+    parts = PARTITIONERS["natural"](np.zeros(400), 5, seed=0,
+                                    metadata={"natural_ids": ids})
+    np.testing.assert_array_equal(np.sort(_flat(parts)), np.arange(400))
+    owner = {}
+    for client, p in enumerate(parts):
+        for g in np.unique(ids[p]):
+            assert owner.setdefault(g, client) == client, \
+                f"group {g} split across clients"
+
+
+def test_partition_dataset_respects_num_clients_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(num_clients=st.integers(2, 16), seed=st.integers(0, 10),
+           gamma=st.floats(10.0, 100.0))
+    def run(num_clients, seed, gamma):
+        labels = np.repeat(np.arange(5), 40)
+        parts = PARTITIONERS["dirichlet"](labels, num_clients, seed=seed,
+                                          metadata={}, gamma_pct=gamma)
+        assert len(parts) == num_clients
+        flat = _flat(parts)
+        assert len(np.unique(flat)) == len(flat)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# loaders: fallback determinism + cache
+# ---------------------------------------------------------------------------
+
+
+_DIGEST_SRC = """
+import hashlib
+import numpy as np
+from repro.data import load_dataset
+
+def digest(task, kw):
+    ds = load_dataset(task, **kw)
+    h = hashlib.sha256()
+    for split in sorted(ds.splits):
+        for arr in ds.splits[split]:
+            h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+"""
+
+_ns = {}
+exec(_DIGEST_SRC, _ns)
+_digest = _ns["digest"]
+
+
+@pytest.mark.parametrize("task,kw", [
+    ("cifar10", {"seed": 7, "train_size": 128, "test_size": 32}),
+    ("shakespeare", {"seed": 7, "train_size": 128, "test_size": 32}),
+])
+def test_fallback_byte_deterministic_across_processes(task, kw):
+    """Synthetic fallbacks are pure functions of their key — a fresh
+    interpreter reproduces the same bytes."""
+    local = _digest(task, kw)
+    repo = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(repo / "src")
+    env.pop("REPRO_DATA_CACHE", None)  # hash generation, not a cache read
+    code = _DIGEST_SRC + f"\nprint(digest({task!r}, {kw!r}))\n"
+    out = subprocess.run([sys.executable, "-c", code], cwd=repo,
+                         capture_output=True, text=True, check=True, env=env)
+    assert out.stdout.strip().splitlines()[-1] == local
+
+
+def test_cache_roundtrip_and_hit(tmp_path):
+    calls = []
+
+    def build():
+        calls.append(1)
+        return {"a": np.arange(5), "b": np.eye(2)}
+
+    a1, hit1 = cached("toy", {"seed": 1}, build, cache_dir=tmp_path)
+    a2, hit2 = cached("toy", {"seed": 1}, build, cache_dir=tmp_path)
+    assert (not hit1) and hit2 and len(calls) == 1
+    np.testing.assert_array_equal(a1["a"], a2["a"])
+    # a different key regenerates under a different file
+    _, hit3 = cached("toy", {"seed": 2}, build, cache_dir=tmp_path)
+    assert not hit3 and len(calls) == 2
+    # corrupt entries regenerate silently
+    path = cache_path(tmp_path, "toy", cache_key(task="toy", seed=1))
+    path.write_bytes(b"not an npz")
+    assert load_arrays(path) is None
+    _, hit4 = cached("toy", {"seed": 1}, build, cache_dir=tmp_path)
+    assert not hit4 and len(calls) == 3
+
+
+def test_loader_uses_cache_dir(tmp_path):
+    kw = dict(seed=3, train_size=64, test_size=16, cache_dir=tmp_path)
+    d1 = load_dataset("cifar10", **kw)
+    files = list(tmp_path.rglob("*.npz"))
+    assert files, "loader did not populate the cache"
+    d2 = load_dataset("cifar10", **kw)
+    np.testing.assert_array_equal(d1.x, d2.x)
+    assert cache_key(a=1, b=2) == cache_key(b=2, a=1)
+
+
+def test_cifar10_npz_file_reader(tmp_path):
+    rng = np.random.default_rng(0)
+    arrays = {
+        "x_train": rng.integers(0, 255, (48, 32, 32, 3)).astype(np.uint8),
+        "y_train": rng.integers(0, 10, 48).astype(np.int32),
+        "x_test": rng.integers(0, 255, (16, 32, 32, 3)).astype(np.uint8),
+        "y_test": rng.integers(0, 10, 16).astype(np.int32),
+    }
+    np.savez(tmp_path / "cifar10.npz", **arrays)
+    ds = load_dataset("cifar10", data_root=tmp_path)
+    assert ds.metadata["source"] == "files"
+    assert ds.x.shape == (48, 32, 32, 3) and ds.x.dtype == np.float32
+    assert abs(float(ds.x.mean())) < 2.0  # standardized, not raw pixels
+
+
+def test_cifar10_binary_reader(tmp_path):
+    rng = np.random.default_rng(1)
+
+    def write(path, n):
+        rec = np.zeros((n, 3073), np.uint8)
+        rec[:, 0] = rng.integers(0, 10, n)
+        rec[:, 1:] = rng.integers(0, 255, (n, 3072))
+        path.write_bytes(rec.tobytes())
+        return rec
+
+    recs = [write(tmp_path / f"data_batch_{i}.bin", 20) for i in range(1, 6)]
+    write(tmp_path / "test_batch.bin", 8)
+    ds = load_dataset("cifar10", data_root=tmp_path, normalize=False)
+    assert ds.metadata["source"] == "files"
+    labels = np.concatenate([r[:, 0] for r in recs]).astype(np.int32)
+    np.testing.assert_array_equal(ds.y, labels)
+    # channel-major record bytes land as HWC pixels
+    np.testing.assert_array_equal(
+        ds.x[0, :, :, 0].ravel(), recs[0][0, 1:1025].astype(np.float32))
+
+
+def test_cifar10_partial_binary_set_rejected(tmp_path):
+    """Some-but-not-all batches is a hard error, not silent partial data."""
+    (tmp_path / "data_batch_1.bin").write_bytes(b"\0" * 3073)
+    (tmp_path / "test_batch.bin").write_bytes(b"\0" * 3073)
+    with pytest.raises(FileNotFoundError, match="incomplete"):
+        load_dataset("cifar10", data_root=tmp_path)
+
+
+def test_cifar10_file_cache_invalidates_on_change(tmp_path):
+    import os
+
+    root, cache = tmp_path / "data", tmp_path / "cache"
+    root.mkdir()
+    rng = np.random.default_rng(2)
+
+    def write_npz(off):
+        np.savez(root / "cifar10.npz",
+                 x_train=np.full((8, 32, 32, 3), off, np.uint8),
+                 y_train=rng.integers(0, 10, 8).astype(np.int32),
+                 x_test=np.full((4, 32, 32, 3), off, np.uint8),
+                 y_test=rng.integers(0, 10, 4).astype(np.int32))
+
+    write_npz(10)
+    d1 = load_dataset("cifar10", data_root=root, cache_dir=cache,
+                      normalize=False)
+    write_npz(200)
+    os.utime(root / "cifar10.npz", ns=(1, 1))  # force a distinct mtime
+    d2 = load_dataset("cifar10", data_root=root, cache_dir=cache,
+                      normalize=False)
+    assert float(d1.x[0, 0, 0, 0]) == 10.0
+    assert float(d2.x[0, 0, 0, 0]) == 200.0, "stale cache served"
+
+
+def test_shakespeare_text_parser(tmp_path):
+    lines = []
+    for turn in range(30):
+        who = ["First Citizen", "Second Citizen", "MENENIUS"][turn % 3]
+        lines += [f"{who}:", f"speech {turn} of sufficient length to window.",
+                  ""]
+    (tmp_path / "shakespeare.txt").write_text("\n".join(lines))
+    ds = load_dataset("shakespeare", data_root=tmp_path, seq_len=16)
+    assert ds.metadata["source"] == "files"
+    assert ds.metadata["num_speakers"] == 3
+    ids = ds.metadata["natural_ids"]
+    assert len(ids) == len(ds.x)
+    assert ds.x.shape[1] == 16 and ds.y.shape == ds.x.shape
+    # labels are the next-char shift of the inputs
+    np.testing.assert_array_equal(ds.x[0, 1:], ds.y[0, :-1])
+
+
+# ---------------------------------------------------------------------------
+# streaming: shard views + RNG contract + loader
+# ---------------------------------------------------------------------------
+
+
+def test_shard_view_matches_materialized():
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(100, 4, 4, 3)).astype(np.float32)
+    part = rng.choice(100, 40, replace=False)
+    view = ShardView(base, part)
+    mat = base[part]
+    assert len(view) == 40 and view.shape == mat.shape
+    idx1 = rng.integers(0, 40, 16)
+    idx2 = rng.integers(0, 40, (5, 8))  # 2-D gather (cohort layout)
+    np.testing.assert_array_equal(view[idx1], mat[idx1])
+    np.testing.assert_array_equal(view[idx2], mat[idx2])
+    np.testing.assert_array_equal(np.asarray(view), mat)
+
+
+def test_round_batch_indices_matches_sequential_rng_contract():
+    """The loader's draws must replicate local_train's stream exactly:
+    default_rng((seed, round, n)), tau batch draws then 3 estimate draws."""
+    seed, rnd, n, nsamp, tau, bs = 5, 3, 7, 53, 4, 8
+    idx, est = round_batch_indices(seed, rnd, n, nsamp, tau, bs,
+                                   estimate=True, tau_pad=8)
+    rng = np.random.default_rng((seed, rnd, n))
+    ref = np.stack([rng.integers(0, nsamp, bs) for _ in range(tau)])
+    ref_est = np.stack([rng.integers(0, nsamp, bs) for _ in range(3)])
+    np.testing.assert_array_equal(idx[:tau], ref)
+    np.testing.assert_array_equal(est, ref_est)
+    # padded steps repeat the last real batch (masked no-ops downstream)
+    for t in range(tau, 8):
+        np.testing.assert_array_equal(idx[t], ref[-1])
+
+
+def test_client_data_loader_gather_and_prefetch():
+    ds = load_dataset("synthetic_image", seed=0)
+    parts = partition_dataset(ds, "iid", 6, seed=0)
+    loader = ClientDataLoader.from_dataset(ds, parts, streaming=True)
+    assert loader.num_clients == 6
+    xs, ys, est = loader.draw_round(2, seed=0, rnd=1, tau=3, batch_size=4,
+                                    estimate=True)
+    assert xs.shape[:2] == (3, 4) and ys.shape == (3, 4)
+    assert est[0].shape[:2] == (3, 4)
+    # prefetch preserves order and surfaces results identically
+    items = list(range(7))
+    assert list(loader.prefetch(items, lambda i: i * i)) == [i * i for i in items]
+    with pytest.raises(RuntimeError):
+        for _ in loader.prefetch(items, lambda i: (_ for _ in ()).throw(
+                RuntimeError("boom"))):
+            pass
+
+
+def test_prefetch_abandoned_generator_releases_worker():
+    """Breaking out of a prefetch stream must not leak the worker
+    thread (it blocks on a bounded queue)."""
+    import threading
+    import time
+
+    loader = ClientDataLoader([np.zeros(4)], [np.zeros(4)],
+                              prefetch_depth=1)
+    gen = loader.prefetch(range(50), lambda i: np.zeros((64, 64)) + i)
+    next(gen)
+    gen.close()  # abandon mid-stream; finally-block must stop the worker
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        if not any(t.name == "client-data-prefetch"
+                   for t in threading.enumerate()):
+            break
+        time.sleep(0.05)
+    assert not any(t.name == "client-data-prefetch"
+                   for t in threading.enumerate()), "prefetch thread leaked"
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: every scheme x both registry loaders, streaming parity
+# ---------------------------------------------------------------------------
+
+_E2E_CFG = FLConfig(num_clients=6, clients_per_round=3, tau_fixed=2,
+                    tau_max=6, eval_every=1, batch_size=8, lr=0.1,
+                    trainer="cohort")
+
+
+@pytest.fixture(scope="module")
+def cifar_setup():
+    return build_image_setup(
+        num_clients=6, seed=0, task="cifar10", max_width=2,
+        task_kw={"train_size": 240, "test_size": 60, "hw": 8})
+
+
+@pytest.fixture(scope="module")
+def shakespeare_setup():
+    return build_text_setup(
+        num_clients=6, seed=0, task="shakespeare", max_width=2,
+        task_kw={"train_size": 240, "test_size": 60, "num_speakers": 8})
+
+
+@pytest.mark.parametrize("scheme", sorted(SCHEMES))
+def test_all_schemes_on_cifar_loader(scheme, cifar_setup):
+    hist = run_scheme(scheme, *cifar_setup, rounds=1, cfg=_E2E_CFG)
+    assert len(hist) == 1
+    assert hist[0].accuracy is not None and np.isfinite(hist[0].accuracy)
+    assert hist[0].traffic_bytes > 0
+
+
+@pytest.mark.parametrize("scheme", sorted(SCHEMES))
+def test_all_schemes_on_shakespeare_loader(scheme, shakespeare_setup):
+    hist = run_scheme(scheme, *shakespeare_setup, rounds=1, cfg=_E2E_CFG)
+    assert len(hist) == 1
+    assert hist[0].accuracy is not None and np.isfinite(hist[0].accuracy)
+
+
+def test_streaming_matches_materialized_history():
+    cfg = FLConfig(num_clients=8, clients_per_round=3, tau_fixed=3,
+                   tau_max=10, eval_every=1, estimate=True, trainer="cohort")
+    hs = run_scheme("heroes",
+                    *build_image_setup(num_clients=8, seed=0, streaming=True),
+                    rounds=2, cfg=cfg)
+    hm = run_scheme("heroes",
+                    *build_image_setup(num_clients=8, seed=0, streaming=False),
+                    rounds=2, cfg=cfg)
+    for a, b in zip(hs, hm):
+        assert a.wall_time == b.wall_time
+        assert a.traffic_bytes == b.traffic_bytes
+        assert a.accuracy == b.accuracy
+
+
+def test_text_setup_routes_through_partitioners():
+    """Non-IID settings are no longer silently ignored for text."""
+    _, px_nat, _, _ = build_text_setup(num_clients=6, seed=1)
+    _, px_dir, _, _ = build_text_setup(
+        num_clients=6, seed=1, partitioner="dirichlet",
+        partition_kw={"gamma_pct": 90.0})
+    # natural fallback == the legacy contiguous shards
+    ds = load_dataset("synthetic_text", seed=1)
+    shards = np.array_split(np.arange(len(ds.x)), 6)
+    for view, ref in zip(px_nat, shards):
+        np.testing.assert_array_equal(view.indices, ref)
+    # the dirichlet split must differ from the contiguous one
+    assert any(not np.array_equal(a.indices, b.indices)
+               for a, b in zip(px_dir, px_nat))
+
+
+def test_shakespeare_natural_partition_by_speaker():
+    ds = load_dataset("shakespeare", seed=0, train_size=240, test_size=60,
+                      num_speakers=8)
+    parts = partition_dataset(ds, "natural", 4, seed=0)
+    ids = ds.metadata["natural_ids"]
+    np.testing.assert_array_equal(np.sort(np.concatenate(parts)),
+                                  np.arange(len(ds.x)))
+    for p in parts:
+        assert len(p), "a client received no speakers"

@@ -50,6 +50,8 @@ def _assert_history_parity(ha, hb, acc_atol=1e-4):
 
 @pytest.mark.parametrize("scheme", sorted(SCHEMES))
 def test_engine_matches_legacy(scheme, image_setup):
+    if scheme not in RUNNERS:
+        pytest.skip(f"{scheme} is bundle-only (no legacy parity reference)")
     model, px, py, test = image_setup
     h_legacy = run_scheme(scheme, model, px, py, test, rounds=4, cfg=_cfg(),
                           backend="legacy")
@@ -172,6 +174,82 @@ def test_register_custom_scheme(image_setup):
         assert len(hist) == 1 and hist[0].traffic_bytes > 0
     finally:
         SCHEMES.pop("_test_tiered_fedavg", None)
+
+
+# ---------------------------------------------------------------------------
+# FedProx bundle (scheme-owned local trainer)
+# ---------------------------------------------------------------------------
+
+
+def test_fedprox_mu_zero_matches_fedavg(image_setup):
+    """mu = 0 removes the proximal pull: FedProx must reproduce FedAvg's
+    history (same assignment/payload/merge, same RNG contract)."""
+    model, px, py, test = image_setup
+    h_avg = run_scheme("fedavg", model, px, py, test, rounds=3,
+                       cfg=_cfg(prox_mu=0.0))
+    h_prox = run_scheme("fedprox", model, px, py, test, rounds=3,
+                        cfg=_cfg(prox_mu=0.0))
+    _assert_history_parity(h_avg, h_prox)
+
+
+def test_fedprox_proximal_term_pulls_toward_global(image_setup):
+    """With a large mu the local updates stay closer to the global model
+    than plain FedAvg's."""
+    import jax
+    from repro.fl import build_runner
+
+    model, px, py, test = image_setup
+
+    def drift(scheme, mu):
+        eng = build_runner(scheme, model, px, py, test, cfg=_cfg(prox_mu=mu))
+        assigns = eng.assignment.assign([0, 1])
+        results = eng.trainer.train_all(assigns)
+        base = jax.tree_util.tree_leaves(eng.params)
+        tot = 0.0
+        for r in results.values():
+            for la, lb in zip(jax.tree_util.tree_leaves(r.params), base):
+                tot += float(np.sum((np.asarray(la) - np.asarray(lb)) ** 2))
+        return tot
+
+    assert drift("fedprox", mu=5.0) < drift("fedavg", mu=5.0)
+
+
+def test_fedprox_bundle_trainer_overrides_cfg(image_setup):
+    from repro.fl import build_runner
+    from repro.fl.engine import ProximalTrainer
+
+    model, px, py, test = image_setup
+    eng = build_runner("fedprox", model, px, py, test,
+                       cfg=_cfg(trainer="cohort"))
+    assert isinstance(eng.trainer, ProximalTrainer)
+
+
+# ---------------------------------------------------------------------------
+# streaming evaluation (FLConfig.eval_batch_size)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", ["heterofl", "heroes"])
+def test_streaming_eval_matches_full_batch(scheme, image_setup):
+    model, px, py, test = image_setup
+    h_full = run_scheme(scheme, model, px, py, test, rounds=2,
+                        cfg=_cfg(eval_every=1))
+    h_stream = run_scheme(scheme, model, px, py, test, rounds=2,
+                          cfg=_cfg(eval_every=1, eval_batch_size=64))
+    for a, b in zip(h_full, h_stream):
+        assert abs(a.accuracy - b.accuracy) < 1e-5
+
+
+def test_eval_batches_cover_test_set(image_setup):
+    from repro.fl import build_runner
+
+    model, px, py, test = image_setup
+    eng = build_runner("fedavg", model, px, py, test,
+                       cfg=_cfg(eval_batch_size=32))
+    n = int(test["labels"].shape[0])
+    batches = list(eng.eval_batches())
+    assert sum(int(b["labels"].shape[0]) for b in batches) == n
+    assert all(int(b["labels"].shape[0]) <= 32 for b in batches)
 
 
 # ---------------------------------------------------------------------------
