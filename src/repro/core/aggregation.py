@@ -34,6 +34,7 @@ contribution form equivalent to the sparse scatter form.
 
 from __future__ import annotations
 
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -157,9 +158,20 @@ def scatter_contribution(
     return dense, mask
 
 
+@functools.partial(jax.jit, static_argnames="num_blocks")
+def _scatter_contributions_device(
+    blocks: Array, block_ids: Array, num_blocks: int
+) -> Tuple[Array, Array]:
+    """Compiled stacked form of :func:`scatter_contribution`: blocks
+    ``(K, m, R, O)`` + ids ``(K, m)`` -> dense ``(K, num_blocks, R, O)``
+    + mask ``(K, num_blocks)``, vmapped over the client axis."""
+    return jax.vmap(
+        lambda b, i: scatter_contribution(b, i, num_blocks))(blocks, block_ids)
+
+
 def scatter_contributions_host(
-    client_blocks: Sequence[np.ndarray],
-    client_block_ids: Sequence[np.ndarray],
+    client_blocks,
+    client_block_ids,
     num_blocks: int,
     dtype=None,
 ) -> Tuple[np.ndarray, np.ndarray]:
@@ -169,7 +181,17 @@ def scatter_contributions_host(
     shipped to the device once and merged in a single compiled call.
     Duplicate ids within a client accumulate (``np.add.at``), matching
     the host scatter loop.
+
+    From-device path: when ``client_blocks`` is a stacked ``jax.Array``
+    (``(K, m, R, O)``, with ``client_block_ids`` ``(K, m)``) the scatter
+    runs as one compiled vmapped call and the dense contributions stay
+    device-resident — the path the mesh-sharded cohort trainer uses to
+    hand results to the collective merge without a host round-trip.
+    ``dtype`` is ignored there (contributions keep the blocks' dtype).
     """
+    if isinstance(client_blocks, jax.Array):
+        return _scatter_contributions_device(
+            client_blocks, jnp.asarray(client_block_ids), num_blocks)
     k = len(client_blocks)
     first = np.asarray(client_blocks[0])
     r, o = first.shape[-2:]

@@ -38,6 +38,7 @@ from repro.data.streaming import (  # noqa: F401
     ShardView,
     make_shards,
     round_batch_indices,
+    stack_client_shards,
 )
 from repro.data.synthetic import (  # noqa: F401
     SyntheticImageTask,

@@ -103,6 +103,32 @@ def round_batch_indices(seed: int, rnd: int, n: int, num_samples: int,
     return idx, est_idx
 
 
+def stack_client_shards(per_client: Sequence[np.ndarray], chunks: int,
+                        step_leading: bool = False):
+    """Stack per-client batch arrays into ``chunks`` contiguous groups.
+
+    The cohort trainer's device mesh wants *per-device host shards*, not
+    one monolithic stacked batch: each chunk is stacked separately (and
+    stays a separate numpy array) so the prefetch thread hands the main
+    thread exactly the pieces ``device_put`` ships, one per device —
+    the full cohort batch never exists contiguously on the host.
+
+    ``step_leading=True`` moves the per-client step axis in front of the
+    client axis (``(C/chunks, tau, ...) -> (tau, C/chunks, ...)``), the
+    layout the compiled cohort step consumes.  ``chunks=1`` reproduces
+    the single-device monolithic stack bitwise.
+    """
+    n = len(per_client)
+    if n % chunks:
+        raise ValueError(f"{n} clients not divisible into {chunks} chunks")
+    per = n // chunks
+    out = []
+    for c in range(chunks):
+        stk = np.stack(per_client[c * per:(c + 1) * per])
+        out.append(np.moveaxis(stk, 0, 1) if step_leading else stk)
+    return out
+
+
 class ClientDataLoader:
     """Per-client minibatch streams over (possibly lazy) shards.
 

@@ -65,6 +65,16 @@ class ClientResult:
     loss_before: float
     loss_after: float
 
+    def host_params(self) -> Any:
+        """Params as a host pytree.
+
+        Usually ``params`` itself (the numpy contract); a mesh-sharded
+        cohort trainer hands the collective backend lazy device-resident
+        slices instead, and this materializes them.
+        """
+        mat = getattr(self.params, "materialize", None)
+        return mat() if mat is not None else self.params
+
 
 def local_train(
     model: FLModelDef,

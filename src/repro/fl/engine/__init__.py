@@ -9,7 +9,8 @@ bundles.  ``build_engine`` is the main entry point; ``run_scheme`` in
 from repro.fl.engine.aggregators import (DenseMeanAggregator,  # noqa: F401
                                          FlancAggregator, HeroesAggregator,
                                          MaskedDenseAggregator)
-from repro.fl.engine.collective import CollectiveMerger, build_merger  # noqa: F401
+from repro.fl.engine.collective import (CohortSlice, CohortStack,  # noqa: F401
+                                        CollectiveMerger, build_merger)
 from repro.fl.engine.base import (Aggregator, AssignmentPolicy,  # noqa: F401
                                   LocalTrainer, PayloadModel, RoundLoop)
 from repro.fl.engine.loops import SemiAsyncRoundLoop, SyncRoundLoop  # noqa: F401

@@ -9,7 +9,12 @@ never leave one device.  This backend makes the paper's block-wise merge
      zero-padded contribution + mask (``scatter_contributions_host``) —
      the contract from ``repro.core.aggregation``.  Staleness weights
      (semi-async) are blended here, client-side, exactly as the host
-     rule does: ``w * update + (1 - w) * global``.
+     rule does: ``w * update + (1 - w) * global``.  When the
+     mesh-sharded cohort trainer hands over *device-resident* stacks
+     (:class:`CohortStack` / :class:`CohortSlice`) and no weights are in
+     play, prep stays on device instead: rows are gathered from the
+     stacks and the dense contributions come from the compiled
+     from-device scatter — no host round-trip between train and merge.
   2. *merge* (device, compiled): ONE jit call per round folds the
      stacked contributions with a fixed left-to-right ``ordered_sum``
      and divides by the mask counts.  On a multi-device mesh the client
@@ -30,6 +35,7 @@ fold, so multi-device parity is to float tolerance.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, FrozenSet, List, Optional
 
 import jax
@@ -39,6 +45,106 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import aggregation
 from repro.sharding import fl as flsh
+
+
+# ---------------------------------------------------------------------------
+# device-resident trainer -> merger hand-off
+# ---------------------------------------------------------------------------
+
+
+class CohortStack:
+    """Device-resident stacked cohort results (leading client axis).
+
+    The mesh-sharded cohort trainer produces one stack per trained
+    group: a params pytree whose leaves carry the padded client axis,
+    sharded over ``COHORT_AXIS``.  ``n_real`` counts the leading rows
+    holding real clients — everything after is a zeroed masked-clone
+    row.  ``host()`` gathers the whole stack to numpy once, lazily, and
+    caches it — the fallback cost is the single ``device_get`` the
+    trainer used to pay eagerly.
+    """
+
+    __slots__ = ("tree", "n_real", "_host")
+
+    def __init__(self, tree: Any, n_real: int):
+        self.tree = tree
+        self.n_real = n_real
+        self._host = None
+
+    def host(self):
+        if self._host is None:
+            self._host = jax.device_get(self.tree)
+        return self._host
+
+
+class CohortSlice:
+    """One client's params view into a :class:`CohortStack` row.
+
+    This is what ``ClientResult.params`` holds when the mesh-sharded
+    trainer hands results to the collective backend: the merger consumes
+    whole stacks device-side (no gather/rescatter between train and
+    aggregate), and anything that needs the plain numpy tree calls
+    :meth:`materialize` (or ``ClientResult.host_params()``).
+    """
+
+    __slots__ = ("stack", "index")
+
+    def __init__(self, stack: CohortStack, index: int):
+        self.stack = stack
+        self.index = index
+
+    def materialize(self):
+        return jax.tree_util.tree_map(lambda v: v[self.index],
+                                      self.stack.host())
+
+
+def _host_results(results: Dict[int, Any]) -> Dict[int, Any]:
+    """Materialize device-resident params back to the numpy contract."""
+    out = {}
+    for n, r in results.items():
+        if isinstance(r.params, CohortSlice):
+            r = dataclasses.replace(r, params=r.params.materialize())
+        out[n] = r
+    return out
+
+
+def _device_groups(results: Dict[int, Any]):
+    """Cohort-stack groups ``(stack, rows, positions, clients)`` in
+    first-appearance order, or ``None`` unless *every* result is a
+    :class:`CohortSlice` (mixed cohorts fall back to the host prep)."""
+    groups: Dict[int, list] = {}
+    order: List[int] = []
+    for pos, (n, r) in enumerate(results.items()):
+        if not isinstance(r.params, CohortSlice):
+            return None
+        key = id(r.params.stack)
+        if key not in groups:
+            groups[key] = [r.params.stack, [], [], []]
+            order.append(key)
+        g = groups[key]
+        g[1].append(r.params.index)
+        g[2].append(pos)
+        g[3].append(n)
+    return [groups[k] for k in order]
+
+
+def _rows_in_results_order(parts: List[Any], positions: List[np.ndarray],
+                           k_pad: int):
+    """Concatenate per-group row stacks back into results order and
+    zero-pad the client axis to ``k_pad`` — all jnp ops, leaf-wise."""
+    perm = np.argsort(np.concatenate([np.asarray(p) for p in positions]))
+
+    def leafwise(*leaves):
+        cat = leaves[0] if len(leaves) == 1 else jnp.concatenate(leaves, 0)
+        if not np.array_equal(perm, np.arange(perm.size)):
+            cat = jnp.take(cat, jnp.asarray(perm), 0)
+        if k_pad > cat.shape[0]:
+            pad = jnp.zeros((k_pad - cat.shape[0],) + cat.shape[1:],
+                            cat.dtype)
+            cat = jnp.concatenate([cat, pad], 0)
+        return cat
+
+    return jax.tree_util.tree_map(leafwise, *parts)
 
 
 def _np_blend(update, w: float, prev):
@@ -268,6 +374,62 @@ class CollectiveMerger:
         self._mesh_fns["flanc"] = fn
         return fn
 
+    # -- device-resident prep (mesh-sharded trainer hand-off) --------------
+
+    def _device_stacked(self, groups, k_pad: int):
+        """Client rows stacked in results order, zero-padded to ``k_pad``
+        — all device-side.  When the trainer's stack already matches
+        (one group consuming *every* real row in trained order, same
+        padded height — so the rows beyond are zeroed clones) the
+        stack's tree passes through untouched: the params trained on
+        the cohort axis feed the merge with no data movement at all."""
+        if len(groups) == 1:
+            stack, rows, _, _ = groups[0]
+            nrows = jax.tree_util.tree_leaves(stack.tree)[0].shape[0]
+            if rows == list(range(stack.n_real)) and nrows == k_pad:
+                return stack.tree
+        parts = [jax.tree_util.tree_map(
+            lambda v, r=np.asarray(g[1]): jnp.take(v, jnp.asarray(r), 0),
+            g[0].tree) for g in groups]
+        return _rows_in_results_order(parts, [g[2] for g in groups], k_pad)
+
+    def _merge_factorized_device(self, prev_params, specs, groups, k: int,
+                                 k_pad: int, assigns):
+        """Factorized merge fed straight from device-resident stacks:
+        coefficient rows become dense contributions through the compiled
+        from-device scatter (one vmapped call per group/layer), bases
+        are row-gathers — the host never sees the trained params."""
+        shard_names: FrozenSet[str] = frozenset()
+        if self.shard_blocks:
+            shard_names = frozenset(
+                n for n, t in prev_params.items()
+                if flsh.can_shard_blocks(t["coeff"].shape[0], self.mesh))
+        stacked: Dict[str, Dict[str, Any]] = {}
+        positions = [g[2] for g in groups]
+        for name, spec in specs.items():
+            ids_key = "hidden_ids" if spec.mode == "square" else "anchored_ids"
+            prev_c = prev_params[name]["coeff"]
+            bases, dense, mask = [], [], []
+            for stack, rows, _, ns in groups:
+                sub = stack.tree[name]
+                r = jnp.asarray(np.asarray(rows))
+                bases.append(jnp.take(sub["basis"], r, 0))
+                ids = np.stack([np.asarray(assigns[n][ids_key]) for n in ns])
+                d, m = aggregation.scatter_contributions_host(
+                    jnp.take(sub["coeff"], r, 0), jnp.asarray(ids),
+                    num_blocks=prev_c.shape[0])
+                dense.append(d)
+                mask.append(m)
+            stacked[name] = {
+                "bases": _rows_in_results_order(bases, positions, k_pad),
+                "dense": _rows_in_results_order(dense, positions, k_pad),
+                "mask": _rows_in_results_order(mask, positions, k_pad),
+                "prev": prev_c,
+            }
+        if self.mesh is None:
+            return _fact_1d(stacked)
+        return self._mesh_fact_fn(shard_names)(stacked, jnp.float32(k))
+
     # -- prep + dispatch ----------------------------------------------------
 
     def merge_factorized(self, prev_params, specs, results, assigns,
@@ -275,6 +437,12 @@ class CollectiveMerger:
         """Heroes merge: basis mean + Eq. 5 block-wise coefficient merge."""
         k = len(results)
         k_pad = flsh.pad_cohort(k, self.mesh)
+        if weights is None:
+            groups = _device_groups(results)
+            if groups is not None:
+                return self._merge_factorized_device(
+                    prev_params, specs, groups, k, k_pad, assigns)
+        results = _host_results(results)
         stacked: Dict[str, Dict[str, Any]] = {}
         for name, spec in specs.items():
             ids_key = "hidden_ids" if spec.mode == "square" else "anchored_ids"
@@ -316,6 +484,14 @@ class CollectiveMerger:
         """FedAvg/ADP: plain parameter mean over the cohort."""
         k = len(results)
         k_pad = flsh.pad_cohort(k, self.mesh)
+        if weights is None:
+            groups = _device_groups(results)
+            if groups is not None:
+                stacked = self._device_stacked(groups, k_pad)
+                if self.mesh is None:
+                    return _mean_1d(stacked)
+                return self._mesh_mean_fn()(stacked, jnp.float32(k))
+        results = _host_results(results)
         prev_np = None
         trees = []
         for n, r in results.items():
@@ -335,6 +511,7 @@ class CollectiveMerger:
 
     def merge_masked_dense(self, prev_params, results, weights=None):
         """HeteroFL: element-wise mean over the covering clients."""
+        results = _host_results(results)
         k_pad = flsh.pad_cohort(len(results), self.mesh)
         stacked = {}
         for name, full in prev_params.items():
@@ -366,6 +543,7 @@ class CollectiveMerger:
         the client trained).  Returns ``(new_basis, new_coeffs)`` where
         widths nobody trained keep their previous coefficients.
         """
+        results = _host_results(results)
         k = len(results)
         names = list(basis)
         max_width = max(coeffs)

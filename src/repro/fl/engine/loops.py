@@ -17,6 +17,16 @@ Both loops hand the same ``weights`` dict to ``aggregator.aggregate``;
 with the collective backend the staleness blend is folded into the
 dense contribution prep, so semi-async events use the identical
 compiled merge as synchronous rounds (no separate weighted path).
+
+``FLConfig.sample_weighted`` rides that same path: per-client sample
+counts become blend weights ``K * s_n / sum(s)``, which turns the
+cohort mean into the sample-count-weighted mean — exactly — for the
+global-mean rules.  The weights can exceed 1, so partitioned rules
+(per-block / per-region / per-width subsets, where the blend residuals
+do not cancel) see an extrapolated weighting rather than a per-subset
+weighted mean; see ``FLConfig.sample_weighted``.  Semi-async
+multiplies the weights into the staleness discounts.  Off by default —
+seed histories stay bitwise.
 """
 
 from __future__ import annotations
@@ -29,6 +39,23 @@ import numpy as np
 from repro.fl.client import ClientResult
 from repro.fl.engine.base import Assignment, RoundLoop
 from repro.fl.types import RoundLog
+
+
+def _sample_weights(eng, clients) -> Dict[int, float]:
+    """Sample-count weights ``K * s_n / sum(s)`` for one merge cohort.
+
+    Routed through the aggregators' blend-weights path
+    (``w * update + (1 - w) * global`` before the scheme's mean), this
+    reduces the plain cohort mean to ``sum(s_n * u_n) / sum(s_n)`` —
+    the FedAvg paper's sample-weighted objective — because the blend
+    residuals ``(1 - w_n)`` cancel over the cohort.  Weights are NOT
+    clamped to [0, 1]: sample-heavy clients carry w > 1, which is what
+    makes the global mean exact but turns per-subset rules into an
+    extrapolation (see ``FLConfig.sample_weighted``).
+    """
+    s = np.array([eng.data.num_samples(n) for n in clients], np.float64)
+    w = s * (len(clients) / s.sum())
+    return {n: float(wn) for n, wn in zip(clients, w)}
 
 
 class SyncRoundLoop(RoundLoop):
@@ -48,7 +75,9 @@ class SyncRoundLoop(RoundLoop):
             nu = eng.het.upload_time(n, eng.payload.bytes(a))
             times[n] = a["tau"] * mu + nu
             eng.traffic += 2 * eng.payload.bytes(a)  # down + up
-        eng.aggregator.aggregate(results, assigns)
+        weights = (_sample_weights(eng, list(results))
+                   if cfg.sample_weighted else None)
+        eng.aggregator.aggregate(results, assigns, weights=weights)
         makespan = max(times.values())
         wait = float(np.mean([makespan - t for t in times.values()]))
         eng.wall += makespan
@@ -113,8 +142,19 @@ class SemiAsyncRoundLoop(RoundLoop):
         need = cfg.clients_per_round - len(self.in_flight)
         if need > 0:
             pool = np.array([c for c in range(cfg.num_clients) if c not in busy])
-            newly = eng.rng.choice(pool, min(need, len(pool)), replace=False)
-            self._dispatch(list(map(int, newly)))
+            # the pool can be empty (clients_per_round > num_clients, or
+            # every client already in flight): skip the dispatch instead
+            # of feeding rng.choice an empty population (ValueError) and
+            # spuriously advancing assignment-policy state on [].
+            if len(pool):
+                newly = eng.rng.choice(pool, min(need, len(pool)),
+                                       replace=False)
+                self._dispatch(list(map(int, newly)))
+        if not self.in_flight:
+            raise RuntimeError(
+                "semi-async round with no dispatchable clients "
+                f"(num_clients={cfg.num_clients}, "
+                f"clients_per_round={cfg.clients_per_round})")
 
         self.in_flight.sort(key=lambda t: t.finish)
         k = min(self.k, len(self.in_flight))
@@ -128,7 +168,17 @@ class SemiAsyncRoundLoop(RoundLoop):
         # all-fresh events take the cheap synchronous merge path
         weights = None if stale == 0 else {
             t.client: self.decay ** (eng.round - t.dispatched) for t in done}
+        if cfg.sample_weighted:
+            sw = _sample_weights(eng, list(results))
+            weights = sw if weights is None else \
+                {n: sw[n] * weights[n] for n in sw}
         eng.aggregator.aggregate(results, assigns, weights=weights)
+        # stragglers must not pin device-resident cohort stacks (and
+        # their host caches) across events: degrade their results to the
+        # plain numpy contract now, so each stack dies with its event
+        for t in self.in_flight:
+            t.result = dataclasses.replace(t.result,
+                                           params=t.result.host_params())
 
         makespan = t_k - eng.wall  # time since the previous aggregation
         wait = float(np.mean([t_k - t.finish for t in done]))

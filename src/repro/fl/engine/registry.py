@@ -69,6 +69,10 @@ def register_scheme(name: str):
     return deco
 
 
+# "cohort" additionally shards its client axis over the local-device
+# cohort mesh (FLConfig.trainer_mesh_devices; same axis the collective
+# merge rides) whenever more than one device is visible — on one device
+# it is the bitwise single-device batched path.
 TRAINERS: Dict[str, Callable[[], LocalTrainer]] = {
     "sequential": SequentialTrainer,
     "cohort": CohortTrainer,

@@ -26,10 +26,16 @@ batches on a background thread while the device runs the current one.
 contract with the proximal pull ``mu * (w - w_global)`` added to every
 SGD step, so FedProx drops in as a scheme bundle without core changes.
 
-All backends return *host-resident* (numpy) result params: the
-collective aggregation backend (repro.fl.engine.collective) scatters
-them into dense zero-padded contributions in one numpy pass and ships
-the stacked cohort to the device once, instead of K round-trips.
+Result-params contract: backends return *host-resident* (numpy) param
+trees — the collective aggregation backend (repro.fl.engine.collective)
+scatters them into dense zero-padded contributions in one numpy pass and
+ships the stacked cohort to the device once, instead of K round-trips.
+The one exception is the mesh-sharded cohort path feeding the collective
+backend: there the trained stack stays *device-resident* on the cohort
+axis (``ClientResult.params`` is a lazy
+:class:`~repro.fl.engine.collective.CohortSlice``) and the merge
+consumes it without a gather/rescatter; ``ClientResult.host_params()``
+recovers the numpy tree everywhere else.
 """
 
 from __future__ import annotations
@@ -40,13 +46,17 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding
 
 from repro.core import estimator
-from repro.data.streaming import round_batch_indices
+from repro.data.streaming import round_batch_indices, stack_client_shards
 from repro.fl import client as client_lib
 from repro.fl.client import ClientResult
 from repro.fl.engine.base import Assignment, LocalTrainer
+from repro.fl.engine.collective import CohortSlice, CohortStack
 from repro.fl.models import FLModelDef
+from repro.sharding import fl as flsh
 
 
 class SequentialTrainer(LocalTrainer):
@@ -76,8 +86,16 @@ class SequentialTrainer(LocalTrainer):
 
 
 @functools.lru_cache(maxsize=32)
-def _cohort_fns(model: FLModelDef, width: int, factorized: bool):
-    """Compiled cohort functions, keyed on the model instance identity."""
+def _cohort_fns(model: FLModelDef, width: int, factorized: bool, mesh=None):
+    """Compiled cohort functions, keyed on the model instance identity.
+
+    With ``mesh`` (a 1-D cohort mesh from :func:`repro.sharding.fl.
+    cohort_mesh`) the vmap+scan step runs under ``shard_map`` with the
+    client axis laid out on ``COHORT_AXIS``: every device trains its
+    contiguous client shard independently (local updates need no
+    collectives), so per-client math is identical to the single-device
+    form and the trained params come back sharded over the same axis the
+    collective merge consumes."""
 
     def loss_fn(params, batch):
         w = (model.compose_all(params, width) if factorized
@@ -118,6 +136,14 @@ def _cohort_fns(model: FLModelDef, width: int, factorized: bool):
         tau_pad = jax.tree_util.tree_leaves(batches)[0].shape[0]
         final, _ = jax.lax.scan(body, stacked, (jnp.arange(tau_pad), batches),
                                 unroll=True)
+        # zero the masked-clone rows (tau == 0): nobody consumes them
+        # per-client, and zero rows are exactly the client-axis padding
+        # the collective merge expects — so a device-resident stack can
+        # feed the merge unchanged.  Real rows pass through bitwise.
+        live = taus > 0
+        final = jax.tree_util.tree_map(
+            lambda v: jnp.where(
+                live.reshape(live.shape + (1,) * (v.ndim - 1)), v, 0), final)
         first = jax.tree_util.tree_map(lambda v: v[0], batches)
         loss_b = jax.vmap(loss_fn)(stacked, first)
         loss_a = jax.vmap(loss_fn)(final, first)
@@ -133,7 +159,19 @@ def _cohort_fns(model: FLModelDef, width: int, factorized: bool):
 
         return jax.vmap(per_client)(params0, params_t, est_batches)
 
-    return jax.jit(train), jax.jit(estimates)
+    if mesh is None:
+        return jax.jit(train), jax.jit(estimates)
+
+    # mesh variant: clients sharded P(COHORT_AXIS), lr replicated, the
+    # batch pytree sharded on its client axis (position 1: (tau, C, B)).
+    # Specs are pytree prefixes, so one spec covers each whole subtree.
+    cs, rs = flsh.contribution_spec(), flsh.replicated_spec()
+    bs = flsh.client_axis_spec(1)
+    train_sh = shard_map(train, mesh=mesh, in_specs=(cs, bs, cs, rs),
+                         out_specs=(cs, cs, cs))
+    est_sh = shard_map(estimates, mesh=mesh, in_specs=(cs, cs, cs),
+                       out_specs=cs)
+    return jax.jit(train_sh), jax.jit(est_sh)
 
 
 def _next_pow2(n: int) -> int:
@@ -151,7 +189,21 @@ class CohortTrainer(LocalTrainer):
     of two with masked clones (unless the group is the recurring
     full-cohort shape) and tau is padded to the next power of two when
     clients disagree (padded steps are masked no-ops).
+
+    On a multi-device host the client axis is sharded over the 1-D
+    cohort mesh (``FLConfig.trainer_mesh_devices``; the same axis the
+    collective merge rides): batches are staged as per-device host
+    shards, every device trains its contiguous client slice in the one
+    compiled call, and — when the collective aggregation backend is
+    active — the trained params stay device-resident
+    (:class:`~repro.fl.engine.collective.CohortSlice`) so the merge
+    consumes them without a gather/rescatter round-trip.
     """
+
+    def setup(self, eng) -> None:
+        super().setup(eng)
+        self.mesh = flsh.cohort_mesh(
+            getattr(eng.cfg, "trainer_mesh_devices", 0))
 
     def train_all(self, assigns: Dict[int, Assignment]) -> Dict[int, ClientResult]:
         eng = self.eng
@@ -172,7 +224,13 @@ class CohortTrainer(LocalTrainer):
     def _prepare_group(self, b_eff: int, ns: List[int],
                        assigns: Dict[int, Assignment]):
         """Host-side batch staging for one cohort group (numpy only —
-        safe to run on the prefetch thread)."""
+        safe to run on the prefetch thread).
+
+        Returns per-device host shard *lists* (one chunk per mesh
+        device; a single chunk without a mesh) so the main thread ships
+        each chunk straight to its device — the monolithic stacked
+        batch never exists when the cohort is sharded.
+        """
         eng, cfg = self.eng, self.eng.cfg
         taus = [max(assigns[n]["tau"], 1) for n in ns]
         # bucketed padding (bounded recompiles under varying assignments)
@@ -180,6 +238,11 @@ class CohortTrainer(LocalTrainer):
         n_real = len(ns)
         c_pad = n_real if n_real == cfg.clients_per_round \
             else _next_pow2(n_real)
+        # reconcile the power-of-two bucket with the mesh: the client
+        # axis must split evenly over the devices (extra rows are the
+        # same masked clones the bucketing already uses)
+        c_pad = flsh.pad_cohort(c_pad, self.mesh)
+        chunks = self.mesh.devices.size if self.mesh is not None else 1
 
         xs_steps, ys_steps, xs_est, ys_est = [], [], [], []
         for n, tau in zip(ns, taus):
@@ -204,19 +267,21 @@ class CohortTrainer(LocalTrainer):
         taus_arr[:n_real] = taus
 
         xkey = "tokens" if eng.model.name == "rnn" else "x"
-        batches = {  # (C, tau_pad, B, ...) -> (tau_pad, C, B, ...)
-            xkey: np.moveaxis(np.stack(xs_steps), 0, 1),
-            "labels": np.moveaxis(np.stack(ys_steps), 0, 1),
+        batches = {  # per chunk: (C', tau_pad, B, ...) -> (tau_pad, C', B, ...)
+            xkey: stack_client_shards(xs_steps, chunks, step_leading=True),
+            "labels": stack_client_shards(ys_steps, chunks, step_leading=True),
         }
         est_batches = None
         if eng.estimate:
-            est_batches = {xkey: np.stack(xs_est), "labels": np.stack(ys_est)}
+            est_batches = {xkey: stack_client_shards(xs_est, chunks),
+                           "labels": stack_client_shards(ys_est, chunks)}
         return batches, est_batches, taus_arr, c_pad
 
     def _train_group(self, width: int, ns: List[int],
                      assigns: Dict[int, Assignment],
                      prep) -> Dict[int, ClientResult]:
         eng, model, cfg = self.eng, self.eng.model, self.eng.cfg
+        mesh = self.mesh
         batches_np, est_np, taus_arr, c_pad = prep
 
         client_params = [eng.aggregator.client_params(n, assigns[n])
@@ -224,20 +289,45 @@ class CohortTrainer(LocalTrainer):
         client_params += [client_params[0]] * (c_pad - len(ns))
         stacked = jax.tree_util.tree_map(
             lambda *leaves: jnp.stack(leaves), *client_params)
-        batches = {k: jnp.asarray(v) for k, v in batches_np.items()}
+        if mesh is None:
+            batches = {k: jnp.asarray(v[0]) for k, v in batches_np.items()}
+            taus = jnp.asarray(taus_arr)
+        else:
+            # per-device host shards -> one sharded array per leaf, the
+            # client axis on COHORT_AXIS (batch pytree has it at axis 1)
+            cs = NamedSharding(mesh, flsh.contribution_spec())
+            stacked = jax.device_put(stacked, cs)
+            batches = {k: flsh.assemble_from_host_shards(v, mesh, axis=1)
+                       for k, v in batches_np.items()}
+            taus = jax.device_put(taus_arr, cs)
 
-        train_fn, est_fn = _cohort_fns(model, width, eng.factorized)
-        final, loss_b, loss_a = train_fn(stacked, batches,
-                                         jnp.asarray(taus_arr), cfg.lr)
+        train_fn, est_fn = _cohort_fns(model, width, eng.factorized, mesh)
+        final, loss_b, loss_a = train_fn(stacked, batches, taus, cfg.lr)
         ests = None
         if est_np is not None:
-            est_batches = {k: jnp.asarray(v) for k, v in est_np.items()}
+            if mesh is None:
+                est_batches = {k: jnp.asarray(v[0])
+                               for k, v in est_np.items()}
+            else:
+                est_batches = {k: flsh.assemble_from_host_shards(v, mesh)
+                               for k, v in est_np.items()}
             ests = est_fn(stacked, final, est_batches)
             ests = {k: np.asarray(v) for k, v in ests.items()}
 
-        final = jax.device_get(final)  # one transfer; slice per client below
         loss_b, loss_a = np.asarray(loss_b), np.asarray(loss_a)
         out = {}
+        if mesh is not None and eng.merger is not None:
+            # device-resident hand-off: the trained stack stays sharded
+            # on the cohort axis; the collective merge consumes it with
+            # no gather/rescatter (CohortSlice materializes lazily for
+            # every other consumer).
+            stack = CohortStack(final, n_real=len(ns))
+            for j, n in enumerate(ns):
+                est = {k: float(v[j]) for k, v in ests.items()} if ests else {}
+                out[n] = ClientResult(CohortSlice(stack, j), est,
+                                      float(loss_b[j]), float(loss_a[j]))
+            return out
+        final = jax.device_get(final)  # one transfer; slice per client below
         for j, n in enumerate(ns):
             params = jax.tree_util.tree_map(lambda v, j=j: v[j], final)
             est = {k: float(v[j]) for k, v in ests.items()} if ests else {}
@@ -247,7 +337,7 @@ class CohortTrainer(LocalTrainer):
 
 @functools.lru_cache(maxsize=32)
 def _prox_fns(model: FLModelDef, width: int, factorized: bool):
-    """Compiled FedProx step/loss, keyed on the model instance."""
+    """Compiled FedProx step/loss/grad, keyed on the model instance."""
 
     def loss_fn(params, batch):
         w = (model.compose_all(params, width) if factorized
@@ -263,7 +353,7 @@ def _prox_fns(model: FLModelDef, width: int, factorized: bool):
         return jax.tree_util.tree_map(
             lambda p, a, gg: p - lr * (gg + mu * (p - a)), params, anchor, g)
 
-    return jax.jit(loss_fn), prox_step
+    return jax.jit(loss_fn), jax.jit(grad_fn), prox_step
 
 
 class ProximalTrainer(LocalTrainer):
@@ -271,9 +361,15 @@ class ProximalTrainer(LocalTrainer):
 
     Identical dispatch/RNG contract to :class:`SequentialTrainer`
     (minibatch indices come from the same ``round_batch_indices``
-    stream), with the proximal pull toward the received global view
-    added to every step — ``mu = 0`` reproduces FedAvg's local updates
-    bitwise.  ``mu`` defaults to ``FLConfig.prox_mu``.
+    stream: tau training draws, then — when the scheme ships estimates —
+    3 estimate draws), with the proximal pull toward the received global
+    view added to every step — ``mu = 0`` reproduces FedAvg's local
+    updates bitwise.  ``mu`` defaults to ``FLConfig.prox_mu``.
+
+    When ``eng.estimate`` is set (Heroes/ADP adaptive policies using
+    FedProx as the local solver) the (L, sigma^2, G^2) estimates are
+    computed over the 3 estimate batches exactly as the sequential
+    backend does, so adaptive tau keeps its signals.
     """
 
     def __init__(self, mu: Optional[float] = None):
@@ -285,14 +381,15 @@ class ProximalTrainer(LocalTrainer):
         xkey = "tokens" if eng.model.name == "rnn" else "x"
         out: Dict[int, ClientResult] = {}
         for n, a in assigns.items():
-            loss_fn, prox_step = _prox_fns(eng.model, a["width"],
-                                           eng.factorized)
+            loss_fn, grad_fn, prox_step = _prox_fns(eng.model, a["width"],
+                                                    eng.factorized)
             anchor = eng.aggregator.client_params(n, a)
             nsamp = eng.data.num_samples(n)
             b_eff = min(cfg.batch_size, nsamp)
             tau = max(a["tau"], 1)
-            idx, _ = round_batch_indices(cfg.seed, eng.round, n, nsamp,
-                                         tau, b_eff, estimate=False)
+            idx, est_idx = round_batch_indices(cfg.seed, eng.round, n, nsamp,
+                                               tau, b_eff,
+                                               estimate=eng.estimate)
             params, first = anchor, None
             for t in range(tau):
                 xb, yb = eng.data.gather(n, idx[t])
@@ -300,7 +397,16 @@ class ProximalTrainer(LocalTrainer):
                 if first is None:
                     first = batch
                 params = prox_step(params, anchor, batch, cfg.lr, mu)
-            out[n] = ClientResult(jax.device_get(params), {},
+            est: Dict[str, float] = {}
+            if est_idx is not None:
+                ebs = []
+                for i in range(3):
+                    xb, yb = eng.data.gather(n, est_idx[i])
+                    ebs.append({xkey: jnp.asarray(xb),
+                                "labels": jnp.asarray(yb)})
+                est = estimator.client_estimates(grad_fn, anchor, params, ebs)
+                est = {k: float(v) for k, v in est.items()}
+            out[n] = ClientResult(jax.device_get(params), est,
                                   float(loss_fn(anchor, first)),
                                   float(loss_fn(params, first)))
         return out

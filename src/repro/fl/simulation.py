@@ -96,9 +96,11 @@ def build_runner(scheme: str, model: FLModelDef, parts_x, parts_y, test_batch,
 
     ``backend="engine"`` routes through the layered engine registry
     (:mod:`repro.fl.engine`), which honours the ``FLConfig`` engine knobs
-    (``trainer``, ``round_mode``).  ``backend="legacy"`` uses the original
-    monolithic runner classes in :mod:`repro.fl.server`; the two produce
-    identical histories for the synchronous sequential configuration.
+    (``trainer``, ``round_mode``, the ``agg_*``/``trainer_mesh_devices``
+    device-mesh knobs and ``sample_weighted``).  ``backend="legacy"``
+    uses the original monolithic runner classes in
+    :mod:`repro.fl.server`; the two produce identical histories for the
+    synchronous sequential configuration.
     """
     cfg = cfg or FLConfig(num_clients=len(parts_x), seed=seed)
     het = HeterogeneityModel(cfg.num_clients, seed=seed, tier_weights=tier_weights)

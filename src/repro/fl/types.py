@@ -66,6 +66,29 @@ class FLConfig:
     # legacy per-client eager scatter loop, kept as the parity reference).
     agg_backend: str = "collective"
     agg_devices: int = 0  # cap the cohort mesh; 0 => all local devices
+    # Cohort-trainer device mesh: the "cohort" trainer shards its client
+    # axis over the same 1-D local-device mesh the collective merge
+    # rides, so one round's local updates run data-parallel and land
+    # already laid out for aggregation.  Mirrors ``agg_devices``:
+    # 0 = all local devices, 1 = force the single-device path, N = cap
+    # the mesh at N devices.  With one visible device the single-device
+    # cohort path runs unchanged (bitwise-identical results).
+    trainer_mesh_devices: int = 0
+    # Sample-count-weighted aggregation: weight every client's merge
+    # contribution by its shard size (K * s_n / sum(s) through the
+    # aggregators' existing blend-weights path), so unbalanced
+    # natural/dirichlet partitions average per *sample* instead of per
+    # client.  Exact for global-mean rules (FedAvg/ADP/basis means),
+    # where the blend residuals cancel over the cohort.  Note that the
+    # weights are normalized over the WHOLE cohort and can exceed 1
+    # (sample-heavy clients): partitioned rules (Heroes blocks, HeteroFL
+    # regions, Flanc per-width sets) average blends over each covering
+    # subset, where the residuals do not cancel — a lone sample-heavy
+    # cover of a block extrapolates past its update (w*u + (1-w)*g with
+    # w > 1) rather than computing a per-block sample-weighted mean.
+    # Intended for the dense/global-mean schemes; use with care under
+    # extreme skew elsewhere.  Default off keeps seed histories bitwise.
+    sample_weighted: bool = False
     # Factorized (Heroes-style) schemes only: keep merged coefficient
     # tensors sharded over their block axis, per tensor, when the block
     # count divides the mesh (server state scales past one device).

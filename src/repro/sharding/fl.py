@@ -26,12 +26,15 @@ COHORT_AXIS = "cohort"
 
 
 def cohort_mesh(max_devices: int = 0) -> Optional[Mesh]:
-    """1-D mesh over the local devices, or ``None`` when only one exists.
+    """1-D mesh over the *local* devices, or ``None`` when only one exists.
 
     ``max_devices > 0`` caps the mesh (useful to pin tests to a size);
-    0 means all local devices.
+    0 means all local devices.  The mesh deliberately uses
+    ``jax.local_devices()``: under multi-process JAX, ``jax.devices()``
+    also lists devices other hosts own, and a mesh over those would try
+    to place client shards this process cannot address.
     """
-    devs = jax.devices()
+    devs = jax.local_devices()
     if max_devices > 0:
         devs = devs[:max_devices]
     if len(devs) < 2:
@@ -64,3 +67,30 @@ def pad_cohort(k: int, mesh: Optional[Mesh]) -> int:
 def can_shard_blocks(num_blocks: int, mesh: Optional[Mesh]) -> bool:
     """Block sharding needs the block axis divisible by the mesh."""
     return mesh is not None and num_blocks % mesh.devices.size == 0
+
+
+def client_axis_spec(axis: int) -> P:
+    """Spec for an array whose client axis sits at position ``axis``."""
+    return P(*((None,) * axis + (COHORT_AXIS,)))
+
+
+def assemble_from_host_shards(shards, mesh: Mesh, axis: int = 0):
+    """Global device array from per-device *host* shards, no host concat.
+
+    ``shards`` holds one numpy chunk per mesh device, split along
+    ``axis`` (the client axis).  Each chunk is transferred straight to
+    its device and the results are stitched into one array sharded
+    ``P(..., COHORT_AXIS, ...)`` — the layout the sharded cohort step
+    and the collective merge both consume, so a monolithic stacked copy
+    never exists on either side.
+    """
+    devs = list(mesh.devices.flat)
+    if len(shards) != len(devs):
+        raise ValueError(f"{len(shards)} shards for {len(devs)} devices")
+    spec = client_axis_spec(axis)
+    arrays = [jax.device_put(np.ascontiguousarray(s), d)
+              for s, d in zip(shards, devs)]
+    shape = list(shards[0].shape)
+    shape[axis] = sum(s.shape[axis] for s in shards)
+    return jax.make_array_from_single_device_arrays(
+        tuple(shape), jax.sharding.NamedSharding(mesh, spec), arrays)

@@ -103,6 +103,24 @@ def test_collective_semi_async_staleness_parity(scheme, image_setup):
     _leaves_equal(host.params, coll.params, exact=SINGLE_DEVICE)
 
 
+@pytest.mark.parametrize("scheme", ["fedavg", "heroes"])
+def test_collective_sample_weighted_parity(scheme, image_setup):
+    """FLConfig.sample_weighted rides the same blend-weights path as the
+    staleness discounts — both backends must merge identically."""
+    from repro.fl import build_runner
+
+    model, px, py, test = image_setup
+    host = build_runner(scheme, model, px, py, test,
+                        cfg=_cfg(agg_backend="host", sample_weighted=True))
+    coll = build_runner(scheme, model, px, py, test,
+                        cfg=_cfg(agg_backend="collective",
+                                 sample_weighted=True))
+    for _ in range(2):
+        a, b = host.run_round(), coll.run_round()
+        assert a.wall_time == b.wall_time
+    _leaves_equal(host.params, coll.params, exact=SINGLE_DEVICE)
+
+
 # ---------------------------------------------------------------------------
 # core-level properties of the stacked merge
 # ---------------------------------------------------------------------------

@@ -96,8 +96,10 @@ def test_cohort_trainer_matches_sequential_results(image_setup):
     for n in r_seq:
         a, b = r_seq[n], r_coh[n]
         import jax
-        for la, lb in zip(jax.tree_util.tree_leaves(a.params),
-                          jax.tree_util.tree_leaves(b.params)):
+        # host_params(): on a multi-device host the cohort backend hands
+        # the collective merger device-resident slices
+        for la, lb in zip(jax.tree_util.tree_leaves(a.host_params()),
+                          jax.tree_util.tree_leaves(b.host_params())):
             np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
                                        atol=1e-5, rtol=1e-4)
         assert abs(a.loss_before - b.loss_before) < 1e-4
@@ -222,6 +224,111 @@ def test_fedprox_bundle_trainer_overrides_cfg(image_setup):
     eng = build_runner("fedprox", model, px, py, test,
                        cfg=_cfg(trainer="cohort"))
     assert isinstance(eng.trainer, ProximalTrainer)
+
+
+def test_proximal_trainer_ships_estimates(image_setup):
+    """Regression: with an estimate-shipping scheme (ADP/Heroes) the
+    FedProx solver must compute (L, sigma^2, G^2) under the same RNG
+    contract as the sequential backend — at mu=0 the trajectories agree,
+    so the estimates must too."""
+    from repro.fl import build_runner
+    from repro.fl.engine import ProximalTrainer
+
+    model, px, py, test = image_setup
+    e_seq = build_runner("adp", model, px, py, test, cfg=_cfg())
+    e_prox = build_runner("adp", model, px, py, test, cfg=_cfg())
+    assert e_seq.estimate and e_prox.estimate
+    seq, prox = SequentialTrainer(), ProximalTrainer(mu=0.0)
+    seq.setup(e_seq)
+    prox.setup(e_prox)
+    r_seq = seq.train_all(e_seq.assignment.assign([0, 1]))
+    r_prox = prox.train_all(e_prox.assignment.assign([0, 1]))
+    for n in r_seq:
+        assert r_prox[n].estimates, "FedProx dropped the estimate signals"
+        for k in ("L", "sigma_sq", "grad_sq"):
+            np.testing.assert_allclose(r_prox[n].estimates[k],
+                                       r_seq[n].estimates[k],
+                                       rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sample-count-weighted aggregation (FLConfig.sample_weighted)
+# ---------------------------------------------------------------------------
+
+
+def test_sample_weighted_matches_manual_weighted_mean():
+    """FedAvg with sample_weighted=True must produce exactly
+    sum(s_n * u_n) / sum(s_n) — the blend-weights formulation cancels to
+    the weighted mean for global-mean rules."""
+    import jax
+
+    # 8-client dirichlet partition: known-unbalanced shard sizes
+    model, px, py, test = build_image_setup(num_clients=8, seed=0)
+    cfg_kw = dict(num_clients=8, clients_per_round=4)
+    eng = build_runner("fedavg", model, px, py, test,
+                       cfg=_cfg(sample_weighted=True, **cfg_kw))
+    # twin engine (same seed) to reconstruct the per-client updates
+    twin = build_runner("fedavg", model, px, py, test, cfg=_cfg(**cfg_kw))
+    clients = twin.rng.choice(8, 4, replace=False)
+    assigns = twin.assignment.assign(list(map(int, clients)))
+    results = twin.trainer.train_all(assigns)
+    s = np.array([twin.data.num_samples(n) for n in results], np.float64)
+    assert len(set(s)) > 1, "partition is balanced; test would be vacuous"
+    w = s / s.sum()
+    expected = None
+    for (n, r), wn in zip(results.items(), w):
+        t = jax.tree_util.tree_map(
+            lambda u, wn=wn: wn * np.asarray(u, np.float64), r.host_params())
+        expected = t if expected is None else \
+            jax.tree_util.tree_map(np.add, expected, t)
+
+    eng.run_round()
+    for a, b in zip(jax.tree_util.tree_leaves(eng.params),
+                    jax.tree_util.tree_leaves(expected)):
+        np.testing.assert_allclose(np.asarray(a, np.float64), b, atol=1e-5)
+
+
+def test_sample_weighted_default_off_keeps_history(image_setup):
+    model, px, py, test = image_setup
+    h_def = run_scheme("heroes", model, px, py, test, rounds=2, cfg=_cfg())
+    h_off = run_scheme("heroes", model, px, py, test, rounds=2,
+                       cfg=_cfg(sample_weighted=False))
+    _assert_history_parity(h_def, h_off, acc_atol=0.0)
+
+
+@pytest.mark.parametrize("scheme", ["fedavg", "heroes"])
+def test_sample_weighted_runs_all_loops(scheme, image_setup):
+    """Weighted merges stay finite in both round loops (semi-async
+    multiplies sample weights into the staleness discounts)."""
+    model, px, py, test = image_setup
+    for kw in (dict(), dict(round_mode="semi_async", async_k=2)):
+        hist = run_scheme(scheme, model, px, py, test, rounds=4,
+                          cfg=_cfg(sample_weighted=True, eval_every=4, **kw))
+        accs = [h.accuracy for h in hist if h.accuracy is not None]
+        assert accs and np.isfinite(accs[-1])
+
+
+# ---------------------------------------------------------------------------
+# semi-async empty-pool guard
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", ["fedavg", "heroes"])
+def test_semi_async_empty_pool_skips_dispatch(scheme, image_setup):
+    """clients_per_round > num_clients with every client already in
+    flight must aggregate what is there instead of crashing in
+    rng.choice / dispatching an empty assignment."""
+    model, px, py, test = image_setup
+    cfg = _cfg(num_clients=10, clients_per_round=12, round_mode="semi_async",
+               async_k=2, eval_every=100)
+    eng = build_runner(scheme, model, px, py, test, cfg=cfg)
+    # force the saturated state: every client in flight before the round
+    eng.loop._dispatch(list(range(10)))
+    assert len(eng.loop.in_flight) == 10
+    log = eng.run_round()  # need = 2 > 0, pool empty
+    assert log.round == 1 and log.makespan > 0
+    # and the loop keeps making progress afterwards
+    assert eng.run_round().round == 2
 
 
 # ---------------------------------------------------------------------------
