@@ -1,0 +1,151 @@
+"""Rank-space vs materialize client compute through the cohort hot loop.
+
+Times full cohort-trainer rounds (the one compiled vmap+scan call per
+round) with ``FLConfig.forward_impl`` pinned to ``materialize`` vs
+``rank_space`` at widths 1..3 on the cnn and rnn models — every client
+in the cohort is forced to the same width so each round isolates one
+(model, width, impl) cell.  Same protocol as BENCH_engine: repeats are
+*interleaved* (mat, rank, mat, rank, ...) and the per-impl median is
+reported, so slow-neighbor noise on shared boxes doesn't land on one
+side of the ratio.
+
+Alongside the timings the static FLOPs model is recorded for every
+width: per-layer ``apply_flops`` / ``compose_flops + dense_apply_flops``
+and the model-level ratio, i.e. the number the ``auto`` knob acts on.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_compose.py [--smoke]
+Writes BENCH_compose.json next to the repo root (override with --out).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+from pathlib import Path
+
+import sys
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def flops_table(model_name: str) -> dict:
+    """apply vs compose+dense-apply FLOPs per training batch, per width."""
+    from repro.core.composition import (apply_flops, compose_flops,
+                                        dense_apply_flops)
+    from repro.fl.models import MODELS, LayerHint
+
+    model = MODELS[model_name]()
+    batch = 16
+    out = {}
+    for p in (1, 2, 3):
+        layers = {}
+        rank_total = mat_total = 0
+        for name, spec in model.specs.items():
+            hint = (model.hints or {}).get(name, LayerHint())
+            apps = batch * hint.apps_per_sample
+            rank = apply_flops(p, spec, applications=apps)
+            dense = 0 if hint.dense_apply_free else dense_apply_flops(
+                p, spec, applications=apps)
+            mat = compose_flops(p, spec) + dense
+            if not hint.rank_capable:  # pinned to materialize (scan reuse)
+                rank = mat
+            layers[name] = {"apply_flops": rank, "materialize_flops": mat}
+            rank_total += rank
+            mat_total += mat
+        out[f"width_{p}"] = {
+            "layers": layers,
+            "rank_space_flops": rank_total,
+            "materialize_flops": mat_total,
+            "flops_ratio": mat_total / rank_total,
+        }
+    return out
+
+
+def bench_round(task: str, width: int, forward_impl: str, rounds: int,
+                warmup: int) -> float:
+    """Per-round cohort time with every client pinned to ``width``."""
+    from repro.fl import (FLConfig, build_image_setup, build_runner,
+                          build_text_setup)
+
+    if task == "rnn":
+        model, px, py, test = build_text_setup(num_clients=10, seed=0)
+    else:
+        model, px, py, test = build_image_setup(num_clients=10, seed=0)
+    cfg = FLConfig(num_clients=10, clients_per_round=10, tau_fixed=10,
+                   eval_every=10_000, estimate=False, trainer="cohort",
+                   seed=0, forward_impl=forward_impl)
+    # flanc assigns width by hardware tier — force a uniform-tier network
+    # (TIER_NAMES order: laptop=3, agx_xavier=2, xavier_nx/tx2=1) so the
+    # whole cohort trains at the target width
+    tier_weights = {3: (1.0, 0.0, 0.0, 0.0), 2: (0.0, 1.0, 0.0, 0.0),
+                    1: (0.0, 0.0, 0.0, 1.0)}[width]
+    eng = build_runner("flanc", model, px, py, test, cfg=cfg,
+                       tier_weights=tier_weights)
+    for _ in range(warmup):
+        eng.run_round()
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        eng.run_round()
+    return (time.perf_counter() - t0) / rounds
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 repeat, fewer rounds (the CI 4-device leg)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    repeats = 1 if args.smoke else 3
+    rounds = 2 if args.smoke else 5
+    warmup = 2
+
+    results = {}
+    for task in ("cnn", "rnn"):
+        results[task] = {"flops": flops_table(task)}
+        widths = (3,) if args.smoke else (1, 2, 3)
+        for width in widths:
+            times = {"materialize": [], "rank_space": []}
+            for _ in range(repeats):
+                for impl in ("materialize", "rank_space"):  # interleaved
+                    # warmup every run: the two impls compile DIFFERENT
+                    # cohort steps (forward_impl keys the jit cache), so
+                    # round 1 of each fresh engine pays its own compile
+                    times[impl].append(
+                        bench_round(task, width, impl, rounds, warmup))
+            med = {k: statistics.median(v) for k, v in times.items()}
+            cell = {
+                "materialize_per_round_s": med["materialize"],
+                "rank_space_per_round_s": med["rank_space"],
+                "speedup": med["materialize"] / med["rank_space"],
+                "flops_ratio":
+                    results[task]["flops"][f"width_{width}"]["flops_ratio"],
+                "rounds_timed": rounds, "repeats": repeats,
+            }
+            results[task][f"width_{width}"] = cell
+            print(f"{task} width {width}: materialize "
+                  f"{med['materialize']*1e3:8.1f} ms/round   rank_space "
+                  f"{med['rank_space']*1e3:8.1f} ms/round   speedup "
+                  f"{cell['speedup']:.2f}x   (flops ratio "
+                  f"{cell['flops_ratio']:.2f}x)")
+
+    out = {
+        "benchmark": "compose_rank_space_vs_materialize",
+        "setup": {"scheme": "flanc", "num_clients": 10,
+                  "clients_per_round": 10, "tau": 10, "batch_size": 16,
+                  "trainer": "cohort",
+                  "note": "uniform-tier network pins every client to the "
+                          "target width; flops tables use the static "
+                          "model the auto knob reads"},
+        "results": results,
+    }
+    path = Path(args.out) if args.out else \
+        Path(__file__).resolve().parents[1] / "BENCH_compose.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,11 +3,15 @@
 from repro.core.composition import (  # noqa: F401
     CompositionPlan,
     CompositionSpec,
+    apply_factors,
+    apply_flops,
     compose,
     compose_flops,
     decompose,
+    dense_apply_flops,
     gather_blocks,
     init_factors,
+    rank_space_wins,
     select_blocks,
 )
 from repro.core.aggregation import (  # noqa: F401

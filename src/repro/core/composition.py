@@ -134,11 +134,37 @@ def select_blocks(counters: Array | np.ndarray, p: int, spec: CompositionSpec) -
 
 
 def gather_blocks(coefficient: Array, block_ids) -> Array:
-    """Reduced coefficient ``û``: gather ``(m, R, O)`` from ``(P^2, R, O)``."""
-    return jnp.take(coefficient, jnp.asarray(block_ids), axis=0)
+    """Reduced coefficient ``û``: gather ``(m, R, O)`` from ``(P^2, R, O)``.
+
+    ``block_ids`` are host-side control indices (PS logic, never traced),
+    so they are validated eagerly: ``jnp.take`` clamps out-of-range
+    indices silently, which turns an id-bookkeeping bug (e.g. handing an
+    anchored ``P``-block layer the shared ``P^2``-counter ids) into a
+    wrong-but-plausible gather instead of an error.
+    """
+    ids = np.asarray(block_ids)
+    n = coefficient.shape[0]
+    if ids.size and (ids.min() < 0 or ids.max() >= n):
+        raise ValueError(
+            f"block ids out of range: got ids in [{ids.min()}, {ids.max()}] "
+            f"for a coefficient with {n} blocks")
+    return jnp.take(coefficient, jnp.asarray(ids), axis=0)
 
 
-def compose(basis: Array, reduced_coeff: Array, p: int, spec: CompositionSpec) -> Array:
+def _pallas_compose_default() -> bool:
+    """Route compose through the Pallas kernel only where it compiles
+    to the platform's matrix unit; einsum (XLA) everywhere else — the
+    CPU einsum is also the bitwise reference path the parity tests and
+    seed histories anchor on.  The platform gate is owned by
+    :func:`repro.kernels.compose.default_interpret` so the kernel and
+    this router can never disagree."""
+    from repro.kernels.compose import default_interpret
+
+    return not default_interpret()
+
+
+def compose(basis: Array, reduced_coeff: Array, p: int, spec: CompositionSpec,
+            *, backend: str | None = None) -> Array:
     """Compose the p-width weight:  v · û  →  reshape  (Fig. 1).
 
     Args:
@@ -146,6 +172,9 @@ def compose(basis: Array, reduced_coeff: Array, p: int, spec: CompositionSpec) -
       reduced_coeff: ``(m, R, O)`` — the gathered blocks (m = p^2 for
         "square" mode, p for anchored modes).
       p: target width.
+      backend: ``"einsum"`` (reference), ``"pallas"`` (the
+        :mod:`repro.kernels.compose` kernel, interpret-gated per
+        platform), or ``None`` — pallas on TPU, einsum elsewhere.
 
     Returns:
       the ``spec.weight_shape(p)`` weight.  For "square" the intermediate
@@ -155,8 +184,18 @@ def compose(basis: Array, reduced_coeff: Array, p: int, spec: CompositionSpec) -
     m = spec.blocks_for_width(p)
     if reduced_coeff.shape[0] != m:
         raise ValueError(f"expected {m} blocks, got {reduced_coeff.shape[0]}")
-    # (ksq, I, R) x (m, R, O) -> (ksq, I, m, O)
-    inter = jnp.einsum("kir,mro->kimo", basis, reduced_coeff)
+    if backend is None:
+        backend = "pallas" if _pallas_compose_default() else "einsum"
+    if backend == "pallas":
+        from repro.kernels.compose import compose_pallas
+
+        flat = compose_pallas(basis, reduced_coeff)  # (ksq, I, m*O)
+        inter = flat.reshape(flat.shape[0], flat.shape[1], m, -1)
+    elif backend == "einsum":
+        # (ksq, I, R) x (m, R, O) -> (ksq, I, m, O)
+        inter = jnp.einsum("kir,mro->kimo", basis, reduced_coeff)
+    else:
+        raise ValueError(f"unknown compose backend {backend!r}")
     ksq, I, _, O = inter.shape
     if spec.mode == "grow_out":
         return inter.reshape(ksq, I, m * O)
@@ -172,6 +211,152 @@ def compose_flops(p: int, spec: CompositionSpec) -> int:
     """MACs*2 for the compose contraction at width p."""
     m = spec.blocks_for_width(p)
     return 2 * spec.ksq * spec.base_in * spec.rank * m * spec.base_out
+
+
+# ---------------------------------------------------------------------------
+# Rank-space application: y = x · (v·û) computed as (x·v)·û
+# ---------------------------------------------------------------------------
+
+
+def _coeff_blocks(reduced_coeff: Array, p: int, spec: CompositionSpec) -> Array:
+    m = spec.blocks_for_width(p)
+    if reduced_coeff.shape[-3] != m:
+        raise ValueError(f"expected {m} blocks, got {reduced_coeff.shape[-3]}")
+    if spec.mode == "square":
+        # block a*p+b: a = input-group, b = output-group (the compose
+        # reshape in :func:`compose`) -> (p, p, R, O)
+        return reduced_coeff.reshape(
+            reduced_coeff.shape[:-3] + (p, p) + reduced_coeff.shape[-2:])
+    return reduced_coeff
+
+
+def apply_factors(x: Array, basis: Array, reduced_coeff: Array, p: int,
+                  spec: CompositionSpec, mode: str = "dense", *,
+                  stride: int = 1) -> Array:
+    """Apply the factorized weight to ``x`` *without materialising it*.
+
+    Exploits ``w = v·û``: instead of composing the ``(ksq, pI, pO)``
+    weight and paying a dense-width contraction, the input is projected
+    into rank space through the basis (I → R per input group) and the
+    cheap coefficient contraction finishes the job (R → pO).  With
+    R below the composed channel widths this cuts the per-application
+    FLOPs roughly ``pI/R``-fold — the low-rank trick dense-slice
+    width scaling (HeteroFL/AnycostFL) cannot exploit.
+
+    Args:
+      x: ``mode="dense"``: ``(..., pI_total)`` row vectors (``pI_total``
+        is ``weight_shape(p)[1]``).  ``mode="conv"``: ``(N, H, W, C)``
+        NHWC activations with ``C = weight_shape(p)[1]``.
+      basis: ``(ksq, I, R)``.
+      reduced_coeff: ``(m, R, O)`` gathered blocks.
+      p: target width.
+      spec: the layer's :class:`CompositionSpec`.
+      mode: how the weight is applied — ``"dense"`` (matmul, requires
+        ``spec.ksq == 1``) or ``"conv"`` (k×k SAME conv: a basis conv
+        I→R per input group followed by a 1×1 coefficient contraction
+        R→pO, the paper's block reshape folded into the contraction).
+      stride: conv stride (``mode="conv"`` only).
+
+    Returns:
+      exactly what ``x @ compose(...)`` / ``conv(x, compose(...))``
+      returns, up to float re-association.
+    """
+    if mode == "dense":
+        if spec.ksq != 1:
+            raise ValueError("dense apply requires ksq == 1")
+        _coeff_blocks(reduced_coeff, p, spec)  # validates the block count
+        # the fused custom_vjp primitive: Pallas forward on compiled
+        # backends, einsum reference elsewhere; backward stays in rank
+        # space either way (kernels/compose.py).
+        from repro.kernels.compose import rank_dense_apply
+
+        return rank_dense_apply(x, basis, reduced_coeff, p, spec.mode)
+    if mode != "conv":
+        raise ValueError(f"unknown apply mode {mode!r}")
+    u = _coeff_blocks(reduced_coeff, p, spec)
+    k = int(round(spec.ksq ** 0.5))
+    if k * k != spec.ksq:
+        raise ValueError(f"conv apply needs square ksq, got {spec.ksq}")
+    vk = basis.reshape(k, k, spec.base_in, spec.rank)
+    dn = ("NHWC", "HWIO", "NHWC")
+    if spec.mode == "grow_out":
+        t = jax.lax.conv_general_dilated(
+            x, vk, (stride, stride), "SAME", dimension_numbers=dn)
+        y = jnp.einsum("nhwr,bro->nhwbo", t, u)
+        return y.reshape(y.shape[:-2] + (p * spec.base_out,))
+    # square / grow_in: p input groups share the basis — fold the group
+    # axis into the batch so ONE dense conv (N*p, H, W, I) -> R serves
+    # every group, then contract groups in rank space.
+    N, H, W, _ = x.shape
+    xg = x.reshape(N, H, W, p, spec.base_in)
+    xg = jnp.transpose(xg, (0, 3, 1, 2, 4)).reshape(N * p, H, W, spec.base_in)
+    t = jax.lax.conv_general_dilated(
+        xg, vk, (stride, stride), "SAME", dimension_numbers=dn)
+    Ho, Wo = t.shape[1], t.shape[2]
+    t = t.reshape(N, p, Ho, Wo, spec.rank)
+    if spec.mode == "grow_in":
+        return jnp.einsum("nahwr,aro->nhwo", t, u)
+    y = jnp.einsum("nahwr,abro->nhwbo", t, u)
+    return y.reshape(N, Ho, Wo, p * spec.base_out)
+
+
+def apply_flops(p: int, spec: CompositionSpec, *, applications: int = 1) -> int:
+    """MACs*2 of the *rank-space* application per ``applications`` output
+    positions (dense row-vectors, or conv output pixels).
+
+    Basis projection: every input group (p for square/grow_in, 1 for
+    grow_out) pays ``ksq·I·R``; coefficient contraction: every block
+    pays ``R·O``.
+    """
+    groups = 1 if spec.mode == "grow_out" else p
+    basis = spec.ksq * groups * spec.base_in * spec.rank
+    coeff = spec.blocks_for_width(p) * spec.rank * spec.base_out
+    return 2 * applications * (basis + coeff)
+
+
+def dense_apply_flops(p: int, spec: CompositionSpec, *,
+                      applications: int = 1) -> int:
+    """MACs*2 of applying the *materialised* p-width weight per
+    ``applications`` output positions."""
+    _, pi, po = spec.weight_shape(p)
+    return 2 * applications * spec.ksq * pi * po
+
+
+def rank_space_wins(p: int, spec: CompositionSpec, *, applications: int,
+                    dense_apply_free: bool = False,
+                    overhead: float = 1.0) -> bool:
+    """Static FLOPs decision: does rank-space application beat
+    materialise-then-apply for one evaluation of the layer?
+
+    ``applications`` is the TOTAL application count per evaluation —
+    batch × output positions × any weight *reuse* (a scan-carried RNN
+    weight applied T times counts T applications, amortising the one
+    compose) — so reuse-heavy layers correctly tilt toward
+    materialisation.  ``dense_apply_free`` marks gather-style layers
+    (embeddings) whose materialised application costs no FLOPs.
+
+    ``overhead`` scales the rank-space side: callers fold in measured
+    per-platform costs the FLOPs model cannot see (the conv rank path's
+    extra group-batched conv + contraction ops, which dominate on
+    op-overhead-bound CPU hosts — see ``conv_rank_overhead``).
+    """
+    dense = 0 if dense_apply_free else dense_apply_flops(
+        p, spec, applications=applications)
+    return overhead * apply_flops(p, spec, applications=applications) < (
+        compose_flops(p, spec) + dense)
+
+
+def conv_rank_overhead() -> float:
+    """Effective cost multiplier of the conv rank path on this platform.
+
+    On accelerator backends the basis-conv + 1×1 contraction is
+    FLOPs-bound (multiplier 1).  On CPU hosts the extra ops (group
+    batching transposes, the second contraction) dominate the tiny
+    per-channel convs: BENCH_compose measures the rank path ~2.7x more
+    expensive than its FLOPs count at the benchmark shapes, so ``auto``
+    only picks it there when the FLOPs advantage clears that bar.
+    """
+    return 1.0 if jax.default_backend() in ("tpu", "gpu") else 3.0
 
 
 def decompose(
@@ -241,12 +426,26 @@ class CompositionPlan:
         return params
 
     def reduce(self, params, block_ids) -> Dict[str, Dict[str, Array]]:
-        """Ship-to-client view: full basis + gathered coefficient blocks."""
+        """Ship-to-client view: full basis + gathered coefficient blocks.
+
+        ``block_ids`` come from the shared ``P^2`` counter, so they are
+        only valid for "square" layers; anchored-mode layers hold ``P``
+        blocks and need their own id set.  Ids are validated against
+        each layer's ``spec.num_blocks`` — ``jnp.take`` would otherwise
+        clamp out-of-range ids silently and gather the wrong block.
+        """
+        ids = np.asarray(block_ids)
         out = {}
-        for name in self.layers:
+        for name, spec in self.layers.items():
+            if ids.size and (ids.min() < 0 or ids.max() >= spec.num_blocks):
+                raise ValueError(
+                    f"layer {name!r} ({spec.mode}) has {spec.num_blocks} "
+                    f"blocks but got ids in [{ids.min()}, {ids.max()}] — "
+                    "anchored layers need their own id set, not the "
+                    "shared P^2-counter ids")
             out[name] = {
                 "basis": params[name]["basis"],
-                "coeff": gather_blocks(params[name]["coeff"], block_ids),
+                "coeff": gather_blocks(params[name]["coeff"], ids),
             }
         return out
 

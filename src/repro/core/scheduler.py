@@ -20,7 +20,7 @@ and emits per-client assignments.  No jax tracing here.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
 import numpy as np
 

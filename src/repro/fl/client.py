@@ -1,9 +1,14 @@
 """Client-side procedure (paper Alg. 2).
 
-A client receives (basis, reduced coefficient, tau), composes its local
-model (or trains the factors directly — the factorized-forward
-formulation; DESIGN.md §4), runs tau local SGD iterations over its data,
-estimates (L, sigma^2, G^2) and returns updated tensors + estimates.
+A client receives (basis, reduced coefficient, tau), runs tau local SGD
+iterations over its data directly on the factors, estimates
+(L, sigma^2, G^2) and returns updated tensors + estimates.  How each
+layer weight is *applied* inside the loss is the ``forward_impl`` knob:
+composed first (``materialize`` — the historical bitwise path) or
+contracted in rank space without ever building the p-width weight
+(``rank_space`` / the FLOPs-driven ``auto`` default); see
+``FLModelDef.prepare_weights`` and docs/ENGINE.md "Rank-space client
+compute".
 """
 
 from __future__ import annotations
@@ -36,14 +41,15 @@ def _ce(logits: Array, labels: Array) -> Array:
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_fns(model: FLModelDef, width: int, factorized: bool):
+def _jitted_fns(model: FLModelDef, width: int, factorized: bool,
+                forward_impl: str = "auto"):
     # Keyed on the model *instance* (FLModelDef hashes by identity): the
     # old string registry key dropped constructor kwargs that are not part
     # of the encoding (e.g. ``in_ch``), silently training the wrong model.
 
     def loss_fn(params, batch):
-        w = (model.compose_all(params, width) if factorized
-             else {k: v for k, v in params.items()})
+        w = (model.prepare_weights(params, width, batch, forward_impl)
+             if factorized else {k: v for k, v in params.items()})
         logits = model.forward(w, width, batch)
         return _ce(logits, batch["labels"])
 
@@ -87,9 +93,18 @@ def local_train(
     batch_size: int = 16,
     factorized: bool = True,
     estimate: bool = True,
+    forward_impl: str = "auto",
 ) -> ClientResult:
-    """tau local SGD iterations (Alg. 2 lines 4-9)."""
-    loss_jit, grad_fn, sgd_step = _jitted_fns(model, width, factorized)
+    """tau local SGD iterations (Alg. 2 lines 4-9).
+
+    ``forward_impl`` selects the factorized compute path (see
+    ``FLConfig.forward_impl``): ``"materialize"`` reproduces the
+    historical compose-then-apply updates bitwise; ``"auto"`` (default)
+    applies factors in rank space wherever the static FLOPs model says
+    it is cheaper.  Ignored when ``factorized=False``.
+    """
+    loss_jit, grad_fn, sgd_step = _jitted_fns(model, width, factorized,
+                                              forward_impl)
     params0 = reduced_params
     params = params0
     n = len(y)

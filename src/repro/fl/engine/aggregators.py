@@ -251,7 +251,11 @@ class HeroesAggregator(Aggregator):
 
     def evaluate(self) -> float:
         # evaluate the width-``eval_width`` sub-model built from the first
-        # blocks (the full set when eval_width == P, the usual case)
+        # blocks (the full set when eval_width == P, the usual case).
+        # Evaluation always materialises (compose_all): the weights are
+        # composed ONCE per eval and reused across every streamed test
+        # slice, and keeping eval on the materialize path makes reported
+        # accuracies independent of cfg.forward_impl.
         eng = self.eng
         ew = eng.eval_width
         square_spec = next(

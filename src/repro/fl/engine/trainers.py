@@ -79,6 +79,7 @@ class SequentialTrainer(LocalTrainer):
                 np.random.default_rng((eng.cfg.seed, eng.round, n)),
                 eng.cfg.batch_size, factorized=eng.factorized,
                 estimate=eng.estimate,
+                forward_impl=eng.cfg.forward_impl,
             )
             out[n] = ClientResult(jax.device_get(res.params), res.estimates,
                                   res.loss_before, res.loss_after)
@@ -86,7 +87,8 @@ class SequentialTrainer(LocalTrainer):
 
 
 @functools.lru_cache(maxsize=32)
-def _cohort_fns(model: FLModelDef, width: int, factorized: bool, mesh=None):
+def _cohort_fns(model: FLModelDef, width: int, factorized: bool, mesh=None,
+                forward_impl: str = "auto"):
     """Compiled cohort functions, keyed on the model instance identity.
 
     With ``mesh`` (a 1-D cohort mesh from :func:`repro.sharding.fl.
@@ -95,11 +97,18 @@ def _cohort_fns(model: FLModelDef, width: int, factorized: bool, mesh=None):
     contiguous client shard independently (local updates need no
     collectives), so per-client math is identical to the single-device
     form and the trained params come back sharded over the same axis the
-    collective merge consumes."""
+    collective merge consumes.
+
+    ``forward_impl`` selects the factorized client compute path
+    (``FLConfig.forward_impl``): with ``"auto"``/``"rank_space"`` the
+    per-client loss applies factors in rank space — under the client
+    vmap the rank contractions batch over the cohort axis exactly like
+    the dense ops, so the whole stacked cohort shares the cheaper
+    path in the ONE compiled call."""
 
     def loss_fn(params, batch):
-        w = (model.compose_all(params, width) if factorized
-             else {k: v for k, v in params.items()})
+        w = (model.prepare_weights(params, width, batch, forward_impl)
+             if factorized else {k: v for k, v in params.items()})
         logits = model.forward(w, width, batch)
         return client_lib._ce(logits, batch["labels"])
 
@@ -301,7 +310,9 @@ class CohortTrainer(LocalTrainer):
                        for k, v in batches_np.items()}
             taus = jax.device_put(taus_arr, cs)
 
-        train_fn, est_fn = _cohort_fns(model, width, eng.factorized, mesh)
+        train_fn, est_fn = _cohort_fns(
+            model, width, eng.factorized, mesh,
+            cfg.forward_impl)
         final, loss_b, loss_a = train_fn(stacked, batches, taus, cfg.lr)
         ests = None
         if est_np is not None:
@@ -336,12 +347,13 @@ class CohortTrainer(LocalTrainer):
 
 
 @functools.lru_cache(maxsize=32)
-def _prox_fns(model: FLModelDef, width: int, factorized: bool):
+def _prox_fns(model: FLModelDef, width: int, factorized: bool,
+              forward_impl: str = "auto"):
     """Compiled FedProx step/loss/grad, keyed on the model instance."""
 
     def loss_fn(params, batch):
-        w = (model.compose_all(params, width) if factorized
-             else {k: v for k, v in params.items()})
+        w = (model.prepare_weights(params, width, batch, forward_impl)
+             if factorized else {k: v for k, v in params.items()})
         logits = model.forward(w, width, batch)
         return client_lib._ce(logits, batch["labels"])
 
@@ -381,8 +393,9 @@ class ProximalTrainer(LocalTrainer):
         xkey = "tokens" if eng.model.name == "rnn" else "x"
         out: Dict[int, ClientResult] = {}
         for n, a in assigns.items():
-            loss_fn, grad_fn, prox_step = _prox_fns(eng.model, a["width"],
-                                                    eng.factorized)
+            loss_fn, grad_fn, prox_step = _prox_fns(
+                eng.model, a["width"], eng.factorized,
+                cfg.forward_impl)
             anchor = eng.aggregator.client_params(n, a)
             nsamp = eng.data.num_samples(n)
             b_eff = min(cfg.batch_size, nsamp)

@@ -10,8 +10,20 @@ Two parameterisations per model:
   * dense       — params are materialised width-P weights; used by
                   FedAvg/ADP/HeteroFL (pruning slices sub-weights out).
 
-Forward passes are width-polymorphic: they take the *composed* weight
-list, so the same network code serves both parameterisations.
+Forward passes are width-polymorphic AND parameterisation-aware: each
+layer entry in the weight dict is either a composed ``(ksq, pI, pO)``
+array (applied densely — bit-for-bit the historical path) or the raw
+``{"basis", "coeff"}`` factors (applied in *rank space* through
+:func:`repro.core.composition.apply_factors`, never materialising the
+p-width weight).  :meth:`FLModelDef.prepare_weights` builds that dict
+from reduced factors under a ``forward_impl`` knob:
+
+  materialize  compose every layer (exactly ``compose_all`` — the
+               bitwise reference the seed histories anchor on);
+  rank_space   keep factors for every rank-capable layer;
+  auto         pick per (layer, width, batch) by the static FLOPs model
+               (``apply_flops`` vs ``compose_flops + dense_apply_flops``),
+               with per-layer reuse folded into the application count.
 """
 
 from __future__ import annotations
@@ -19,15 +31,54 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any, Callable, Dict, List, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.composition import CompositionSpec, compose, gather_blocks, init_factors
+from repro.core.composition import (CompositionSpec, apply_factors, compose,
+                                    conv_rank_overhead, gather_blocks,
+                                    init_factors, rank_space_wins)
 
 Array = jax.Array
+
+FORWARD_IMPLS = ("auto", "materialize", "rank_space")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerHint:
+    """Static per-layer facts feeding the ``auto`` forward-impl choice.
+
+    Attributes:
+      apps_per_sample: weight applications per input sample per forward
+        — conv output positions, RNN sequence steps, 1 for a head — at
+        the model's *reference* input geometry (benchmark tables, or
+        when no batch is in scope).  Any *reuse* of one composed weight
+        (a scan-carried RNN weight hit T times) is folded in here, so
+        the decision correctly amortises the one-off compose against
+        the true application count.
+      apps_fn: optional ``(data_shape) -> apps_per_sample`` deriving the
+        count from the actual traced input shape ``(B, ...)`` (image
+        H×W, sequence length), so ``auto`` stays correct when inputs
+        differ from the reference geometry.  Preferred over the static
+        count whenever a batch is available.
+      rank_capable: False pins the layer to materialisation regardless
+        of FLOPs — e.g. a scan-carried recurrence weight, which is
+        composed once per step and reused T times in the carry loop.
+      dense_apply_free: the materialised application costs no FLOPs
+        (embedding gathers) — rank space then only pays, never saves.
+    """
+
+    apps_per_sample: int = 1
+    apps_fn: Optional[Callable[[tuple], int]] = None
+    rank_capable: bool = True
+    dense_apply_free: bool = False
+
+    def apps(self, data_shape: Optional[tuple] = None) -> int:
+        if self.apps_fn is not None and data_shape is not None:
+            return max(int(self.apps_fn(data_shape)), 1)
+        return self.apps_per_sample
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -43,9 +94,12 @@ class FLModelDef:
 
     name: str
     specs: Dict[str, CompositionSpec]  # ordered: forward consumption order
-    forward: Callable  # (weights: Dict[str, Array], width, batch) -> logits
+    forward: Callable  # (weights: Dict[str, Array|factors], width, batch) -> logits
     flops_per_sample: Callable  # (width) -> flops of fwd+bwd per sample
     num_classes: int
+    # static per-layer facts for the auto forward-impl choice; layers
+    # without a hint default to LayerHint() (1 application, rank-capable)
+    hints: Optional[Dict[str, LayerHint]] = None
 
     # ---- factorized parameterisation -----------------------------------
     def init_factorized(self, key) -> Dict[str, Dict[str, Array]]:
@@ -71,6 +125,70 @@ class FLModelDef:
     def compose_all(self, reduced, width: int) -> Dict[str, Array]:
         return {
             name: compose(reduced[name]["basis"], reduced[name]["coeff"], width, spec)
+            for name, spec in self.specs.items()
+        }
+
+    def layer_impls(self, width: int, batch_size: int, forward_impl: str,
+                    data_shape: Optional[tuple] = None) -> Dict[str, str]:
+        """Per-layer materialize/rank_space choice (static, per trace).
+
+        ``auto`` compares, per layer, the rank-space application cost
+        against compose + dense application over the layer's total
+        application count ``batch_size * hint.apps(data_shape)`` — so a
+        bigger batch amortises the compose and a reuse-heavy layer
+        (scan recurrence) tilts toward materialisation.  ``data_shape``
+        (the input array's shape) lets hints derive true application
+        counts from the traced geometry instead of the model's
+        reference input size.
+        """
+        if forward_impl not in FORWARD_IMPLS:
+            raise ValueError(f"unknown forward_impl {forward_impl!r} "
+                             f"(expected one of {FORWARD_IMPLS})")
+        if forward_impl == "materialize":
+            return {name: "materialize" for name in self.specs}
+        hints = self.hints or {}
+        out = {}
+        for name, spec in self.specs.items():
+            hint = hints.get(name, LayerHint())
+            if not hint.rank_capable:
+                out[name] = "materialize"
+            elif forward_impl == "rank_space":
+                out[name] = "rank_space"
+            else:
+                apps = max(batch_size, 1) * hint.apps(data_shape)
+                # conv layers pay platform-dependent overhead beyond
+                # their FLOPs count (group-batched conv + second
+                # contraction) — on CPU hosts that eats a ~2x FLOPs
+                # advantage, on accelerators it doesn't
+                ovh = conv_rank_overhead() if spec.ksq > 1 else 1.0
+                out[name] = "rank_space" if rank_space_wins(
+                    width, spec, applications=apps,
+                    dense_apply_free=hint.dense_apply_free,
+                    overhead=ovh) else "materialize"
+        return out
+
+    def prepare_weights(self, reduced, width: int, batch,
+                        forward_impl: str = "materialize") -> Dict[str, Any]:
+        """The weight dict ``forward`` consumes, per ``forward_impl``.
+
+        ``materialize`` is exactly :meth:`compose_all` (the bitwise
+        reference path).  Otherwise rank-space layers pass their raw
+        ``{"basis", "coeff"}`` factors through untouched — the forward
+        applies them via rank-space contractions — and the rest compose
+        as usual.  The choice keys on static shapes only, so it is
+        jit-cache-stable per (width, batch shape).
+        """
+        if forward_impl == "materialize":
+            return self.compose_all(reduced, width)
+        data = (batch.get("x", batch.get("tokens"))
+                if isinstance(batch, dict) else None)
+        shape = tuple(data.shape) if data is not None else None
+        batch_size = shape[0] if shape else 1
+        impls = self.layer_impls(width, batch_size, forward_impl, shape)
+        return {
+            name: (reduced[name] if impls[name] == "rank_space" else
+                   compose(reduced[name]["basis"], reduced[name]["coeff"],
+                           width, spec))
             for name, spec in self.specs.items()
         }
 
@@ -113,6 +231,47 @@ def _conv(x: Array, w3: Array, k: int, stride: int = 1) -> Array:
     )
 
 
+# Parameterisation-aware layer application: a composed array runs the
+# exact historical dense op (bitwise); a {"basis","coeff"} factor dict
+# runs the rank-space contraction.  The isinstance dispatch is static at
+# trace time — the weight dict's pytree structure is fixed per jit.
+
+
+def _apply_conv(entry, x: Array, width: int, spec: CompositionSpec,
+                stride: int = 1) -> Array:
+    if isinstance(entry, dict):
+        return apply_factors(x, entry["basis"], entry["coeff"], width, spec,
+                             "conv", stride=stride)
+    return _conv(x, entry, int(round(spec.ksq ** 0.5)), stride=stride)
+
+
+def _apply_dense(entry, x: Array, width: int, spec: CompositionSpec) -> Array:
+    if isinstance(entry, dict):
+        return apply_factors(x, entry["basis"], entry["coeff"], width, spec,
+                             "dense")
+    return x @ entry[0]
+
+
+def _apply_embed(entry, tokens: Array, width: int,
+                 spec: CompositionSpec) -> Array:
+    """Embedding lookup: gather the composed rows, or gather the R-dim
+    basis rows and finish with the coefficient contraction."""
+    if isinstance(entry, dict):
+        emb_r = jnp.take(entry["basis"][0], tokens, axis=0)  # (..., R)
+        y = jnp.einsum("...r,bro->...bo", emb_r, entry["coeff"])
+        return y.reshape(y.shape[:-2] + (width * spec.base_out,))
+    return jnp.take(entry[0], tokens, axis=0)
+
+
+def _materialized(entry, width: int, spec: CompositionSpec) -> Array:
+    """Force-compose a layer the forward needs as a dense array (the
+    RNN's scan-carried recurrence weight: composed once per evaluation,
+    reused T times in the carry loop)."""
+    if isinstance(entry, dict):
+        return compose(entry["basis"], entry["coeff"], width, spec)
+    return entry
+
+
 # ---------------------------------------------------------------------------
 # CNN (paper's 4-layer CNN, reduced input 8x8)
 # ---------------------------------------------------------------------------
@@ -128,13 +287,15 @@ def make_cnn(max_width: int = 3, base: int = 8, rank: int = 8,
         "fc": CompositionSpec(max_width, rank, base, num_classes, ksq=1, mode="grow_in"),
     }
 
-    def forward(w: Dict[str, Array], width: int, batch) -> Array:
+    def forward(w: Dict[str, Any], width: int, batch) -> Array:
         x = batch["x"]
-        x = jax.nn.relu(_conv(x, w["conv1"], 3, stride=1))
-        x = jax.nn.relu(_conv(x, w["conv2"], 3, stride=2))
-        x = jax.nn.relu(_conv(x, w["conv3"], 3, stride=2))
+        x = jax.nn.relu(_apply_conv(w["conv1"], x, width, specs["conv1"]))
+        x = jax.nn.relu(_apply_conv(w["conv2"], x, width, specs["conv2"],
+                                    stride=2))
+        x = jax.nn.relu(_apply_conv(w["conv3"], x, width, specs["conv3"],
+                                    stride=2))
         x = jnp.mean(x, axis=(1, 2))  # GAP
-        return x @ w["fc"][0]
+        return _apply_dense(w["fc"], x, width, specs["fc"])
 
     def flops(width: int, hw: int = 8) -> int:
         p = width
@@ -145,7 +306,13 @@ def make_cnn(max_width: int = 3, base: int = 8, rank: int = 8,
         f += 2 * (p * base) * num_classes
         return 3 * f  # fwd + bwd ~ 3x
 
-    return FLModelDef("cnn", specs, forward, flops, num_classes)
+    hints = {  # conv output positions (strides 1, 2, 2); reference 8x8
+        "conv1": LayerHint(64, lambda s: s[1] * s[2]),
+        "conv2": LayerHint(16, lambda s: -(-s[1] // 2) * (-(-s[2] // 2))),
+        "conv3": LayerHint(4, lambda s: -(-s[1] // 4) * (-(-s[2] // 4))),
+        "fc": LayerHint(apps_per_sample=1),
+    }
+    return FLModelDef("cnn", specs, forward, flops, num_classes, hints)
 
 
 # ---------------------------------------------------------------------------
@@ -167,13 +334,13 @@ def make_resnet(max_width: int = 3, base: int = 8, rank: int = 8,
 
     def forward(w, width, batch):
         x = batch["x"]
-        x = jax.nn.relu(_conv(x, w["stem"], 3))
-        h = jax.nn.relu(_conv(x, w["b1a"], 3))
-        x = jax.nn.relu(x + _conv(h, w["b1b"], 3))
-        h = jax.nn.relu(_conv(x, w["b2a"], 3))
-        x = jax.nn.relu(x + _conv(h, w["b2b"], 3))
+        x = jax.nn.relu(_apply_conv(w["stem"], x, width, specs["stem"]))
+        h = jax.nn.relu(_apply_conv(w["b1a"], x, width, specs["b1a"]))
+        x = jax.nn.relu(x + _apply_conv(w["b1b"], h, width, specs["b1b"]))
+        h = jax.nn.relu(_apply_conv(w["b2a"], x, width, specs["b2a"]))
+        x = jax.nn.relu(x + _apply_conv(w["b2b"], h, width, specs["b2b"]))
         x = jnp.mean(x, axis=(1, 2))
-        return x @ w["fc"][0]
+        return _apply_dense(w["fc"], x, width, specs["fc"])
 
     def flops(width, hw: int = 8):
         p = width
@@ -182,7 +349,10 @@ def make_resnet(max_width: int = 3, base: int = 8, rank: int = 8,
         f += 2 * (p * base) * num_classes
         return 3 * f
 
-    return FLModelDef("resnet", specs, forward, flops, num_classes)
+    hints = {name: LayerHint(64, lambda s: s[1] * s[2])  # stride-1 convs
+             for name in ("stem", "b1a", "b1b", "b2a", "b2b")}
+    hints["fc"] = LayerHint(apps_per_sample=1)
+    return FLModelDef("resnet", specs, forward, flops, num_classes, hints)
 
 
 # ---------------------------------------------------------------------------
@@ -202,24 +372,53 @@ def make_rnn(max_width: int = 3, base: int = 16, rank: int = 8,
 
     def forward(w, width, batch):
         tokens = batch["tokens"]  # (B, T)
-        emb = jnp.take(w["embed"][0], tokens, axis=0)  # (B,T,pE)
-        wx, wh = w["wx"][0], w["wh"][0]
+        emb = _apply_embed(w["embed"], tokens, width, specs["embed"])  # (B,T,pE)
+        # the scan-carried recurrence weight is materialised ONCE per
+        # evaluation and reused T times in the carry loop — rank-space
+        # application would redo two contractions per step for a weight
+        # whose compose is amortised T-fold (see LayerHint.rank_capable)
+        wh = _materialized(w["wh"], width, specs["wh"])[0]
 
-        def step(h, x):
-            h = jnp.tanh(x @ wx + h @ wh)
-            return h, h
+        if isinstance(w["wx"], dict):
+            # input projection in rank space, hoisted out of the scan:
+            # all T steps contract through R in one shot
+            xp = apply_factors(emb, w["wx"]["basis"], w["wx"]["coeff"],
+                               width, specs["wx"], "dense")
+
+            def step(h, x):
+                h = jnp.tanh(x + h @ wh)
+                return h, h
+
+            xs = jnp.moveaxis(xp, 1, 0)
+        else:
+            wx = w["wx"][0]
+
+            def step(h, x):
+                h = jnp.tanh(x @ wx + h @ wh)
+                return h, h
+
+            xs = jnp.moveaxis(emb, 1, 0)
 
         h0 = jnp.zeros((emb.shape[0], wh.shape[0]), emb.dtype)
-        _, hs = jax.lax.scan(step, h0, jnp.moveaxis(emb, 1, 0))
+        _, hs = jax.lax.scan(step, h0, xs)
         hs = jnp.moveaxis(hs, 0, 1)  # (B,T,pH)
-        return hs @ w["out"][0]  # (B,T,V)
+        return _apply_dense(w["out"], hs, width, specs["out"])  # (B,T,V)
 
     def flops(width, seq: int = 32):
         p = width
         per_tok = 2 * vocab * (p * base) + 4 * (p * base) ** 2 + 2 * (p * base) * vocab
         return 3 * per_tok * seq
 
-    return FLModelDef("rnn", specs, forward, flops, vocab)
+    seq_len = lambda s: s[1]  # noqa: E731 — tokens (B, T)
+    hints = {
+        # embedding application is a gather — materialised cost ~0
+        "embed": LayerHint(32, seq_len, dense_apply_free=True),
+        "wx": LayerHint(32, seq_len),
+        # scan recurrence: composed once, reused T times per evaluation
+        "wh": LayerHint(32, seq_len, rank_capable=False),
+        "out": LayerHint(32, seq_len),
+    }
+    return FLModelDef("rnn", specs, forward, flops, vocab, hints)
 
 
 MODELS = {"cnn": make_cnn, "resnet": make_resnet, "rnn": make_rnn}

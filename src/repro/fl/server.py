@@ -260,6 +260,7 @@ class FlancRunner(BaseRunner):
             self.parts_x[n], self.parts_y[n], self.cfg.lr,
             np.random.default_rng((self.cfg.seed, self.round, n)),
             self.cfg.batch_size, factorized=True, estimate=False,
+            forward_impl=self.cfg.forward_impl,
         )
 
     def aggregate(self, results, assigns):
@@ -332,6 +333,7 @@ class HeroesRunner(BaseRunner):
             self.parts_x[n], self.parts_y[n], self.cfg.lr,
             np.random.default_rng((self.cfg.seed, self.round, n)),
             self.cfg.batch_size, factorized=True, estimate=self.cfg.estimate,
+            forward_impl=self.cfg.forward_impl,
         )
 
     def aggregate(self, results, assigns):
@@ -361,6 +363,11 @@ class HeroesRunner(BaseRunner):
             )
 
     def eval_accuracy(self):
+        # evaluation composes at full width P and reuses the ONE
+        # materialised weight set across the whole (streamed) test set —
+        # compose is paid once per eval, not per training step, so this
+        # stays the materialize path regardless of cfg.forward_impl (and
+        # keeps eval accuracies bitwise across forward_impl settings).
         full_ids = np.arange(self.scheduler.spec.num_blocks)
         anch_ids = np.arange(self.P)
         reduced = self.model.reduce(self.params, self.P, full_ids, anch_ids)

@@ -89,6 +89,24 @@ class FLConfig:
     # Intended for the dense/global-mean schemes; use with care under
     # extreme skew elsewhere.  Default off keeps seed histories bitwise.
     sample_weighted: bool = False
+    # Factorized (Heroes-style) client compute path: how each layer's
+    # weight is applied inside local updates.
+    #   "auto"        (default) per (layer, width, batch): rank-space
+    #                 application — (x·v)·û, never materialising the
+    #                 p-width weight — where the static FLOPs model says
+    #                 it wins (apply_flops vs compose_flops +
+    #                 dense_apply_flops), composed weights elsewhere.
+    #   "materialize" compose every layer first — the historical path,
+    #                 bitwise-identical seed histories on the platform
+    #                 they were recorded on (the CPU reference
+    #                 container, where compose stays the einsum; on TPU
+    #                 compose routes through the Pallas kernel and there
+    #                 is no prior-history baseline to match).
+    #   "rank_space"  force the factorized contraction for every
+    #                 rank-capable layer (scan-carried RNN recurrence
+    #                 weights stay materialised).
+    # Dense schemes (FedAvg/ADP/HeteroFL) are unaffected.
+    forward_impl: str = "auto"
     # Factorized (Heroes-style) schemes only: keep merged coefficient
     # tensors sharded over their block axis, per tensor, when the block
     # count divides the mesh (server state scales past one device).

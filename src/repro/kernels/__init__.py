@@ -1,7 +1,12 @@
-"""Pallas TPU kernels for the compute hot-spots (validated interpret=True
-on CPU; set interpret=False on real TPUs):
+"""Pallas kernels for the compute hot-spots.  ``interpret`` defaults are
+platform-gated (compiled on TPU, interpret where Pallas lacks a
+compiled lowering for these kernel bodies — see
+``repro.kernels.compose.default_interpret``):
 
-  compose           the paper's neural-composition product (Eq. 4)
+  compose           the paper's neural-composition product (Eq. 4),
+                    batched over an optional leading client axis
+  rank_dense_apply  fused rank-space factor application with a
+                    rank-space custom_vjp backward
   flash_attention   blockwise streaming-softmax attention (prefill/train)
   decode_attention  one-token GQA over a long KV cache (decode shapes)
   ssd_chunk         Mamba2 SSD intra-chunk block (SSM/hybrid archs)

@@ -1,13 +1,31 @@
-"""Pallas TPU kernel for the neural-composition product (paper Eq. 4).
+"""Pallas kernels for the neural-composition hot path (paper Eq. 4).
 
-Computes ``w[k] = basis[k] @ coeff_flat`` for every spatial slice k —
-the compose step that materialises a p-width weight from the shared basis
-and the gathered coefficient blocks.  On TPU this is the paper's compute
-primitive; each (bi x bj) output tile is an MXU matmul accumulated in
-fp32 VMEM scratch over R-chunks.
+Two primitives back the factorized client compute:
 
-Grid: (ksq, I/bi, MO/bj).  Block shapes are MXU-aligned (multiples of
-128 where the problem allows).
+``compose_pallas``
+    ``w[k] = basis[k] @ coeff_flat`` for every spatial slice ``k`` — the
+    compose step that materialises a p-width weight from the shared
+    basis and the gathered coefficient blocks.  Accepts an optional
+    *leading client axis* (``basis (C, ksq, I, R)``, ``coeff (C, m, R,
+    O)``) so ONE ``pallas_call`` serves a whole stacked cohort.  Each
+    (bi x bj) output tile is an MXU matmul accumulated in fp32.
+
+``rank_dense_apply``
+    the fused rank-space application ``y = (x·v)·û`` for dense layers,
+    wrapped in a :func:`jax.custom_vjp` whose backward ALSO stays in
+    rank space — neither direction ever materialises the p-width
+    weight.  The einsum formulation is the reference implementation and
+    the CPU path; on compiled-Pallas backends the forward runs as one
+    fused kernel (the rank-R intermediate lives in VMEM, never HBM).
+
+Platform gating: kernels compile on TPU and fall back to
+``interpret=True`` everywhere Pallas lacks a compiled lowering for
+*these* kernels — CPU hosts, and (for now) GPU: the block shapes and
+in-kernel reshapes here are Mosaic/TPU idioms the Triton lowering does
+not accept, so GPU hosts take the interpret/einsum reference paths
+until a Triton-friendly variant lands.  See :func:`default_interpret`;
+every ``interpret`` argument below defaults to that gate when left as
+``None``.
 """
 
 from __future__ import annotations
@@ -20,6 +38,23 @@ from jax.experimental import pallas as pl
 
 Array = jax.Array
 
+_COMPILED_BACKENDS = ("tpu",)
+
+
+def default_interpret() -> bool:
+    """True where these kernels have no compiled lowering (everything
+    but TPU — the kernel bodies use Mosaic idioms Triton rejects)."""
+    return jax.default_backend() not in _COMPILED_BACKENDS
+
+
+def _resolve(interpret) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+# ---------------------------------------------------------------------------
+# compose: v · û  (materialisation)
+# ---------------------------------------------------------------------------
+
 
 def _compose_kernel(v_ref, u_ref, o_ref):
     # v_ref: (1, bi, R)  u_ref: (R, bj)  o_ref: (1, bi, bj)
@@ -29,14 +64,17 @@ def _compose_kernel(v_ref, u_ref, o_ref):
     o_ref[0] = acc.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_i", "block_j", "interpret"))
-def compose_pallas(basis: Array, coeff: Array, *, block_i: int = 128,
-                   block_j: int = 128, interpret: bool = True) -> Array:
-    """basis (ksq, I, R), coeff (m, R, O) -> (ksq, I, m*O).
+def _compose_kernel_batched(v_ref, u_ref, o_ref):
+    # v_ref: (1, 1, bi, R)  u_ref: (1, R, bj)  o_ref: (1, 1, bi, bj)
+    acc = jnp.dot(
+        v_ref[0, 0], u_ref[0], preferred_element_type=jnp.float32
+    )
+    o_ref[0, 0] = acc.astype(o_ref.dtype)
 
-    The (m, R, O) coefficient blocks are flattened to (R, m*O) — the
-    column-blocked layout of the complete coefficient in the paper.
-    """
+
+@functools.partial(jax.jit, static_argnames=("block_i", "block_j", "interpret"))
+def _compose_pallas_3d(basis: Array, coeff: Array, *, block_i: int,
+                       block_j: int, interpret: bool) -> Array:
     ksq, I, R = basis.shape
     m, R2, O = coeff.shape
     assert R == R2
@@ -62,3 +100,200 @@ def compose_pallas(basis: Array, coeff: Array, *, block_i: int = 128,
         interpret=interpret,
     )(vp, up)
     return out[:, :I, :MO]
+
+
+@functools.partial(jax.jit, static_argnames=("block_i", "block_j", "interpret"))
+def _compose_pallas_4d(basis: Array, coeff: Array, *, block_i: int,
+                       block_j: int, interpret: bool) -> Array:
+    C, ksq, I, R = basis.shape
+    C2, m, R2, O = coeff.shape
+    assert R == R2 and C == C2
+    MO = m * O
+    u_flat = jnp.transpose(coeff, (0, 2, 1, 3)).reshape(C, R, MO)
+    bi = min(block_i, I)
+    bj = min(block_j, MO)
+    Ip = -(-I // bi) * bi
+    Jp = -(-MO // bj) * bj
+    vp = jnp.pad(basis, ((0, 0), (0, 0), (0, Ip - I), (0, 0)))
+    up = jnp.pad(u_flat, ((0, 0), (0, 0), (0, Jp - MO)))
+
+    out = pl.pallas_call(
+        _compose_kernel_batched,
+        grid=(C, ksq, Ip // bi, Jp // bj),
+        in_specs=[
+            pl.BlockSpec((1, 1, bi, R), lambda c, k, i, j: (c, k, i, 0)),
+            pl.BlockSpec((1, R, bj), lambda c, k, i, j: (c, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bi, bj),
+                               lambda c, k, i, j: (c, k, i, j)),
+        out_shape=jax.ShapeDtypeStruct((C, ksq, Ip, Jp), basis.dtype),
+        interpret=interpret,
+    )(vp, up)
+    return out[:, :, :I, :MO]
+
+
+def compose_pallas(basis: Array, coeff: Array, *, block_i: int = 128,
+                   block_j: int = 128, interpret: bool | None = None) -> Array:
+    """basis (ksq, I, R), coeff (m, R, O) -> (ksq, I, m*O).
+
+    With a leading client axis — basis (C, ksq, I, R), coeff (C, m, R,
+    O) — one ``pallas_call`` composes the whole cohort stack and the
+    result gains the same leading axis.  The (m, R, O) coefficient
+    blocks are flattened to (R, m*O): the column-blocked layout of the
+    complete coefficient in the paper.
+
+    ``interpret=None`` resolves via :func:`default_interpret` (compiled
+    on TPU, interpret elsewhere).
+    """
+    interpret = _resolve(interpret)
+    if basis.ndim == 4:
+        return _compose_pallas_4d(basis, coeff, block_i=block_i,
+                                  block_j=block_j, interpret=interpret)
+    return _compose_pallas_3d(basis, coeff, block_i=block_i,
+                              block_j=block_j, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# fused rank-space dense apply: y = (x·v)·û
+# ---------------------------------------------------------------------------
+
+
+def _rank_apply_kernel(x_ref, v_ref, u_ref, o_ref):
+    # x_ref (bm, g, I), v_ref (I, R), u_ref (g*R, D) -> o_ref (bm, D)
+    bm, g, I = x_ref.shape
+    t = jnp.dot(x_ref[...].reshape(bm * g, I), v_ref[...],
+                preferred_element_type=jnp.float32)
+    t = t.reshape(bm, g * v_ref.shape[1]).astype(x_ref.dtype)
+    y = jnp.dot(t, u_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def rank_apply_pallas(xg: Array, v2: Array, u2: Array, *,
+                      block_m: int = 256, interpret: bool | None = None
+                      ) -> Array:
+    """Fused two-stage contraction: xg (M, g, I) x v2 (I, R) x u2 (g*R, D)
+    -> (M, D); the (M, g*R) rank intermediate stays in VMEM."""
+    interpret = _resolve(interpret)
+    M, g, I = xg.shape
+    D = u2.shape[1]
+    bm = min(block_m, M)
+    Mp = -(-M // bm) * bm
+    xp = jnp.pad(xg, ((0, Mp - M), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _rank_apply_kernel,
+        grid=(Mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, g, I), lambda i: (i, 0, 0)),
+            pl.BlockSpec((I, v2.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec(u2.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, D), xg.dtype),
+        interpret=interpret,
+    )(xp, v2, u2)
+    return out[:M]
+
+
+def _fwd_math(x2: Array, v2: Array, u: Array, p: int, mode: str):
+    """Reference einsum forward on flattened rows: returns (y, t)."""
+    R, O = u.shape[-2], u.shape[-1]
+    if mode == "grow_out":
+        t = x2 @ v2  # (M, R)
+        y = jnp.einsum("mr,bro->mbo", t, u).reshape(x2.shape[0], p * O)
+        return y, t
+    xr = x2.reshape(x2.shape[0], p, -1)
+    t = jnp.einsum("mai,ir->mar", xr, v2)  # (M, p, R)
+    if mode == "grow_in":
+        return jnp.einsum("mar,aro->mo", t, u), t
+    u4 = u.reshape(p, p, R, O)
+    y = jnp.einsum("mar,abro->mbo", t, u4).reshape(x2.shape[0], p * O)
+    return y, t
+
+
+def _u2_layout(u: Array, p: int, mode: str) -> Array:
+    """Coefficient blocks as the (g*R, D) matrix the fused kernel eats."""
+    R, O = u.shape[-2], u.shape[-1]
+    if mode == "grow_out":
+        return jnp.transpose(u, (1, 0, 2)).reshape(R, p * O)
+    if mode == "grow_in":
+        return u.reshape(p * R, O)
+    u4 = u.reshape(p, p, R, O)
+    return jnp.transpose(u4, (0, 2, 1, 3)).reshape(p * R, p * O)
+
+
+@functools.lru_cache(maxsize=None)
+def _rank_dense_fn(p: int, mode: str, use_kernel: bool):
+    """custom_vjp rank-space dense apply, cached per (width, mode).
+
+    Forward: the fused Pallas kernel on compiled backends, einsums
+    elsewhere.  Backward: rank-space einsums in both cases — the
+    transposed contractions route through the same R-dimensional
+    bottleneck, so the backward pass never materialises the p-width
+    weight either (this is the custom_vjp contract the Pallas forward
+    relies on: Pallas kernels have no automatic transpose).
+    """
+
+    @jax.custom_vjp
+    def apply(x2, v2, u):
+        return _fwd_math(x2, v2, u, p, mode)[0]
+
+    def fwd(x2, v2, u):
+        if use_kernel:
+            g = 1 if mode == "grow_out" else p
+            xg = x2.reshape(x2.shape[0], g, -1)
+            y = rank_apply_pallas(xg, v2, _u2_layout(u, p, mode),
+                                  interpret=False)
+            # rank-space residual, recomputed cheaply (M·g·I·R MACs)
+            t = jnp.einsum("mgi,ir->mgr", xg, v2)
+            t = t[:, 0] if mode == "grow_out" else t
+        else:
+            y, t = _fwd_math(x2, v2, u, p, mode)
+        return y, (x2, v2, u, t)
+
+    def bwd(res, dy):
+        x2, v2, u, t = res
+        R, O = u.shape[-2], u.shape[-1]
+        if mode == "grow_out":
+            dyr = dy.reshape(dy.shape[0], p, O)
+            dt = jnp.einsum("mbo,bro->mr", dyr, u)
+            dx = dt @ v2.T
+            dv2 = x2.T @ dt
+            du = jnp.einsum("mr,mbo->bro", t, dyr)
+            return dx, dv2, du
+        xr = x2.reshape(x2.shape[0], p, -1)
+        if mode == "grow_in":
+            dt = jnp.einsum("mo,aro->mar", dy, u)
+            du = jnp.einsum("mar,mo->aro", t, dy)
+        else:
+            u4 = u.reshape(p, p, R, O)
+            dyr = dy.reshape(dy.shape[0], p, O)
+            dt = jnp.einsum("mbo,abro->mar", dyr, u4)
+            du = jnp.einsum("mar,mbo->abro", t, dyr).reshape(p * p, R, O)
+        dx = jnp.einsum("mar,ir->mai", dt, v2).reshape(x2.shape)
+        dv2 = jnp.einsum("mai,mar->ir", xr, dt)
+        return dx, dv2, du
+
+    apply.defvjp(fwd, bwd)
+    return apply
+
+
+def rank_dense_apply(x: Array, basis: Array, reduced_coeff: Array, p: int,
+                     mode: str = "square") -> Array:
+    """Rank-space dense application with a rank-space backward.
+
+    Args:
+      x: ``(..., pI_total)`` row vectors.
+      basis: ``(1, I, R)`` (dense layers have ``ksq == 1``).
+      reduced_coeff: ``(m, R, O)`` gathered blocks.
+      p: target width; ``mode``: the spec's square/grow_out/grow_in.
+
+    Returns ``(..., pO_total)`` — what ``x @ compose(...)`` returns, up
+    to float re-association, at ``O(R)`` instead of ``O(pI)`` cost per
+    output, with the same guarantee through the backward pass.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    fn = _rank_dense_fn(p, mode, not default_interpret())
+    y2 = fn(x2, basis[0], reduced_coeff)
+    return y2.reshape(lead + (y2.shape[-1],))

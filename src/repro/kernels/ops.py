@@ -18,8 +18,14 @@ from repro.kernels.flash_attention import flash_attention_pallas
 Array = jax.Array
 
 
-def compose(basis: Array, coeff: Array, *, interpret: bool = True) -> Array:
-    """Neural-composition product: (ksq, I, R) x (m, R, O) -> (ksq, I, m·O)."""
+def compose(basis: Array, coeff: Array, *, interpret: bool | None = None) -> Array:
+    """Neural-composition product: (ksq, I, R) x (m, R, O) -> (ksq, I, m·O).
+
+    Also accepts a leading client axis ((C, ksq, I, R) x (C, m, R, O))
+    — one pallas_call composes the whole cohort stack.  ``interpret``
+    defaults to the platform gate (compiled on TPU, interpret
+    elsewhere); see :func:`repro.kernels.compose.default_interpret`.
+    """
     return compose_pallas(basis, coeff, interpret=interpret)
 
 

@@ -36,6 +36,107 @@ def test_compose_sweep(dtype, ksq, i, r, m, o):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["square", "grow_out", "grow_in"])
+@pytest.mark.parametrize("p", [1, 2, 3])
+def test_compose_pallas_matches_einsum_compose(dtype, mode, p):
+    """The kernel path of repro.core.composition.compose (mode reshape
+    included) against the einsum reference, all modes x widths x dtypes."""
+    from repro.core.composition import (CompositionSpec, compose,
+                                        gather_blocks, init_factors)
+
+    spec = CompositionSpec(3, 8, 6, 5, ksq=9, mode=mode)
+    v, u = init_factors(jax.random.PRNGKey(p), spec, dtype)
+    red = gather_blocks(u, np.arange(spec.blocks_for_width(p)))
+    want = compose(v, red, p, spec, backend="einsum")
+    got = compose(v, red, p, spec, backend="pallas")
+    assert got.shape == spec.weight_shape(p) and got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_compose_pallas_batched_client_axis():
+    """One pallas_call over a leading client axis == per-client calls."""
+    from repro.kernels.compose import compose_pallas
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    C, ksq, I, R, m, O = 5, 9, 8, 6, 4, 5
+    vb = jax.random.normal(k1, (C, ksq, I, R), jnp.float32)
+    ub = jax.random.normal(k2, (C, m, R, O), jnp.float32)
+    got = compose_pallas(vb, ub)
+    assert got.shape == (C, ksq, I, m * O)
+    for c in range(C):
+        np.testing.assert_allclose(
+            np.asarray(got[c]), np.asarray(compose_pallas(vb[c], ub[c])),
+            atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("mode", ["square", "grow_out", "grow_in"])
+@pytest.mark.parametrize("p", [1, 2, 3])
+def test_rank_apply_pallas_kernel_body(mode, p):
+    """The fused kernel body (interpret mode) vs the einsum reference —
+    the TPU-compiled forward path of rank_dense_apply, which CPU CI
+    would otherwise never execute."""
+    from repro.core.composition import (CompositionSpec, gather_blocks,
+                                        init_factors)
+    from repro.kernels.compose import (_fwd_math, _u2_layout,
+                                       rank_apply_pallas)
+
+    spec = CompositionSpec(3, 8, 6, 5, ksq=1, mode=mode)
+    v, u = init_factors(jax.random.PRNGKey(p), spec)
+    red = gather_blocks(u, np.arange(spec.blocks_for_width(p)))
+    M = 13  # deliberately not a block_m multiple (exercises padding)
+    x2 = jax.random.normal(jax.random.PRNGKey(p + 3),
+                           (M, spec.weight_shape(p)[1]))
+    want, _ = _fwd_math(x2, v[0], red, p, mode)
+    g = 1 if mode == "grow_out" else p
+    got = rank_apply_pallas(x2.reshape(M, g, -1), v[0],
+                            _u2_layout(red, p, mode), block_m=8,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("mode", ["square", "grow_out", "grow_in"])
+@pytest.mark.parametrize("p", [1, 2, 3])
+def test_rank_dense_apply_custom_vjp(mode, p):
+    """Fused rank-space apply: values AND custom_vjp grads match
+    autodiff through compose-then-apply; works under vmap (cohort)."""
+    from repro.core.composition import (CompositionSpec, compose,
+                                        gather_blocks, init_factors)
+    from repro.kernels.compose import rank_dense_apply
+
+    spec = CompositionSpec(3, 8, 6, 5, ksq=1, mode=mode)
+    v, u = init_factors(jax.random.PRNGKey(p), spec)
+    red = gather_blocks(u, np.arange(spec.blocks_for_width(p)))
+    x = jax.random.normal(jax.random.PRNGKey(p + 7),
+                          (4, 3, spec.weight_shape(p)[1]))
+
+    def loss_rank(args):
+        v_, u_, x_ = args
+        return jnp.sum(jnp.sin(rank_dense_apply(x_, v_, u_, p, mode)))
+
+    def loss_mat(args):
+        v_, u_, x_ = args
+        return jnp.sum(jnp.sin(x_ @ compose(v_, u_, p, spec,
+                                            backend="einsum")[0]))
+
+    np.testing.assert_allclose(float(loss_rank((v, red, x))),
+                               float(loss_mat((v, red, x))), rtol=1e-5)
+    ga = jax.grad(loss_rank)((v, red, x))
+    gb = jax.grad(loss_mat)((v, red, x))
+    for a, b in zip(jax.tree_util.tree_leaves(ga),
+                    jax.tree_util.tree_leaves(gb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+    # vmap over a leading client axis (the cohort trainer's layout)
+    vv, uv = jnp.stack([v] * 2), jnp.stack([red] * 2)
+    xv = jnp.stack([x] * 2)
+    y = jax.vmap(lambda a, b, c: rank_dense_apply(c, a, b, p, mode))(vv, uv, xv)
+    assert y.shape[0] == 2
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,s,kv,g,d,window", [
     (1, 64, 1, 1, 32, 0),     # MHA degenerate
     (2, 100, 2, 3, 32, 0),    # GQA, ragged seq
