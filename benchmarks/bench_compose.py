@@ -45,7 +45,8 @@ def flops_table(model_name: str) -> dict:
         for name, spec in model.specs.items():
             hint = (model.hints or {}).get(name, LayerHint())
             apps = batch * hint.apps_per_sample
-            rank = apply_flops(p, spec, applications=apps)
+            rank = apply_flops(p, spec, applications=apps,
+                               basis_is_gather=hint.basis_gather)
             dense = 0 if hint.dense_apply_free else dense_apply_flops(
                 p, spec, applications=apps)
             mat = compose_flops(p, spec) + dense

@@ -300,16 +300,22 @@ def apply_factors(x: Array, basis: Array, reduced_coeff: Array, p: int,
     return y.reshape(N, Ho, Wo, p * spec.base_out)
 
 
-def apply_flops(p: int, spec: CompositionSpec, *, applications: int = 1) -> int:
+def apply_flops(p: int, spec: CompositionSpec, *, applications: int = 1,
+                basis_is_gather: bool = False) -> int:
     """MACs*2 of the *rank-space* application per ``applications`` output
     positions (dense row-vectors, or conv output pixels).
 
     Basis projection: every input group (p for square/grow_in, 1 for
     grow_out) pays ``ksq·I·R``; coefficient contraction: every block
-    pays ``R·O``.
+    pays ``R·O``.  ``basis_is_gather`` marks layers whose rank-space
+    basis projection is an index lookup rather than a contraction
+    (token embeddings gather an R-length basis row per token —
+    ``_apply_embed``), costing no MACs: only the R→pO coefficient
+    contraction is charged.
     """
     groups = 1 if spec.mode == "grow_out" else p
-    basis = spec.ksq * groups * spec.base_in * spec.rank
+    basis = 0 if basis_is_gather else (
+        spec.ksq * groups * spec.base_in * spec.rank)
     coeff = spec.blocks_for_width(p) * spec.rank * spec.base_out
     return 2 * applications * (basis + coeff)
 
@@ -324,6 +330,7 @@ def dense_apply_flops(p: int, spec: CompositionSpec, *,
 
 def rank_space_wins(p: int, spec: CompositionSpec, *, applications: int,
                     dense_apply_free: bool = False,
+                    basis_is_gather: bool = False,
                     overhead: float = 1.0) -> bool:
     """Static FLOPs decision: does rank-space application beat
     materialise-then-apply for one evaluation of the layer?
@@ -333,7 +340,13 @@ def rank_space_wins(p: int, spec: CompositionSpec, *, applications: int,
     weight applied T times counts T applications, amortising the one
     compose) — so reuse-heavy layers correctly tilt toward
     materialisation.  ``dense_apply_free`` marks gather-style layers
-    (embeddings) whose materialised application costs no FLOPs.
+    (embeddings) whose materialised application costs no FLOPs;
+    ``basis_is_gather`` marks the same layers' rank path, whose basis
+    projection is also a gather (see :func:`apply_flops`) — for an
+    embedding both hold, and the contest reduces to the R→pO
+    coefficient contraction per token vs the one-off vocab-sized
+    compose, so rank space wins exactly when the token count is below
+    the vocabulary size.
 
     ``overhead`` scales the rank-space side: callers fold in measured
     per-platform costs the FLOPs model cannot see (the conv rank path's
@@ -342,8 +355,9 @@ def rank_space_wins(p: int, spec: CompositionSpec, *, applications: int,
     """
     dense = 0 if dense_apply_free else dense_apply_flops(
         p, spec, applications=applications)
-    return overhead * apply_flops(p, spec, applications=applications) < (
-        compose_flops(p, spec) + dense)
+    rank = apply_flops(p, spec, applications=applications,
+                       basis_is_gather=basis_is_gather)
+    return overhead * rank < compose_flops(p, spec) + dense
 
 
 def conv_rank_overhead() -> float:

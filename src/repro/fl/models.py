@@ -67,13 +67,20 @@ class LayerHint:
         of FLOPs — e.g. a scan-carried recurrence weight, which is
         composed once per step and reused T times in the carry loop.
       dense_apply_free: the materialised application costs no FLOPs
-        (embedding gathers) — rank space then only pays, never saves.
+        (embedding gathers).
+      basis_gather: the rank path's basis projection is also a gather
+        (``_apply_embed`` indexes R-length basis rows per token), so
+        rank space only pays the R→pO coefficient contraction — it
+        beats materialisation exactly when the token count per
+        evaluation is below the vocabulary size (``apply_flops``'s
+        ``basis_is_gather``).
     """
 
     apps_per_sample: int = 1
     apps_fn: Optional[Callable[[tuple], int]] = None
     rank_capable: bool = True
     dense_apply_free: bool = False
+    basis_gather: bool = False
 
     def apps(self, data_shape: Optional[tuple] = None) -> int:
         if self.apps_fn is not None and data_shape is not None:
@@ -164,6 +171,7 @@ class FLModelDef:
                 out[name] = "rank_space" if rank_space_wins(
                     width, spec, applications=apps,
                     dense_apply_free=hint.dense_apply_free,
+                    basis_is_gather=hint.basis_gather,
                     overhead=ovh) else "materialize"
         return out
 
@@ -411,8 +419,11 @@ def make_rnn(max_width: int = 3, base: int = 16, rank: int = 8,
 
     seq_len = lambda s: s[1]  # noqa: E731 — tokens (B, T)
     hints = {
-        # embedding application is a gather — materialised cost ~0
-        "embed": LayerHint(32, seq_len, dense_apply_free=True),
+        # embedding application is a gather on BOTH paths: materialised
+        # rows cost ~0, and the rank path gathers R-length basis rows
+        # then pays only the coefficient contraction per token
+        "embed": LayerHint(32, seq_len, dense_apply_free=True,
+                           basis_gather=True),
         "wx": LayerHint(32, seq_len),
         # scan recurrence: composed once, reused T times per evaluation
         "wh": LayerHint(32, seq_len, rank_capable=False),

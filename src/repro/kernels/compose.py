@@ -9,6 +9,12 @@ Two primitives back the factorized client compute:
     *leading client axis* (``basis (C, ksq, I, R)``, ``coeff (C, m, R,
     O)``) so ONE ``pallas_call`` serves a whole stacked cohort.  Each
     (bi x bj) output tile is an MXU matmul accumulated in fp32.
+    Wrapped in a :func:`jax.custom_vjp` with an einsum backward:
+    ``compose`` runs inside differentiated losses (every
+    materialize-path layer in ``prepare_weights``, the RNN's
+    scan-carried recurrence weight), and ``pallas_call`` has no
+    transpose rule, so the kernel forward must carry its own VJP for
+    ``jax.grad`` to work on compiled backends.
 
 ``rank_dense_apply``
     the fused rank-space application ``y = (x·v)·û`` for dense layers,
@@ -132,6 +138,50 @@ def _compose_pallas_4d(basis: Array, coeff: Array, *, block_i: int,
     return out[:, :, :I, :MO]
 
 
+def _compose_dispatch(basis: Array, coeff: Array, block_i: int,
+                      block_j: int, interpret: bool) -> Array:
+    if basis.ndim == 4:
+        return _compose_pallas_4d(basis, coeff, block_i=block_i,
+                                  block_j=block_j, interpret=interpret)
+    return _compose_pallas_3d(basis, coeff, block_i=block_i,
+                              block_j=block_j, interpret=interpret)
+
+
+@functools.lru_cache(maxsize=None)
+def _compose_vjp_fn(block_i: int, block_j: int, interpret: bool):
+    """custom_vjp around the compose kernel, cached per tiling/backend.
+
+    ``pallas_call`` has no transpose rule, but ``compose`` is evaluated
+    inside ``jax.grad`` whenever a materialize-path layer sits in a
+    client loss (``prepare_weights``; the RNN's scan-carried ``wh``) —
+    so the kernel forward pairs with an einsum backward.  The backward
+    contracts through the rank-R bottleneck only (``dv: (ksq·I)×(mO)
+    @ u^T``, ``du: v^T @ (ksq·I)×(mO)``), never wider than the forward.
+    """
+
+    @jax.custom_vjp
+    def apply(basis, coeff):
+        return _compose_dispatch(basis, coeff, block_i, block_j, interpret)
+
+    def fwd(basis, coeff):
+        return apply(basis, coeff), (basis, coeff)
+
+    def bwd(res, g):
+        basis, coeff = res
+        m, O = coeff.shape[-3], coeff.shape[-1]
+        g = g.reshape(g.shape[:-1] + (m, O))  # (..., ksq, I, m, O)
+        if basis.ndim == 4:
+            dv = jnp.einsum("ckimo,cmro->ckir", g, coeff)
+            du = jnp.einsum("ckir,ckimo->cmro", basis, g)
+        else:
+            dv = jnp.einsum("kimo,mro->kir", g, coeff)
+            du = jnp.einsum("kir,kimo->mro", basis, g)
+        return dv.astype(basis.dtype), du.astype(coeff.dtype)
+
+    apply.defvjp(fwd, bwd)
+    return apply
+
+
 def compose_pallas(basis: Array, coeff: Array, *, block_i: int = 128,
                    block_j: int = 128, interpret: bool | None = None) -> Array:
     """basis (ksq, I, R), coeff (m, R, O) -> (ksq, I, m*O).
@@ -142,15 +192,15 @@ def compose_pallas(basis: Array, coeff: Array, *, block_i: int = 128,
     blocks are flattened to (R, m*O): the column-blocked layout of the
     complete coefficient in the paper.
 
+    Differentiable: the call routes through a ``jax.custom_vjp`` whose
+    backward is the einsum transpose (see :func:`_compose_vjp_fn`), so
+    ``jax.grad`` through ``compose(backend="pallas")`` works even
+    though the Pallas forward has no automatic transpose.
+
     ``interpret=None`` resolves via :func:`default_interpret` (compiled
     on TPU, interpret elsewhere).
     """
-    interpret = _resolve(interpret)
-    if basis.ndim == 4:
-        return _compose_pallas_4d(basis, coeff, block_i=block_i,
-                                  block_j=block_j, interpret=interpret)
-    return _compose_pallas_3d(basis, coeff, block_i=block_i,
-                              block_j=block_j, interpret=interpret)
+    return _compose_vjp_fn(block_i, block_j, _resolve(interpret))(basis, coeff)
 
 
 # ---------------------------------------------------------------------------
@@ -223,7 +273,8 @@ def _u2_layout(u: Array, p: int, mode: str) -> Array:
 
 
 @functools.lru_cache(maxsize=None)
-def _rank_dense_fn(p: int, mode: str, use_kernel: bool):
+def _rank_dense_fn(p: int, mode: str, use_kernel: bool,
+                   kernel_interpret: bool = False):
     """custom_vjp rank-space dense apply, cached per (width, mode).
 
     Forward: the fused Pallas kernel on compiled backends, einsums
@@ -232,18 +283,33 @@ def _rank_dense_fn(p: int, mode: str, use_kernel: bool):
     bottleneck, so the backward pass never materialises the p-width
     weight either (this is the custom_vjp contract the Pallas forward
     relies on: Pallas kernels have no automatic transpose).
+
+    ``kernel_interpret`` forces the ``use_kernel=True`` branch through
+    the Pallas interpreter — how CPU CI exercises the exact fwd+bwd
+    wiring (kernel forward + recomputed rank residual) that TPU runs
+    compiled.
     """
+
+    def _kernel_fwd(x2, v2, u):
+        g = 1 if mode == "grow_out" else p
+        xg = x2.reshape(x2.shape[0], g, -1)
+        return rank_apply_pallas(xg, v2, _u2_layout(u, p, mode),
+                                 interpret=kernel_interpret)
 
     @jax.custom_vjp
     def apply(x2, v2, u):
+        # the primal runs on undifferentiated forwards (loss-only
+        # evaluations) — it must take the same kernel branch as fwd or
+        # compiled backends silently fall back to the einsum there
+        if use_kernel:
+            return _kernel_fwd(x2, v2, u)
         return _fwd_math(x2, v2, u, p, mode)[0]
 
     def fwd(x2, v2, u):
         if use_kernel:
             g = 1 if mode == "grow_out" else p
             xg = x2.reshape(x2.shape[0], g, -1)
-            y = rank_apply_pallas(xg, v2, _u2_layout(u, p, mode),
-                                  interpret=False)
+            y = _kernel_fwd(x2, v2, u)
             # rank-space residual, recomputed cheaply (M·g·I·R MACs)
             t = jnp.einsum("mgi,ir->mgr", xg, v2)
             t = t[:, 0] if mode == "grow_out" else t

@@ -73,6 +73,62 @@ def test_compose_pallas_batched_client_axis():
 
 @pytest.mark.parametrize("mode", ["square", "grow_out", "grow_in"])
 @pytest.mark.parametrize("p", [1, 2, 3])
+def test_compose_pallas_grads_match_einsum(mode, p):
+    """compose() runs inside differentiated losses (every materialize
+    layer in prepare_weights, the RNN's scan-carried wh) and defaults
+    to the Pallas backend on TPU — jax.grad through it must work and
+    match autodiff through the einsum reference (the kernel carries a
+    custom_vjp because pallas_call has no transpose rule)."""
+    from repro.core.composition import (CompositionSpec, compose,
+                                        gather_blocks, init_factors)
+
+    spec = CompositionSpec(3, 8, 6, 5, ksq=9, mode=mode)
+    v, u = init_factors(jax.random.PRNGKey(p), spec)
+    red = gather_blocks(u, np.arange(spec.blocks_for_width(p)))
+
+    def loss(backend):
+        return lambda args: jnp.sum(
+            jnp.sin(compose(args[0], args[1], p, spec, backend=backend)))
+
+    np.testing.assert_allclose(float(loss("pallas")((v, red))),
+                               float(loss("einsum")((v, red))), rtol=1e-5)
+    ga = jax.grad(loss("pallas"))((v, red))
+    gb = jax.grad(loss("einsum"))((v, red))
+    for a, b in zip(jax.tree_util.tree_leaves(ga),
+                    jax.tree_util.tree_leaves(gb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_compose_pallas_batched_grads_match_einsum():
+    """The leading-client-axis (4d) kernel path is differentiable too —
+    the cohort trainer's stacked compose sits inside jax.grad."""
+    from repro.kernels.compose import compose_pallas
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    C, ksq, I, R, m, O = 3, 4, 6, 5, 4, 7
+    vb = jax.random.normal(k1, (C, ksq, I, R), jnp.float32)
+    ub = jax.random.normal(k2, (C, m, R, O), jnp.float32)
+
+    def loss_pallas(args):
+        return jnp.sum(jnp.sin(compose_pallas(args[0], args[1])))
+
+    def loss_einsum(args):
+        flat = jnp.einsum("ckir,cmro->ckimo", args[0], args[1])
+        return jnp.sum(jnp.sin(flat.reshape(C, ksq, I, m * O)))
+
+    np.testing.assert_allclose(float(loss_pallas((vb, ub))),
+                               float(loss_einsum((vb, ub))), rtol=1e-5)
+    ga = jax.grad(loss_pallas)((vb, ub))
+    gb = jax.grad(loss_einsum)((vb, ub))
+    for a, b in zip(jax.tree_util.tree_leaves(ga),
+                    jax.tree_util.tree_leaves(gb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["square", "grow_out", "grow_in"])
+@pytest.mark.parametrize("p", [1, 2, 3])
 def test_rank_apply_pallas_kernel_body(mode, p):
     """The fused kernel body (interpret mode) vs the einsum reference —
     the TPU-compiled forward path of rank_dense_apply, which CPU CI
@@ -134,6 +190,41 @@ def test_rank_dense_apply_custom_vjp(mode, p):
     xv = jnp.stack([x] * 2)
     y = jax.vmap(lambda a, b, c: rank_dense_apply(c, a, b, p, mode))(vv, uv, xv)
     assert y.shape[0] == 2
+
+
+@pytest.mark.parametrize("mode", ["square", "grow_out", "grow_in"])
+@pytest.mark.parametrize("p", [1, 2, 3])
+def test_rank_dense_fn_kernel_branch_fwd_bwd(mode, p):
+    """The use_kernel=True custom_vjp wiring — Pallas forward plus the
+    recomputed rank-space residual that feeds bwd — with the kernel
+    forced through the interpreter: the exact code TPU runs compiled,
+    which rank_dense_apply never selects on CPU CI.  Values and grads
+    must match the einsum branch."""
+    from repro.core.composition import (CompositionSpec, gather_blocks,
+                                        init_factors)
+    from repro.kernels.compose import _rank_dense_fn
+
+    spec = CompositionSpec(3, 8, 6, 5, ksq=1, mode=mode)
+    v, u = init_factors(jax.random.PRNGKey(p), spec)
+    red = gather_blocks(u, np.arange(spec.blocks_for_width(p)))
+    M = 13  # not a block_m multiple: the padded-kernel forward
+    x2 = jax.random.normal(jax.random.PRNGKey(p + 5),
+                           (M, spec.weight_shape(p)[1]))
+    fn_kernel = _rank_dense_fn(p, mode, True, kernel_interpret=True)
+    fn_einsum = _rank_dense_fn(p, mode, False)
+
+    def loss(fn):
+        return lambda args: jnp.sum(jnp.sin(fn(args[0], args[1], args[2])))
+
+    args = (x2, v[0], red)
+    np.testing.assert_allclose(float(loss(fn_kernel)(args)),
+                               float(loss(fn_einsum)(args)), rtol=1e-5)
+    ga = jax.grad(loss(fn_kernel))(args)
+    gb = jax.grad(loss(fn_einsum))(args)
+    for a, b in zip(jax.tree_util.tree_leaves(ga),
+                    jax.tree_util.tree_leaves(gb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

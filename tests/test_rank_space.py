@@ -78,10 +78,19 @@ def test_flops_model_orders_paths_sensibly():
     assert rank_space_wins(3, spec, applications=apps)
     assert rank_space_wins(2, spec, applications=apps)
     assert not rank_space_wins(1, spec, applications=apps)
-    # embedding: materialised application is a free gather
+    # embedding: materialised application is a free gather, and the
+    # rank path's basis projection is a gather too (_apply_embed), so
+    # the contest is the per-token R->pO contraction vs the one-off
+    # vocab-sized compose: rank wins exactly below vocab tokens
     emb = CompositionSpec(3, 8, 64, 16, ksq=1, mode="grow_out")
     assert not rank_space_wins(3, emb, applications=apps,
                                dense_apply_free=True)
+    assert rank_space_wins(3, emb, applications=16, dense_apply_free=True,
+                           basis_is_gather=True)
+    assert not rank_space_wins(3, emb, applications=apps,
+                               dense_apply_free=True, basis_is_gather=True)
+    assert apply_flops(3, emb, applications=1, basis_is_gather=True) == \
+        2 * 3 * emb.rank * emb.base_out  # coefficient contraction only
     # the numbers the benchmark records stay positive and consistent
     for p in (1, 2, 3):
         assert apply_flops(p, spec, applications=2) == \
