@@ -1,0 +1,160 @@
+"""Population benchmark: virtual-client scaling vs the resident baseline.
+
+A Heroes round should cost O(cohort), not O(population): the registry
+derives profiles/shards/rng streams on demand from ``(seed, client_id)``
+and keeps nothing resident per client.  This benchmark runs the same
+24-client cohort against a resident 24-client baseline and virtual
+populations of 10^3 / 10^4 / 10^5 clients, and records per-round wall
+time and peak RSS for each.  Each leg runs in its own subprocess so
+``ru_maxrss`` (which only ever grows) is an independent per-leg peak.
+
+Acceptance (ISSUE): at 10^5 virtual clients, per-round wall <= 1.2x and
+peak RSS <= 1.5x of the baseline.  Writes ``BENCH_population.json`` next
+to the repo root.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_population.py \
+            [--smoke] [--rss-mb N] [--out PATH]
+
+``--smoke`` runs only the baseline and the 10^5 leg (CI); ``--rss-mb``
+adds a hard ceiling on any leg's peak RSS (the CI leg pins the memory
+envelope with it).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import statistics
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+COHORT = 24
+
+
+def bench_rounds(population: int, rounds: int, warmup: int) -> dict:
+    """Worker body: timed Heroes rounds at one population size.
+
+    ``population == 0`` is the resident baseline (24 materialized
+    clients, the pre-population code path); anything else virtualizes.
+    """
+    from repro.fl import FLConfig, build_runner, build_setup
+
+    t0 = time.perf_counter()
+    if population:
+        model, px, py, test = build_setup(
+            "synthetic_image", seed=0, population=population,
+            partition_kw={"samples_per_client": 64})
+        num_clients = population
+    else:
+        model, px, py, test = build_setup("synthetic_image",
+                                          num_clients=COHORT, seed=0)
+        num_clients = COHORT
+    cfg = FLConfig(num_clients=num_clients, clients_per_round=COHORT,
+                   tau_fixed=5, eval_every=10_000, estimate=True, seed=0)
+    eng = build_runner("heroes", model, px, py, test, cfg=cfg, seed=0)
+    setup_s = time.perf_counter() - t0
+    for _ in range(warmup):
+        eng.run_round()
+    times = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        eng.run_round()
+        times.append(time.perf_counter() - t0)
+    eng.close()
+    rss_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return {"population": population or COHORT,
+            "virtual": bool(population),
+            "cohort": COHORT, "rounds": rounds,
+            "setup_s": setup_s,
+            "per_round_s": statistics.median(times),
+            "peak_rss_kb": rss_kb}
+
+
+def run_leg(population: int, rounds: int, warmup: int) -> dict:
+    """Run one population size in a fresh subprocess (independent RSS)."""
+    cmd = [sys.executable, __file__, "--_worker",
+           "--population", str(population),
+           "--rounds", str(rounds), "--warmup", str(warmup)]
+    r = subprocess.run(cmd, env=os.environ, capture_output=True, text=True)
+    if r.returncode != 0:
+        raise RuntimeError(f"population worker (pop={population}) failed:\n"
+                           f"{r.stderr[-2000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="baseline + 10^5 leg only (CI)")
+    ap.add_argument("--rss-mb", type=float, default=0.0,
+                    help="hard ceiling on any leg's peak RSS, in MB")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: repo-root "
+                         "BENCH_population.json)")
+    ap.add_argument("--_worker", action="store_true", dest="worker",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--population", type=int, default=0)
+    ap.add_argument("--rounds", type=int, default=0)
+    ap.add_argument("--warmup", type=int, default=3)
+    args = ap.parse_args()
+
+    if args.worker:
+        print(json.dumps(bench_rounds(args.population, args.rounds or 3,
+                                      args.warmup)))
+        return
+
+    rounds = args.rounds or (3 if args.smoke else 5)
+    populations = [0, 10**5] if args.smoke else [0, 10**3, 10**4, 10**5]
+
+    legs = []
+    for pop in populations:
+        leg = run_leg(pop, rounds, args.warmup)
+        legs.append(leg)
+        label = ("baseline(resident)" if not leg["virtual"]
+                 else f"virtual 10^{len(str(leg['population'])) - 1}")
+        print(f"{label:22s} pop {leg['population']:>7d}: "
+              f"{leg['per_round_s'] * 1e3:8.1f} ms/round   "
+              f"peak RSS {leg['peak_rss_kb'] / 1024:7.1f} MB   "
+              f"setup {leg['setup_s']:5.2f} s")
+
+    base = legs[0]
+    for leg in legs[1:]:
+        leg["wall_ratio_vs_baseline"] = (leg["per_round_s"]
+                                         / base["per_round_s"])
+        leg["rss_ratio_vs_baseline"] = (leg["peak_rss_kb"]
+                                        / base["peak_rss_kb"])
+    top = legs[-1]
+    print(f"10^5 leg: wall {top['wall_ratio_vs_baseline']:.2f}x, "
+          f"RSS {top['rss_ratio_vs_baseline']:.2f}x of baseline "
+          f"(targets: <=1.2x wall, <=1.5x RSS)")
+
+    if args.rss_mb:
+        worst = max(leg["peak_rss_kb"] for leg in legs) / 1024
+        if worst > args.rss_mb:
+            raise SystemExit(f"peak RSS {worst:.0f} MB exceeds the "
+                             f"--rss-mb {args.rss_mb:.0f} MB ceiling")
+        print(f"peak RSS {worst:.0f} MB within the "
+              f"{args.rss_mb:.0f} MB ceiling")
+
+    out = {
+        "benchmark": "population_virtual_scaling",
+        "setup": {"scheme": "heroes", "task": "synthetic_image",
+                  "cohort": COHORT, "tau": 5, "samples_per_client": 64,
+                  "rounds_timed": rounds, "warmup_rounds": args.warmup},
+        "baseline": base,
+        "scaling": legs[1:],
+    }
+    path = Path(args.out) if args.out else \
+        Path(__file__).resolve().parents[1] / "BENCH_population.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

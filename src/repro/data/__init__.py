@@ -36,6 +36,7 @@ from repro.data.partition import (  # noqa: F401
 from repro.data.streaming import (  # noqa: F401
     ClientDataLoader,
     ShardView,
+    VirtualShardList,
     make_shards,
     round_batch_indices,
     stack_client_shards,

@@ -64,14 +64,59 @@ class ShardView:
         return out.astype(dtype) if dtype is not None else out
 
 
-def make_shards(x: np.ndarray, y: np.ndarray, parts: Sequence[np.ndarray],
+class VirtualShardList:
+    """Population-sized shard sequence backed by a pure index function.
+
+    ``parts[n]`` builds a :class:`ShardView` from ``index_fn(n)`` on
+    demand, so a 10^6-client partition costs nothing until a client is
+    actually sampled — the O(cohort) stand-in for a materialized
+    ``num_clients``-long partition list.  ``index_fn`` must be pure in
+    ``n`` (repro.fl.population.VirtualPartition), which is what keeps
+    shards identical across processes and independent of the population
+    size or query order.  ``registry`` optionally carries the
+    :class:`~repro.fl.population.PopulationRegistry` the engine binds
+    its heterogeneity model and participation bookkeeping to.
+    """
+
+    virtual = True
+
+    def __init__(self, base: np.ndarray, index_fn: Callable[[int], np.ndarray],
+                 size: int, registry=None):
+        self.base = base
+        self.index_fn = index_fn
+        self.size = size
+        self.registry = registry
+
+    def __len__(self) -> int:
+        return self.size
+
+    def __getitem__(self, n) -> ShardView:
+        n = int(n)
+        if not 0 <= n < self.size:
+            raise IndexError(n)
+        return ShardView(self.base, self.index_fn(n))
+
+    def __iter__(self):
+        return (self[n] for n in range(self.size))
+
+
+def make_shards(x: np.ndarray, y: np.ndarray, parts,
                 streaming: bool = True):
     """Per-client (parts_x, parts_y) from global arrays + index lists.
 
     ``streaming=True`` returns :class:`ShardView`s over the single
     global array; ``streaming=False`` materializes the legacy per-client
     copies.  Gathered minibatches are byte-identical either way.
+
+    A *lazy* partition — anything exposing ``indices(n)`` and ``len``,
+    e.g. :class:`repro.fl.population.VirtualPartition` — yields
+    :class:`VirtualShardList`s instead: no per-client index arrays are
+    materialized, each sampled client's shard is derived on demand.
     """
+    if callable(getattr(parts, "indices", None)):
+        size = len(parts)
+        return (VirtualShardList(x, parts.indices, size),
+                VirtualShardList(y, parts.indices, size))
     if streaming:
         return ([ShardView(x, p) for p in parts],
                 [ShardView(y, p) for p in parts])
@@ -144,6 +189,32 @@ class ClientDataLoader:
             raise ValueError(f"{len(parts_x)} x-shards vs {len(parts_y)} y")
         self.parts_x, self.parts_y = parts_x, parts_y
         self.prefetch_depth = max(1, prefetch_depth)
+        # live prefetch workers: (stop event, thread) pairs, so close()
+        # can release them deterministically even when a round body died
+        # before its generator's finally ran
+        self._workers: list = []
+        self._workers_lock = threading.Lock()
+
+    def close(self) -> None:
+        """Release every background prefetch worker this loader started.
+
+        Safe to call repeatedly.  Without it, a generator abandoned by an
+        exception in the round body only stops its worker when the GC
+        collects the generator — until then the daemon thread sits
+        blocked on its bounded queue.
+        """
+        with self._workers_lock:
+            workers, self._workers = self._workers, []
+        for stop, _ in workers:
+            stop.set()
+        for _, t in workers:
+            t.join(timeout=5.0)
+
+    def __enter__(self) -> "ClientDataLoader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     @classmethod
     def from_dataset(cls, dataset, parts: Sequence[np.ndarray],
@@ -219,6 +290,8 @@ class ClientDataLoader:
 
         t = threading.Thread(target=worker, daemon=True,
                              name="client-data-prefetch")
+        with self._workers_lock:
+            self._workers.append((stop, t))
         t.start()
         try:
             while True:
@@ -240,3 +313,6 @@ class ClientDataLoader:
                 except queue.Empty:
                     break
             t.join(timeout=5.0)
+            with self._workers_lock:
+                self._workers = [(s, th) for s, th in self._workers
+                                 if th is not t and th.is_alive()]

@@ -3,6 +3,11 @@ heterogeneous edge network (paper Sec. III / VI)."""
 
 from repro.fl.engine import SCHEMES, build_engine, register_scheme  # noqa: F401
 from repro.fl.heterogeneity import HeterogeneityModel  # noqa: F401
+from repro.fl.population import (  # noqa: F401
+    SCHEDULERS,
+    PopulationRegistry,
+    VirtualPartition,
+)
 from repro.fl.models import MODELS, make_cnn, make_resnet, make_rnn  # noqa: F401
 from repro.fl.server import RUNNERS, FLConfig  # noqa: F401
 from repro.fl.simulation import (  # noqa: F401

@@ -12,7 +12,8 @@ from repro.fl.engine.aggregators import (DenseMeanAggregator,  # noqa: F401
 from repro.fl.engine.collective import (CohortSlice, CohortStack,  # noqa: F401
                                         CollectiveMerger, build_merger)
 from repro.fl.engine.base import (Aggregator, AssignmentPolicy,  # noqa: F401
-                                  LocalTrainer, PayloadModel, RoundLoop)
+                                  LocalTrainer, ParticipationScheduler,
+                                  PayloadModel, RoundLoop)
 from repro.fl.engine.loops import SemiAsyncRoundLoop, SyncRoundLoop  # noqa: F401
 from repro.fl.engine.payload import DensePayload, FactorizedPayload  # noqa: F401
 from repro.fl.engine.policies import (FullWidthAssignment,  # noqa: F401

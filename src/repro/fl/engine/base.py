@@ -4,11 +4,14 @@ A *scheme* (FedAvg, ADP, HeteroFL, Flanc, Heroes, ...) is a bundle of
 five independently testable components wired to a shared
 :class:`~repro.fl.engine.runner.EngineRunner`:
 
-  AssignmentPolicy  who trains what: (width, tau, block ids) per client
-  PayloadModel      traffic accounting: bytes shipped per assignment
-  Aggregator        global-state owner: init / client view / merge / eval
-  LocalTrainer      client-update backend: sequential or batched cohort
-  RoundLoop         virtual-clock event loop: synchronous or semi-async
+  AssignmentPolicy        who trains what: (width, tau, block ids) per client
+  PayloadModel            traffic accounting: bytes shipped per assignment
+  Aggregator              global-state owner: init / client view / merge / eval
+  LocalTrainer            client-update backend: sequential or batched cohort
+  RoundLoop               virtual-clock event loop: synchronous or semi-async
+  ParticipationScheduler  who is offered the round: cohort sampling policy
+                          (implementations + registry live in
+                          repro.fl.population.schedulers)
 
 Each component is bound to the runner with :meth:`setup` and reads the
 shared round state (``eng.round``, ``eng.wall``, ``eng.bound_state``,
@@ -110,4 +113,31 @@ class RoundLoop(Component):
     """Advances the virtual clock by one aggregation event."""
 
     def run_round(self) -> RoundLog:
+        raise NotImplementedError
+
+
+class ParticipationScheduler(Component):
+    """Samples one round's cohort from the client population.
+
+    Contract for ``sample(k, exclude)``:
+
+      * returns distinct client ids (draws WITHOUT replacement), none of
+        them in ``exclude`` (clients already in flight, semi-async);
+      * returns at most ``k`` ids; fewer only when the eligible pool is
+        smaller (availability/resource gates, or everyone excluded);
+      * consumes ``eng.rng`` — the engine's sequential round RNG — for
+        the cohort selection, so schedulers sit *inside* the seeded
+        history contract (the default uniform policy reproduces the
+        loops' legacy inline sampling bitwise);
+      * does O(cohort) expected work: per-client gates are derived from
+        keyed hash streams and the population profile, never from
+        resident per-client state.
+
+    Round loops call :meth:`~repro.fl.engine.runner.EngineRunner.sample_clients`,
+    which delegates here and records participation in the population
+    registry when one is bound.  Implementations + the ``SCHEDULERS``
+    registry live in :mod:`repro.fl.population.schedulers`.
+    """
+
+    def sample(self, k: int, exclude=frozenset()) -> list:
         raise NotImplementedError

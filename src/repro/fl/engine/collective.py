@@ -238,6 +238,26 @@ class CollectiveMerger:
         # executables in a class-level cache for the process lifetime)
         self._mesh_fns: Dict[Any, Any] = {}
 
+    # -- finish stage: dispatch the prepped stacks to a compiled merge.
+    # Split out so subclasses can reroute the reduction topology (the
+    # hierarchical edge-group merger in repro.fl.population.hierarchy)
+    # without touching the prep contracts.
+
+    def _finish_fact(self, stacked, k: int, shard_names: FrozenSet[str]):
+        if self.mesh is None:
+            return _fact_1d(stacked)
+        return self._mesh_fact_fn(shard_names)(stacked, jnp.float32(k))
+
+    def _finish_mean(self, stacked, k: int):
+        if self.mesh is None:
+            return _mean_1d(stacked)
+        return self._mesh_mean_fn()(stacked, jnp.float32(k))
+
+    def _finish_masked(self, stacked):
+        if self.mesh is None:
+            return _masked_1d(stacked)
+        return self._mesh_masked_fn()(stacked)
+
     # -- mesh (shard_map) merge builders -----------------------------------
 
     def _mesh_fact_fn(self, shard_names: FrozenSet[str]):
@@ -426,9 +446,7 @@ class CollectiveMerger:
                 "mask": _rows_in_results_order(mask, positions, k_pad),
                 "prev": prev_c,
             }
-        if self.mesh is None:
-            return _fact_1d(stacked)
-        return self._mesh_fact_fn(shard_names)(stacked, jnp.float32(k))
+        return self._finish_fact(stacked, k, shard_names)
 
     # -- prep + dispatch ----------------------------------------------------
 
@@ -471,14 +489,12 @@ class CollectiveMerger:
                 "mask": _pad_rows(mask, k_pad),
                 "prev": prev_c,
             }
-        if self.mesh is None:
-            return _fact_1d(stacked)
         shard_names: FrozenSet[str] = frozenset()
         if self.shard_blocks:
             shard_names = frozenset(
                 n for n, t in stacked.items()
                 if flsh.can_shard_blocks(t["prev"].shape[0], self.mesh))
-        return self._mesh_fact_fn(shard_names)(stacked, jnp.float32(k))
+        return self._finish_fact(stacked, k, shard_names)
 
     def merge_dense_mean(self, prev_params, results, weights=None):
         """FedAvg/ADP: plain parameter mean over the cohort."""
@@ -488,9 +504,7 @@ class CollectiveMerger:
             groups = _device_groups(results)
             if groups is not None:
                 stacked = self._device_stacked(groups, k_pad)
-                if self.mesh is None:
-                    return _mean_1d(stacked)
-                return self._mesh_mean_fn()(stacked, jnp.float32(k))
+                return self._finish_mean(stacked, k)
         results = _host_results(results)
         prev_np = None
         trees = []
@@ -505,9 +519,7 @@ class CollectiveMerger:
                     lambda u, g, w=w: _np_blend(u, w, g), r.params, prev_np))
         stacked = jax.tree_util.tree_map(
             lambda *xs: _pad_rows(np.stack(xs), k_pad), *trees)
-        if self.mesh is None:
-            return _mean_1d(stacked)
-        return self._mesh_mean_fn()(stacked, jnp.float32(k))
+        return self._finish_mean(stacked, k)
 
     def merge_masked_dense(self, prev_params, results, weights=None):
         """HeteroFL: element-wise mean over the covering clients."""
@@ -532,9 +544,7 @@ class CollectiveMerger:
             stacked[name] = {"padded": _pad_rows(np.stack(pads), k_pad),
                              "cnt": _pad_rows(np.stack(cnts), k_pad),
                              "prev": full}
-        if self.mesh is None:
-            return _masked_1d(stacked)
-        return self._mesh_masked_fn()(stacked)
+        return self._finish_masked(stacked)
 
     def merge_flanc(self, basis, coeffs, results, widths, weights=None):
         """Flanc: shared basis mean + per-width coefficient means.
@@ -609,8 +619,14 @@ class CollectiveMerger:
 
 
 def build_merger(cfg) -> CollectiveMerger:
-    """Merger per the engine config: mesh when >1 device is visible."""
+    """Merger per the engine config: mesh when >1 device is visible;
+    hierarchical edge-group reduction when ``cfg.edge_groups > 1``."""
     mesh = flsh.cohort_mesh(getattr(cfg, "agg_devices", 0))
-    return CollectiveMerger(mesh,
-                            shard_blocks=getattr(cfg, "shard_server_state",
-                                                 False))
+    shard = getattr(cfg, "shard_server_state", False)
+    groups = getattr(cfg, "edge_groups", 0)
+    if groups and groups > 1:
+        # population layers on the engine; import here to avoid a cycle
+        from repro.fl.population.hierarchy import HierarchicalMerger
+        return HierarchicalMerger(mesh, shard_blocks=shard,
+                                  edge_groups=groups)
+    return CollectiveMerger(mesh, shard_blocks=shard)

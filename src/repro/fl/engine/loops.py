@@ -65,9 +65,15 @@ class SyncRoundLoop(RoundLoop):
         eng = self.eng
         cfg = eng.cfg
         eng.het.advance_round()
-        clients = eng.rng.choice(cfg.num_clients, cfg.clients_per_round,
-                                 replace=False)
-        assigns = eng.assignment.assign(list(map(int, clients)))
+        # cohort via the participation scheduler (uniform default is the
+        # legacy eng.rng.choice draw, bitwise)
+        clients = eng.sample_clients(cfg.clients_per_round)
+        if not clients:
+            raise RuntimeError(
+                "participation scheduler returned an empty cohort "
+                f"(scheduler={type(eng.sampler).__name__}, "
+                f"num_clients={cfg.num_clients})")
+        assigns = eng.assignment.assign(clients)
         results = eng.trainer.train_all(assigns)
         times = {}
         for n, a in assigns.items():
@@ -141,15 +147,13 @@ class SemiAsyncRoundLoop(RoundLoop):
         busy = {t.client for t in self.in_flight}
         need = cfg.clients_per_round - len(self.in_flight)
         if need > 0:
-            pool = np.array([c for c in range(cfg.num_clients) if c not in busy])
-            # the pool can be empty (clients_per_round > num_clients, or
-            # every client already in flight): skip the dispatch instead
-            # of feeding rng.choice an empty population (ValueError) and
-            # spuriously advancing assignment-policy state on [].
-            if len(pool):
-                newly = eng.rng.choice(pool, min(need, len(pool)),
-                                       replace=False)
-                self._dispatch(list(map(int, newly)))
+            # the eligible pool can be empty (clients_per_round >
+            # num_clients, every client already in flight, or no client
+            # passes its participation gate): skip the dispatch instead
+            # of spuriously advancing assignment-policy state on [].
+            newly = eng.sample_clients(need, exclude=busy)
+            if newly:
+                self._dispatch(newly)
         if not self.in_flight:
             raise RuntimeError(
                 "semi-async round with no dispatchable clients "

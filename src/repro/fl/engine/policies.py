@@ -29,6 +29,11 @@ from repro.fl.engine.base import Assignment, AssignmentPolicy
 from repro.fl.heterogeneity import HeterogeneityModel
 
 
+# auto-mu_max probes at most this many clients (exact below, an evenly
+# spaced sample above — population-scale setup stays O(1) in the pop)
+_MU_PROBE = 1024
+
+
 def tier_width(het: HeterogeneityModel, n: int, max_width: int) -> int:
     """Static width by hardware tier (HeteroFL / Flanc assignment rule)."""
     order = {"laptop": max_width, "agx_xavier": max(max_width - 1, 1),
@@ -77,10 +82,19 @@ class HeroesAssignment(AssignmentPolicy):
         mu_max = cfg.mu_max
         if mu_max <= 0:
             # auto: ~10x the median width-1 iteration time, so width
-            # assignments spread across tiers at any model scale
+            # assignments spread across tiers at any model scale.  At
+            # population scale (> _MU_PROBE clients) the median comes
+            # from an evenly-spaced deterministic probe — setup must not
+            # enumerate the population; below it, every client is probed
+            # exactly as before (identical medians, seeded histories
+            # stay bitwise).
+            ns = range(cfg.num_clients)
+            if cfg.num_clients > _MU_PROBE:
+                ns = np.linspace(0, cfg.num_clients - 1,
+                                 _MU_PROBE).round().astype(np.int64)
             med = float(np.median([
-                eng.het.iter_time(n, eng.flops_per_iter(1))
-                for n in range(cfg.num_clients)]))
+                eng.het.iter_time(int(n), eng.flops_per_iter(1))
+                for n in ns]))
             mu_max = 10.0 * med
         self.scheduler = HeroesScheduler(
             square_spec,

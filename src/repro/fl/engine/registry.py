@@ -29,7 +29,9 @@ from typing import Callable, Dict, Optional
 from repro.fl.engine.aggregators import (Aggregator, DenseMeanAggregator,
                                          FlancAggregator, HeroesAggregator,
                                          MaskedDenseAggregator)
-from repro.fl.engine.base import AssignmentPolicy, LocalTrainer, PayloadModel, RoundLoop
+from repro.fl.engine.base import (AssignmentPolicy, LocalTrainer,
+                                  ParticipationScheduler, PayloadModel,
+                                  RoundLoop)
 from repro.fl.engine.loops import SemiAsyncRoundLoop, SyncRoundLoop
 from repro.fl.engine.payload import DensePayload, FactorizedPayload
 from repro.fl.engine.policies import (FullWidthAssignment, HeroesAssignment,
@@ -87,8 +89,14 @@ ROUND_MODES: Dict[str, Callable[[], RoundLoop]] = {
 def build_engine(scheme: str, model, parts_x, parts_y, test_batch, het,
                  cfg: FLConfig, eval_width: Optional[int] = None, *,
                  trainer: Optional[LocalTrainer] = None,
-                 loop: Optional[RoundLoop] = None) -> EngineRunner:
-    """Instantiate a registered scheme into a ready-to-run engine."""
+                 loop: Optional[RoundLoop] = None,
+                 sampler: Optional[ParticipationScheduler] = None
+                 ) -> EngineRunner:
+    """Instantiate a registered scheme into a ready-to-run engine.
+
+    ``sampler`` overrides the participation scheduler the runner would
+    build from ``cfg.participation`` (repro.fl.population.schedulers).
+    """
     if scheme not in SCHEMES:
         raise KeyError(f"unknown scheme {scheme!r}; have {sorted(SCHEMES)}")
     bundle = SCHEMES[scheme]()
@@ -115,6 +123,7 @@ def build_engine(scheme: str, model, parts_x, parts_y, test_batch, het,
         loop=loop,
         factorized=bundle.factorized,
         estimate=bundle.estimate(cfg),
+        sampler=sampler,
     )
 
 

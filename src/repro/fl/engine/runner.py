@@ -19,7 +19,8 @@ from repro.core import convergence
 from repro.data.streaming import ClientDataLoader
 from repro.fl.engine import collective
 from repro.fl.engine.base import (Aggregator, AssignmentPolicy, LocalTrainer,
-                                  PayloadModel, RoundLoop)
+                                  ParticipationScheduler, PayloadModel,
+                                  RoundLoop)
 from repro.fl.heterogeneity import HeterogeneityModel
 from repro.fl.models import FLModelDef
 from repro.fl.types import FLConfig, RoundLog
@@ -33,13 +34,18 @@ class EngineRunner:
                  eval_width: int, *, assignment: AssignmentPolicy,
                  payload: PayloadModel, aggregator: Aggregator,
                  trainer: LocalTrainer, loop: RoundLoop,
-                 factorized: bool, estimate: bool):
+                 factorized: bool, estimate: bool,
+                 sampler: Optional[ParticipationScheduler] = None):
         self.scheme = scheme
         self.model = model
         self.parts_x, self.parts_y = parts_x, parts_y
         # per-client minibatch streams (host RNG contract + prefetch);
-        # shards may be lazy ShardViews — see repro.data.streaming
+        # shards may be lazy ShardViews or a population-scale
+        # VirtualShardList — see repro.data.streaming
         self.data = ClientDataLoader(parts_x, parts_y)
+        # population registry (virtual setups): participation
+        # bookkeeping + on-demand per-client state
+        self.population = getattr(parts_x, "registry", None)
         self.test_batch = test_batch
         self.het = het
         self.cfg = cfg
@@ -69,11 +75,36 @@ class EngineRunner:
         self.aggregator = aggregator
         self.trainer = trainer
         self.loop = loop
-        for comp in (assignment, payload, aggregator, trainer, loop):
+        if sampler is None:
+            # population layers on the engine; import here, not at module
+            # scope, to keep engine -> population one-directional lazy
+            from repro.fl.population.schedulers import build_scheduler
+            sampler = build_scheduler(cfg)
+        self.sampler = sampler
+        for comp in (assignment, payload, aggregator, trainer, loop,
+                     self.sampler):
             comp.setup(self)
         aggregator.init_global()
 
     # --- shared helpers ---------------------------------------------------
+    def sample_clients(self, k: int, exclude=frozenset()) -> List[int]:
+        """One round's cohort via the participation scheduler; records
+        participation in the population registry when one is bound."""
+        clients = self.sampler.sample(k, exclude)
+        if self.population is not None and clients:
+            self.population.note_participation(clients, self.round)
+        return clients
+
+    def close(self) -> None:
+        """Release background resources (prefetch workers)."""
+        self.data.close()
+
+    def __enter__(self) -> "EngineRunner":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     def flops_per_iter(self, width: int) -> float:
         return self.model.flops_per_sample(width) * self.cfg.batch_size
 

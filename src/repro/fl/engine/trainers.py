@@ -226,8 +226,14 @@ class CohortTrainer(LocalTrainer):
         prepared = eng.data.prefetch(
             specs, lambda s: self._prepare_group(s[0][1], s[1], assigns))
         results: Dict[int, ClientResult] = {}
-        for ((width, b_eff), ns), prep in zip(specs, prepared):
-            results.update(self._train_group(width, ns, assigns, prep))
+        try:
+            for ((width, b_eff), ns), prep in zip(specs, prepared):
+                results.update(self._train_group(width, ns, assigns, prep))
+        finally:
+            # a failing device step must not abandon the generator with
+            # its prefetch worker blocked on the queue (thread leak) —
+            # closing it runs the generator's cleanup deterministically
+            prepared.close()
         return {n: results[n] for n in assigns}
 
     def _prepare_group(self, b_eff: int, ns: List[int],

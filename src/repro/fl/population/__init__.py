@@ -1,0 +1,37 @@
+"""Population-scale client simulation: 10^4–10^6 clients, O(cohort) rounds.
+
+Four pieces (docs/POPULATION.md):
+
+  * registry    — :class:`PopulationRegistry`: per-client state (RNG
+                  stream, shard indices, capability profile, last
+                  participation) derived on demand from
+                  ``(seed, client_id, round)``; nothing resident.
+  * partition   — :class:`VirtualPartition`: the Γ/φ/iid/natural
+                  partitions as pure index functions, consumed lazily
+                  through ``make_shards`` →
+                  :class:`~repro.data.streaming.VirtualShardList`.
+  * schedulers  — :class:`~repro.fl.engine.base.ParticipationScheduler`
+                  implementations (uniform / availability /
+                  resource_gated / trace) + the ``SCHEDULERS`` registry
+                  feeding cohorts to the round loops via
+                  ``FLConfig.participation``.
+  * hierarchy   — :class:`HierarchicalMerger`: two-level edge/server
+                  aggregation (``FLConfig.edge_groups``) whose
+                  single-device merge stays bitwise-equal to the flat
+                  ``masked_block_merge``.
+"""
+
+from repro.fl.population.hierarchy import (HierarchicalMerger,  # noqa: F401
+                                           assign_edge_groups,
+                                           grouped_ordered_fold)
+from repro.fl.population.partition import VirtualPartition  # noqa: F401
+from repro.fl.population.registry import (DEFAULT_TIER_WEIGHTS,  # noqa: F401
+                                          PopulationRegistry,
+                                          VirtualClientState)
+from repro.fl.population.schedulers import (SCHEDULERS,  # noqa: F401
+                                            AvailabilityParticipation,
+                                            ResourceGatedParticipation,
+                                            TraceParticipation,
+                                            UniformParticipation,
+                                            build_scheduler,
+                                            register_scheduler)

@@ -1,0 +1,206 @@
+"""Two-level hierarchical aggregation over the collective backend.
+
+Topology (``FLConfig.edge_groups``): the round's cohort is split into
+contiguous *edge groups* in merge order (``assign_edge_groups``).  Each
+edge aggregator folds its members' dense zero-padded contributions and
+masks into ONE partial (sum, count) pair — the only payload it ships
+upstream — and the server combines the G partials and divides once
+(Eq. 5).  The partials of the last merge are kept on the merger
+(``last_partials``) for inspection and tests.
+
+Bitwise contract (single device): the server combine CONTINUES the
+client-order fold *through* the groups — the carry leaving group ``g``
+seeds group ``g+1``'s fold — instead of re-associating over the
+partials.  The addition sequence is therefore identical to the flat
+``ordered_sum``, so the merged coefficient is bitwise-equal to the flat
+``masked_block_merge`` (the same contract the collective backend keeps
+vs the host scatter loop).  The per-group partials are additionally
+computed from a zero seed, because they are what the edge tier uploads;
+they recombine to the flat totals to float tolerance only (that
+re-association is exactly what the carry chain avoids for the merged
+state).  Basis/dense means divide the carried ordered total by K, so
+they match the flat path's ``jnp.mean`` to float tolerance.
+
+On a multi-device mesh the hierarchy IS the mesh: each device is an
+edge aggregator for its contiguous client shard (ordered local fold)
+and the server combine is the ``psum`` tree — the existing mesh merge
+path, float-tolerance across devices like every psum.  The merger
+therefore defers to the flat mesh implementation there.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.engine.collective import CollectiveMerger
+
+
+def assign_edge_groups(clients: List[int], num_groups: int) -> List[List[int]]:
+    """Contiguous balanced split of the cohort (merge order) into
+    ``num_groups`` edge groups; trailing groups may run one short."""
+    k = len(clients)
+    g = max(min(int(num_groups), k), 1)
+    size = -(-k // g)
+    return [list(clients[i:i + size]) for i in range(0, k, size)]
+
+
+def grouped_ordered_fold(stacked, group_size: int):
+    """Carry-chained per-group fold over the leading (client) axis.
+
+    Returns ``(total, partials)`` where ``total`` adds the rows in the
+    exact left-to-right order of ``aggregation.ordered_sum`` (each
+    group's inner fold starts from the previous group's carry — bitwise
+    equal to the flat fold) and ``partials[g]`` is group ``g``'s own
+    zero-seeded fold (the edge upload).  The row count must divide into
+    groups of ``group_size`` (zero-pad first; zero rows are IEEE
+    no-ops for the total).
+    """
+    rows = stacked.shape[0]
+    if rows % group_size:
+        raise ValueError(f"{rows} rows not divisible into groups of "
+                         f"{group_size}")
+    num_groups = rows // group_size
+    grouped = jnp.reshape(jnp.asarray(stacked),
+                          (num_groups, group_size) + stacked.shape[1:])
+
+    def add(acc, x):
+        return acc + x, None
+
+    def one_group(carry, g_rows):
+        total = jax.lax.scan(add, carry, g_rows)[0]
+        partial = jax.lax.scan(add, jnp.zeros_like(carry), g_rows)[0]
+        return total, partial
+
+    init = jnp.zeros(stacked.shape[1:], stacked.dtype)
+    return jax.lax.scan(one_group, init, grouped)
+
+
+def _pad_any(stack, rows: int):
+    """Zero-pad the leading axis to ``rows`` (numpy or jax input)."""
+    if stack.shape[0] == rows:
+        return stack
+    pad = [(0, rows - stack.shape[0])] + [(0, 0)] * (stack.ndim - 1)
+    mod = np if isinstance(stack, np.ndarray) else jnp
+    return mod.pad(stack, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size",))
+def _hier_fact_1d(stacked, k, *, group_size):
+    """Hierarchical Heroes merge; mirrors ``_fact_1d`` op-for-op on the
+    coefficient path (division/where identical element-wise, totals
+    bitwise via the carry chain)."""
+    merged, partials = {}, {}
+    for name, t in stacked.items():
+        total_b, part_b = grouped_ordered_fold(t["bases"], group_size)
+        total_d, part_d = grouped_ordered_fold(t["dense"], group_size)
+        total_m, part_m = grouped_ordered_fold(t["mask"], group_size)
+        trained = total_m > 0
+        denom = jnp.where(trained, total_m,
+                          1.0)[:, None, None].astype(total_d.dtype)
+        merged[name] = {
+            "basis": total_b / k.astype(total_b.dtype),
+            "coeff": jnp.where(trained[:, None, None], total_d / denom,
+                               t["prev"]),
+        }
+        partials[name] = {"bases": part_b, "dense": part_d, "mask": part_m}
+    return merged, partials
+
+
+@functools.partial(jax.jit, static_argnames=("group_size",))
+def _hier_mean_1d(stacked, k, *, group_size):
+    """Hierarchical dense mean (FedAvg/ADP): ordered total / K."""
+    merged = jax.tree_util.tree_map(
+        lambda x: grouped_ordered_fold(x, group_size)[0] / k.astype(x.dtype),
+        stacked)
+    partials = jax.tree_util.tree_map(
+        lambda x: grouped_ordered_fold(x, group_size)[1], stacked)
+    return merged, partials
+
+
+@functools.partial(jax.jit, static_argnames=("group_size",))
+def _hier_masked_1d(stacked, *, group_size):
+    """Hierarchical HeteroFL merge; mirrors ``_masked_1d`` op-for-op."""
+    merged, partials = {}, {}
+    for name, t in stacked.items():
+        acc, part_a = grouped_ordered_fold(t["padded"], group_size)
+        cnt, part_c = grouped_ordered_fold(t["cnt"], group_size)
+        merged[name] = jnp.where(cnt > 0, acc / jnp.maximum(cnt, 1),
+                                 t["prev"])
+        partials[name] = {"padded": part_a, "cnt": part_c}
+    return merged, partials
+
+
+class HierarchicalMerger(CollectiveMerger):
+    """Collective merger with a two-level edge/server fold.
+
+    Single-device: carry-chained grouped folds (bitwise vs the flat
+    merge, see module docstring), with per-group partials exposed as
+    ``last_partials`` after every merge.  Multi-device mesh: defers to
+    the flat mesh path — the devices already form the edge tier.  The
+    flanc per-width rule keeps the flat merge (its per-width selection
+    does not decompose into uniform groups).
+    """
+
+    def __init__(self, mesh=None, shard_blocks: bool = False,
+                 edge_groups: int = 2):
+        super().__init__(mesh, shard_blocks=shard_blocks)
+        self.edge_groups = max(int(edge_groups), 1)
+        self.last_partials = None
+
+    def _grouping(self, rows: int):
+        """(group_size, padded_rows) for this cohort height."""
+        groups = max(min(self.edge_groups, rows), 1)
+        size = -(-rows // groups)
+        padded = -(-rows // size) * size
+        return size, padded
+
+    # -- finish-stage overrides (see CollectiveMerger._finish_*) ----------
+
+    def _finish_fact(self, stacked, k: int, shard_names):
+        if self.mesh is not None:
+            return super()._finish_fact(stacked, k, shard_names)
+        rows = next(iter(stacked.values()))["dense"].shape[0]
+        size, padded = self._grouping(rows)
+        stacked = {
+            name: {"bases": _pad_any(t["bases"], padded),
+                   "dense": _pad_any(t["dense"], padded),
+                   "mask": _pad_any(t["mask"], padded),
+                   "prev": t["prev"]}
+            for name, t in stacked.items()
+        }
+        merged, partials = _hier_fact_1d(stacked, jnp.float32(k),
+                                         group_size=size)
+        self.last_partials = partials
+        return merged
+
+    def _finish_mean(self, stacked, k: int):
+        if self.mesh is not None:
+            return super()._finish_mean(stacked, k)
+        rows = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+        size, padded = self._grouping(rows)
+        stacked = jax.tree_util.tree_map(lambda x: _pad_any(x, padded),
+                                         stacked)
+        merged, partials = _hier_mean_1d(stacked, jnp.float32(k),
+                                         group_size=size)
+        self.last_partials = partials
+        return merged
+
+    def _finish_masked(self, stacked):
+        if self.mesh is not None:
+            return super()._finish_masked(stacked)
+        rows = next(iter(stacked.values()))["padded"].shape[0]
+        size, padded = self._grouping(rows)
+        stacked = {
+            name: {"padded": _pad_any(t["padded"], padded),
+                   "cnt": _pad_any(t["cnt"], padded),
+                   "prev": t["prev"]}
+            for name, t in stacked.items()
+        }
+        merged, partials = _hier_masked_1d(stacked, group_size=size)
+        self.last_partials = partials
+        return merged

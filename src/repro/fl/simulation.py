@@ -18,21 +18,43 @@ def build_setup(task: str, model_name: Optional[str] = None,
                 num_clients: int = 100, max_width: int = 3, seed: int = 0, *,
                 partitioner: Optional[str] = None, partition_kw=None,
                 data_root=None, cache_dir=None, streaming: bool = True,
-                task_kw=None):
+                task_kw=None, population: Optional[int] = None):
     """Registry-driven setup: any dataset x any partitioner x any model.
 
     Returns the ``(model, parts_x, parts_y, test_batch)`` tuple every
     driver feeds :func:`run_scheme`.  ``streaming=True`` (default) hands
     out :class:`~repro.data.ShardView`s over one global array instead of
     per-client copies; gathered batches are byte-identical either way.
+
+    ``population=N`` virtualizes the client set (10^4–10^6 clients):
+    instead of materializing N index arrays, the partition becomes a
+    pure index function (:class:`~repro.fl.population.VirtualPartition`)
+    evaluated per *sampled* client, the shard lists are O(1)-resident
+    :class:`~repro.data.streaming.VirtualShardList`s, and they carry a
+    :class:`~repro.fl.population.PopulationRegistry` that
+    :func:`build_runner` binds the heterogeneity model and participation
+    bookkeeping to.  ``num_clients`` is ignored in favour of ``N``;
+    ``partition_kw`` feeds the virtual partition (``samples_per_client``,
+    ``gamma_pct``, ``missing``).
     """
     ds = load_dataset(task, seed=seed, data_root=data_root,
                       cache_dir=cache_dir, **(task_kw or {}))
     if partitioner is None:
         partitioner = "natural" if ds.modality == "text" else "dirichlet"
-    parts = partition_dataset(ds, partitioner, num_clients, seed,
+    if population is not None:
+        from repro.fl.population import PopulationRegistry, VirtualPartition
+        vp = VirtualPartition(ds.partition_labels, int(population),
+                              seed=seed, kind=partitioner,
                               **(partition_kw or {}))
-    parts_x, parts_y = make_shards(ds.x, ds.y, parts, streaming)
+        parts_x, parts_y = make_shards(ds.x, ds.y, vp, streaming=True)
+        registry = PopulationRegistry(int(population), seed=seed,
+                                      partition=vp)
+        parts_x.registry = registry
+        parts_y.registry = registry
+    else:
+        parts = partition_dataset(ds, partitioner, num_clients, seed,
+                                  **(partition_kw or {}))
+        parts_x, parts_y = make_shards(ds.x, ds.y, parts, streaming)
     meta = ds.metadata
     if ds.modality == "text":
         model = make_rnn(max_width=max_width, vocab=meta["vocab"])
@@ -103,7 +125,18 @@ def build_runner(scheme: str, model: FLModelDef, parts_x, parts_y, test_batch,
     synchronous sequential configuration.
     """
     cfg = cfg or FLConfig(num_clients=len(parts_x), seed=seed)
-    het = HeterogeneityModel(cfg.num_clients, seed=seed, tier_weights=tier_weights)
+    registry = getattr(parts_x, "registry", None)
+    if registry is not None:
+        # virtual population: profiles resolve on demand through the
+        # registry's pure profile function — no resident client list
+        if cfg.num_clients != len(registry):
+            raise ValueError(
+                f"cfg.num_clients={cfg.num_clients} does not match the "
+                f"virtual population of {len(registry)} clients")
+        het = registry.heterogeneity(seed=seed, tier_weights=tier_weights)
+    else:
+        het = HeterogeneityModel(cfg.num_clients, seed=seed,
+                                 tier_weights=tier_weights)
     eval_width = next(iter(model.specs.values())).max_width
     if backend == "legacy":
         if cfg.round_mode != "sync" or cfg.trainer != "sequential":
@@ -133,6 +166,9 @@ def run_scheme(scheme: str, model: FLModelDef, parts_x, parts_y, test_batch,
 
 
 def summarize(history: List[RoundLog]) -> Dict[str, float]:
+    """Run summary; an empty history yields an empty dict (no crash)."""
+    if not history:
+        return {}
     accs = [h.accuracy for h in history if h.accuracy is not None]
     return {
         "final_acc": accs[-1] if accs else float("nan"),
@@ -145,14 +181,18 @@ def summarize(history: List[RoundLog]) -> Dict[str, float]:
 
 
 def time_to_accuracy(history: List[RoundLog], target: float) -> Optional[float]:
-    for h in history:
+    """Wall time at which ``target`` accuracy was first reached, or
+    ``None`` (including on an empty history)."""
+    for h in history or []:
         if h.accuracy is not None and h.accuracy >= target:
             return h.wall_time
     return None
 
 
 def traffic_to_accuracy(history: List[RoundLog], target: float) -> Optional[float]:
-    for h in history:
+    """Traffic at which ``target`` accuracy was first reached, or
+    ``None`` (including on an empty history)."""
+    for h in history or []:
         if h.accuracy is not None and h.accuracy >= target:
             return h.traffic_bytes
     return None

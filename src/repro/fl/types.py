@@ -107,6 +107,20 @@ class FLConfig:
     #                 weights stay materialised).
     # Dense schemes (FedAvg/ADP/HeteroFL) are unaffected.
     forward_impl: str = "auto"
+    # --- population knobs (repro.fl.population) -------------------------
+    # Participation scheduler drawing each round's cohort from the
+    # population: "uniform" (the legacy inline sampling, bitwise at
+    # resident scale; rejection sampling beyond ~1e5 clients),
+    # "availability" (per-client reachability rates from the virtual
+    # profile, optional diurnal period) or "resource_gated" (per-tier
+    # duty-cycle gates).  Registered in repro.fl.population.schedulers.
+    participation: str = "uniform"
+    # Two-level hierarchical aggregation: split the cohort into this
+    # many contiguous edge groups, fold each group's contributions into
+    # one partial (sum, count) upload, combine the partials at the
+    # server with a carry-chained fold (single device: bitwise-equal to
+    # the flat merge) or the psum tree (mesh).  0/1 = flat merge.
+    edge_groups: int = 0
     # Factorized (Heroes-style) schemes only: keep merged coefficient
     # tensors sharded over their block axis, per tensor, when the block
     # count divides the mesh (server state scales past one device).

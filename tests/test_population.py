@@ -1,0 +1,582 @@
+"""Population subsystem: virtualization determinism, participation
+schedulers, lazy partitioning, hierarchical aggregation, and the
+loader/summary satellites."""
+
+import subprocess
+import sys
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import masked_block_merge, ordered_sum
+from repro.data.streaming import ClientDataLoader, VirtualShardList, make_shards
+from repro.fl.heterogeneity import TIERS, HeterogeneityModel, client_profile
+from repro.fl.population import (PopulationRegistry, VirtualPartition,
+                                 assign_edge_groups, build_scheduler,
+                                 grouped_ordered_fold)
+from repro.fl.population.hierarchy import HierarchicalMerger, _pad_any
+from repro.fl.population.schedulers import (_EXACT_POOL_MAX,
+                                            UniformParticipation)
+from repro.fl.simulation import (build_runner, build_setup, summarize,
+                                 time_to_accuracy, traffic_to_accuracy)
+from repro.fl.types import FLConfig
+
+W = (0.05, 0.15, 0.30, 0.50)
+
+
+def _labels(n=600, classes=10, seed=0):
+    return np.random.default_rng(seed).integers(0, classes, n)
+
+
+# ---------------------------------------------------------------------------
+# virtual client state: pure in (seed, client_id), invariant to population
+# size, query order, and process
+# ---------------------------------------------------------------------------
+
+
+def test_profile_independent_of_order_and_population():
+    a = [client_profile(7, n, W) for n in range(20)]
+    b = [client_profile(7, n, W) for n in reversed(range(20))][::-1]
+    assert a == b
+    # the virtual map resolves through the same function at any size
+    small = HeterogeneityModel(10, seed=7, tier_weights=W, virtual=True)
+    huge = HeterogeneityModel(10**6, seed=7, tier_weights=W, virtual=True)
+    for n in (0, 3, 9):
+        assert small.clients[n] == huge.clients[n]
+    assert huge.clients[999_999].tier in TIERS
+
+
+def test_virtual_map_quacks_like_dict():
+    het = HeterogeneityModel(50, seed=1, tier_weights=W, virtual=True)
+    assert len(het.clients) == 50
+    assert 49 in het.clients and 50 not in het.clients
+    with pytest.raises(KeyError):
+        het.clients[50]
+    # the time model consumes virtual profiles unchanged
+    assert het.iter_time(11, 1e9) > 0
+    assert het.upload_time(11, 1e6) > 0
+    assert 0.0 < het.clients[11].availability <= 1.0
+
+
+def test_registry_state_and_participation():
+    labels = _labels()
+    vp = VirtualPartition(labels, 1000, seed=3, kind="dirichlet",
+                          samples_per_client=32)
+    reg = PopulationRegistry(1000, seed=3, tier_weights=W, partition=vp)
+    st = reg.state(42, rnd=5)
+    assert st.profile == reg.profile(42)
+    np.testing.assert_array_equal(st.data_indices, vp.indices(42))
+    assert st.last_round is None
+    # the rng stream is the engine's sequential contract
+    np.testing.assert_array_equal(
+        st.rng().integers(0, 100, 8),
+        np.random.default_rng((3, 5, 42)).integers(0, 100, 8))
+    reg.note_participation([42, 17], rnd=5)
+    assert reg.last_participation(42) == 5
+    assert reg.state(42, rnd=9).last_round == 5
+    assert reg.participants() == 2
+    with pytest.raises(IndexError):
+        reg.profile(1000)
+
+
+def test_registry_partition_size_mismatch_rejected():
+    vp = VirtualPartition(_labels(), 10, samples_per_client=8)
+    with pytest.raises(ValueError):
+        PopulationRegistry(20, partition=vp)
+
+
+def test_virtual_state_identical_across_processes():
+    code = (
+        "import numpy as np\n"
+        "from repro.fl.heterogeneity import client_profile\n"
+        "from repro.fl.population import VirtualPartition\n"
+        "labels = np.random.default_rng(0).integers(0, 10, 600)\n"
+        "vp = VirtualPartition(labels, 5000, seed=3, kind='dirichlet',\n"
+        "                      samples_per_client=32)\n"
+        "for n in (0, 17, 4999):\n"
+        "    p = client_profile(3, n, (0.05, 0.15, 0.30, 0.50))\n"
+        "    print(p.tier, round(p.compute_scale, 12), p.seed,\n"
+        "          round(p.availability, 12), int(vp.indices(n).sum()))\n"
+    )
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, check=True).stdout.strip().splitlines()
+    labels = _labels()
+    vp = VirtualPartition(labels, 5000, seed=3, kind="dirichlet",
+                          samples_per_client=32)
+    for line, n in zip(out, (0, 17, 4999)):
+        p = client_profile(3, n, W)
+        expect = (f"{p.tier} {round(p.compute_scale, 12)} {p.seed} "
+                  f"{round(p.availability, 12)} {int(vp.indices(n).sum())}")
+        assert line == expect
+
+
+# ---------------------------------------------------------------------------
+# lazy partitioning
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["dirichlet", "class_skew", "iid", "natural"])
+def test_virtual_partition_kinds(kind):
+    labels = _labels()
+    vp = VirtualPartition(labels, 500, seed=1, kind=kind,
+                          samples_per_client=40)
+    for n in (0, 7, 499):
+        idx = vp.indices(n)
+        assert idx.shape == (40,)
+        assert idx.dtype == np.int64
+        assert (0 <= idx).all() and (idx < len(labels)).all()
+
+
+def test_virtual_partition_pure_in_client_id():
+    labels = _labels()
+    a = VirtualPartition(labels, 100, seed=2, kind="dirichlet",
+                         samples_per_client=24)
+    b = VirtualPartition(labels, 100_000, seed=2, kind="dirichlet",
+                         samples_per_client=24)
+    for n in (0, 5, 99):
+        # independent of population size AND of query order (b is
+        # queried for other clients first)
+        b.indices(50)
+        b.indices(n + 1 if n + 1 < 100 else 0)
+        np.testing.assert_array_equal(a.indices(n), b.indices(n))
+
+
+def test_virtual_partition_dirichlet_skew():
+    labels = _labels(2000)
+    vp = VirtualPartition(labels, 50, seed=0, kind="dirichlet",
+                          samples_per_client=100, gamma_pct=80.0)
+    idx = vp.indices(3)
+    main = int(vp.classes[3 % len(vp.classes)])
+    frac = np.mean(labels[idx] == main)
+    assert frac >= 0.7  # 80% requested from the main class
+
+
+def test_virtual_partition_class_skew_lacks_classes():
+    labels = _labels(2000)
+    vp = VirtualPartition(labels, 50, seed=0, kind="class_skew",
+                          samples_per_client=100, missing=3)
+    present = np.unique(labels[vp.indices(9)])
+    assert len(present) <= len(vp.classes) - 3
+
+
+def test_virtual_partition_rejects_bad_args():
+    with pytest.raises(ValueError):
+        VirtualPartition(_labels(), 10, kind="nope")
+    with pytest.raises(ValueError):
+        VirtualPartition(_labels(), 0)
+    with pytest.raises(ValueError):
+        VirtualPartition(_labels(), 10, samples_per_client=0)
+    vp = VirtualPartition(_labels(), 10, samples_per_client=8)
+    with pytest.raises(IndexError):
+        vp.indices(10)
+
+
+def test_make_shards_virtual_path():
+    x = np.arange(400, dtype=np.float32).reshape(100, 4)
+    y = np.arange(100)
+    vp = VirtualPartition(y % 10, 10_000, seed=0, kind="iid",
+                          samples_per_client=16)
+    px, py = make_shards(x, y, vp)
+    assert isinstance(px, VirtualShardList) and len(px) == 10_000
+    sx, sy = px[123], py[123]
+    assert len(sx) == 16
+    np.testing.assert_array_equal(np.asarray(sx), x[vp.indices(123)])
+    np.testing.assert_array_equal(np.asarray(sy), y[vp.indices(123)])
+    with pytest.raises(IndexError):
+        px[10_000]
+
+
+# ---------------------------------------------------------------------------
+# participation schedulers
+# ---------------------------------------------------------------------------
+
+
+class _FakeEng:
+    """Just enough runner surface for a scheduler."""
+
+    def __init__(self, pop, seed=0, rnd=3, participation="uniform"):
+        self.cfg = FLConfig(num_clients=pop, seed=seed,
+                            participation=participation)
+        self.rng = np.random.default_rng(seed)
+        self.round = rnd
+        self.het = HeterogeneityModel(pop, seed=seed, tier_weights=W,
+                                      virtual=True)
+
+
+def _scheduler(eng):
+    s = build_scheduler(eng.cfg)
+    s.setup(eng)
+    return s
+
+
+def test_uniform_matches_legacy_inline_sampling():
+    eng = _FakeEng(100, seed=9)
+    s = _scheduler(eng)
+    expect = np.random.default_rng(9).choice(100, 10, replace=False)
+    assert s.sample(10) == [int(c) for c in expect]
+    # semi-async exclude path: legacy pool + choice, same rng stream
+    eng2 = _FakeEng(30, seed=4)
+    s2 = _scheduler(eng2)
+    busy = {1, 5, 9}
+    legacy = np.random.default_rng(4)
+    pool = np.array([c for c in range(30) if c not in busy])
+    expect = legacy.choice(pool, min(7, len(pool)), replace=False)
+    assert s2.sample(7, exclude=busy) == [int(c) for c in expect]
+
+
+def test_uniform_rejection_path_at_population_scale():
+    pop = _EXACT_POOL_MAX + 5_000
+    eng = _FakeEng(pop, seed=0)
+    s = _scheduler(eng)
+    exclude = {0, 1, 2}
+    got = s.sample(24, exclude=exclude)
+    assert len(got) == 24 and len(set(got)) == 24
+    assert not set(got) & exclude
+    assert all(0 <= c < pop for c in got)
+    # deterministic given the same engine rng state
+    eng2 = _FakeEng(pop, seed=0)
+    s2 = _scheduler(eng2)
+    assert s2.sample(24, exclude=exclude) == got
+
+
+def test_uniform_exhausted_pool_returns_empty():
+    eng = _FakeEng(4)
+    s = _scheduler(eng)
+    assert s.sample(3, exclude={0, 1, 2, 3}) == []
+
+
+@pytest.mark.parametrize("participation", ["availability", "resource_gated"])
+def test_gated_schedulers_contract(participation):
+    eng = _FakeEng(300, seed=2, participation=participation)
+    s = _scheduler(eng)
+    got = s.sample(20, exclude={7})
+    assert len(got) == len(set(got)) <= 20
+    assert 7 not in got
+    assert all(0 <= c < 300 for c in got)
+    # reproducible: same seeds, same round -> same cohort
+    eng2 = _FakeEng(300, seed=2, participation=participation)
+    assert _scheduler(eng2).sample(20, exclude={7}) == got
+
+
+def test_trace_participation_replays_trace():
+    from repro.fl.population import TraceParticipation
+
+    eng = _FakeEng(100, seed=0, rnd=3)
+    s = TraceParticipation({3: [5, 9, 12, 40, 41], 4: []})
+    s.setup(eng)
+    got = s.sample(3)
+    assert len(got) == 3 and set(got) <= {5, 9, 12, 40, 41}
+    eng.round = 4
+    assert s.sample(3) == []
+    eng.round = 7  # round absent from the trace: uniform fallback
+    assert len(s.sample(3)) == 3
+    # exclusion and out-of-range ids are filtered from the trace pool
+    eng.round = 3
+    assert set(s.sample(5, exclude={5, 9})) == {12, 40, 41}
+    s2 = TraceParticipation({0: [999]})
+    s2.setup(_FakeEng(10, rnd=0))
+    assert s2.sample(2) == []
+
+
+def test_trace_participation_callable_and_missing():
+    from repro.fl.population import TraceParticipation
+
+    eng = _FakeEng(50, seed=1, rnd=2)
+    s = TraceParticipation(lambda rnd, n: n % 2 == rnd % 2)
+    s.setup(eng)
+    got = s.sample(10)
+    assert len(got) == 10 and all(n % 2 == 0 for n in got)
+    bare = TraceParticipation()
+    bare.setup(_FakeEng(10))
+    with pytest.raises(ValueError, match="no trace"):
+        bare.sample(2)
+    # eng.availability_trace is picked up when none was passed
+    eng2 = _FakeEng(20, rnd=0)
+    eng2.availability_trace = {0: [1, 2, 3]}
+    s3 = TraceParticipation()
+    s3.setup(eng2)
+    assert set(s3.sample(5)) == {1, 2, 3}
+
+
+def test_build_scheduler_rejects_unknown():
+    with pytest.raises(ValueError):
+        build_scheduler(FLConfig(participation="nope"))
+
+
+# The two property sweeps below run under hypothesis when it is
+# installed (shrinking, edge-case search) and fall back to a seeded
+# random sweep when it is not, so the properties are always exercised.
+
+def _sampler_property(pop, seed, k, exclude):
+    eng = _FakeEng(pop, seed=seed)
+    got = UniformParticipation.sample(_scheduler(eng), k, exclude=exclude)
+    # without replacement, correct cardinality, exclusions honoured
+    assert len(got) == len(set(got)) == min(k, pop - len(exclude))
+    assert not set(got) & exclude
+
+
+def _invariance_property(labels, seed, n, pop, rnd):
+    small = PopulationRegistry(
+        100, seed=seed, tier_weights=W,
+        partition=VirtualPartition(labels, 100, seed=seed,
+                                   samples_per_client=16))
+    big = PopulationRegistry(
+        pop, seed=seed, tier_weights=W,
+        partition=VirtualPartition(labels, pop, seed=seed,
+                                   samples_per_client=16))
+    a, b = small.state(n, rnd), big.state(n, rnd)
+    assert a.profile == b.profile
+    np.testing.assert_array_equal(a.data_indices, b.data_indices)
+    assert a.rng_key == b.rng_key
+
+
+def test_sampler_properties():
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        sweep = np.random.default_rng(0)
+        for _ in range(25):
+            pop = int(sweep.integers(2, 2000))
+            k = int(sweep.integers(1, pop + 1))
+            n_excl = int(sweep.integers(0, min(pop - 1, 20) + 1))
+            exclude = set(map(int, sweep.choice(pop, n_excl,
+                                                replace=False)))
+            _sampler_property(pop, int(sweep.integers(0, 2**16)), k,
+                              exclude)
+        return
+
+    @settings(max_examples=25, deadline=None)
+    @given(pop=st.integers(2, 2000), seed=st.integers(0, 2**16),
+           data=st.data())
+    def prop(pop, seed, data):
+        k = data.draw(st.integers(1, pop))
+        n_excl = data.draw(st.integers(0, min(pop - 1, 20)))
+        exclude = set(data.draw(st.lists(
+            st.integers(0, pop - 1), min_size=n_excl, max_size=n_excl,
+            unique=True)))
+        _sampler_property(pop, seed, k, exclude)
+
+    prop()
+
+
+def test_virtual_state_invariance():
+    labels = _labels()
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        sweep = np.random.default_rng(1)
+        for _ in range(25):
+            _invariance_property(labels, int(sweep.integers(0, 2**16)),
+                                 int(sweep.integers(0, 100)),
+                                 int(sweep.integers(100, 10**6)),
+                                 int(sweep.integers(0, 51)))
+        return
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**16), n=st.integers(0, 99),
+           pop=st.integers(100, 10**6), rnd=st.integers(0, 50))
+    def prop(seed, n, pop, rnd):
+        _invariance_property(labels, seed, n, pop, rnd)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# hierarchical aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_assign_edge_groups_contiguous_balanced():
+    groups = assign_edge_groups(list(range(10)), 3)
+    assert groups == [[0, 1, 2, 3], [4, 5, 6, 7], [8, 9]]
+    assert assign_edge_groups([1, 2], 5) == [[1], [2]]
+
+
+@pytest.mark.parametrize("k,groups", [(7, 2), (10, 3), (24, 4), (5, 5),
+                                      (6, 1)])
+def test_hierarchical_bitwise_vs_flat_masked_block_merge(k, groups):
+    rng = np.random.default_rng(k * 31 + groups)
+    B, r = 9, 4
+    dense = rng.normal(size=(k, B, r, r)).astype(np.float32)
+    mask = (rng.random((k, B)) < 0.5).astype(np.float32)
+    prev = rng.normal(size=(B, r, r)).astype(np.float32)
+    flat = masked_block_merge(jnp.asarray(dense), jnp.asarray(mask),
+                              jnp.asarray(prev))
+    hm = HierarchicalMerger(edge_groups=groups)
+    size, padded = hm._grouping(k)
+    td, pd = grouped_ordered_fold(jnp.asarray(_pad_any(dense, padded)), size)
+    tm, pm = grouped_ordered_fold(jnp.asarray(_pad_any(mask, padded)), size)
+    # carry-chained total == flat ordered fold, bitwise
+    assert bool(jnp.all(td == ordered_sum(jnp.asarray(dense))))
+    trained = tm > 0
+    denom = jnp.where(trained, tm, 1.0)[:, None, None].astype(td.dtype)
+    merged = jnp.where(trained[:, None, None], td / denom, jnp.asarray(prev))
+    assert bool(jnp.all(merged == flat))
+    # the per-group partials (the edge uploads) recombine to the totals
+    # to float tolerance (their re-association is what the carry avoids)
+    np.testing.assert_allclose(np.asarray(pd).sum(0), np.asarray(td),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(pm).sum(0), np.asarray(tm),
+                               rtol=1e-6)
+
+
+def _mini_setup(num_clients=12, seed=0):
+    return build_setup("synthetic_image", num_clients=num_clients, seed=seed)
+
+
+def _cfg(**kw):
+    base = dict(num_clients=12, clients_per_round=6, tau_fixed=2,
+                eval_every=1, estimate=True)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def test_engine_hierarchical_heroes_coeff_bitwise():
+    m, px, py, tb = _mini_setup()
+    flat = build_runner("heroes", m, px, py, tb, cfg=_cfg(), seed=0)
+    hier = build_runner("heroes", m, px, py, tb, cfg=_cfg(edge_groups=3),
+                        seed=0)
+    assert isinstance(hier.merger, HierarchicalMerger)
+    flat.run(1)
+    hier.run(1)
+    for name in flat.params:
+        np.testing.assert_array_equal(
+            np.asarray(flat.params[name]["coeff"]),
+            np.asarray(hier.params[name]["coeff"]))
+        np.testing.assert_allclose(
+            np.asarray(flat.params[name]["basis"]),
+            np.asarray(hier.params[name]["basis"]), rtol=1e-6, atol=1e-6)
+    if hier.merger.mesh is None:
+        # with a device mesh the mesh IS the edge tier: grouping is a
+        # no-op and no host-side partials are produced
+        assert hier.merger.last_partials is not None
+
+
+def test_engine_hierarchical_heterofl_bitwise():
+    m, px, py, tb = _mini_setup()
+    flat = build_runner("heterofl", m, px, py, tb, cfg=_cfg(), seed=0)
+    hier = build_runner("heterofl", m, px, py, tb, cfg=_cfg(edge_groups=2),
+                        seed=0)
+    flat.run(2)
+    hier.run(2)
+    for name in flat.params:
+        np.testing.assert_array_equal(np.asarray(flat.params[name]),
+                                      np.asarray(hier.params[name]))
+    assert flat.history[-1].accuracy == hier.history[-1].accuracy
+
+
+def test_engine_hierarchical_fedavg_close():
+    m, px, py, tb = _mini_setup()
+    flat = build_runner("fedavg", m, px, py, tb, cfg=_cfg(), seed=0)
+    hier = build_runner("fedavg", m, px, py, tb, cfg=_cfg(edge_groups=4),
+                        seed=0)
+    flat.run(1)
+    hier.run(1)
+    for name in flat.params:
+        np.testing.assert_allclose(np.asarray(flat.params[name]),
+                                   np.asarray(hier.params[name]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end virtual population runs
+# ---------------------------------------------------------------------------
+
+
+def test_population_setup_and_sync_run():
+    m, px, py, tb = build_setup("synthetic_image", seed=0, population=5000,
+                                partition_kw={"samples_per_client": 32})
+    assert isinstance(px, VirtualShardList) and len(px) == 5000
+    cfg = FLConfig(num_clients=5000, clients_per_round=6, tau_fixed=2,
+                   eval_every=2)
+    with build_runner("heroes", m, px, py, tb, cfg=cfg, seed=0) as r:
+        assert r.population is px.registry
+        assert r.het.virtual
+        # het profiles and registry profiles are the same pure function
+        assert r.het.clients[4321] == r.population.profile(4321)
+        h = r.run(2)
+    assert len(h) == 2 and h[-1].traffic_bytes > 0
+    assert 0 < r.population.participants() <= 12
+
+
+def test_population_semi_async_run():
+    m, px, py, tb = build_setup("synthetic_image", seed=0, population=2000,
+                                partition_kw={"samples_per_client": 32})
+    cfg = FLConfig(num_clients=2000, clients_per_round=6, tau_fixed=2,
+                   eval_every=5, round_mode="semi_async",
+                   participation="availability")
+    with build_runner("fedavg", m, px, py, tb, cfg=cfg, seed=0) as r:
+        h = r.run(3)
+    assert len(h) == 3
+
+
+def test_population_num_clients_mismatch_rejected():
+    m, px, py, tb = build_setup("synthetic_image", seed=0, population=1000,
+                                partition_kw={"samples_per_client": 16})
+    with pytest.raises(ValueError):
+        build_runner("fedavg", m, px, py, tb,
+                     cfg=FLConfig(num_clients=999), seed=0)
+
+
+# ---------------------------------------------------------------------------
+# satellites: loader close semantics, empty-history summaries
+# ---------------------------------------------------------------------------
+
+
+def _prefetch_threads():
+    return [t for t in threading.enumerate()
+            if t.name == "client-data-prefetch" and t.is_alive()]
+
+
+def test_loader_close_releases_abandoned_worker():
+    x = np.zeros((64, 2), np.float32)
+    parts = [np.arange(64)] * 4
+    loader = ClientDataLoader([x[p] for p in parts], [x[p, 0] for p in parts])
+    gen = loader.prefetch(list(range(16)), lambda i: np.zeros(32))
+    next(gen)  # worker started, will block on the bounded queue
+    assert _prefetch_threads()
+    # an exception in the round body abandons `gen` without closing it;
+    # loader.close() must still release the worker deterministically
+    loader.close()
+    deadline = time.monotonic() + 5.0
+    while _prefetch_threads() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert not _prefetch_threads()
+
+
+def test_loader_context_manager_closes():
+    x = np.zeros((64, 2), np.float32)
+    parts = [np.arange(64)] * 2
+    with ClientDataLoader([x[p] for p in parts],
+                          [x[p, 0] for p in parts]) as loader:
+        gen = loader.prefetch(list(range(8)), lambda i: i)
+        next(gen)
+    assert not _prefetch_threads()
+    loader.close()  # idempotent
+
+
+def test_cohort_trainer_closes_prefetch_on_error(monkeypatch):
+    m, px, py, tb = _mini_setup()
+    cfg = _cfg(trainer="cohort")
+    r = build_runner("heroes", m, px, py, tb, cfg=cfg, seed=0)
+    monkeypatch.setattr(type(r.trainer), "_train_group",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("boom")))
+    with pytest.raises(RuntimeError, match="boom"):
+        r.run_round()
+    deadline = time.monotonic() + 5.0
+    while _prefetch_threads() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert not _prefetch_threads()
+    r.close()
+
+
+def test_empty_history_summaries():
+    assert summarize([]) == {}
+    assert time_to_accuracy([], 0.5) is None
+    assert traffic_to_accuracy([], 0.5) is None
+    assert time_to_accuracy(None, 0.5) is None
+    assert traffic_to_accuracy(None, 0.5) is None
