@@ -13,7 +13,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import csv_row, quick_cfg
-from repro.fl import FLConfig, build_image_setup, run_scheme, summarize
+from repro.fl import (FLConfig, build_image_setup, build_runner, run_scheme,
+                      summarize)
 from repro.fl.models import make_cnn
 from repro.data import SyntheticImageTask, dirichlet_partition
 import jax.numpy as jnp
@@ -51,23 +52,20 @@ def run(rounds: int = 16):
                             f"{s['avg_wait']:.4f}",
                             f"final_acc={s['final_acc']:.3f}"))
     # --- variance-minimising tau ON vs OFF ---------------------------------
-    from repro.fl.heterogeneity import HeterogeneityModel
-    from repro.fl.server import RUNNERS
-
     model, px, py, test = _setup(8, seed=2)
     cfg = quick_cfg()
     for label, patch in (("on", False), ("off", True)):
-        het = HeterogeneityModel(cfg.num_clients, seed=2,
-                                 tier_weights=(0.05, 0.15, 0.3, 0.5))
-        runner = RUNNERS["heroes"](model, px, py, test, het, cfg, 3)
+        runner = build_runner("heroes", model, px, py, test, cfg=cfg, seed=2,
+                              tier_weights=(0.05, 0.15, 0.3, 0.5))
         # start from an imbalanced counter state so the search has work
-        # to do (fresh counters make tau=hi trivially variance-optimal)
-        runner.scheduler.counters = np.arange(9, dtype=np.int64) * 40
+        # to do (fresh counters make tau=hi trivially variance-optimal);
+        # the tallies live in the threaded ServerState now
+        runner.state.sched.counters[:] = np.arange(9, dtype=np.int64) * 40
         if patch:
-            runner.scheduler._variance_minimising_tau = \
+            runner.assignment.scheduler._variance_minimising_tau = \
                 lambda c, ids, lo, hi: hi
         runner.run(rounds)
-        var = runner.scheduler.counter_variance()
+        var = runner.assignment.scheduler.counter_variance()
         accs = [h.accuracy for h in runner.history if h.accuracy is not None]
         rows.append(csv_row(f"ablation/vh_search_{label}/counter_variance",
                             f"{var:.1f}", f"final_acc={accs[-1]:.3f}"))

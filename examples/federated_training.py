@@ -11,11 +11,8 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-import numpy as np
-
-from repro.checkpoint import save_checkpoint
-from repro.fl import (FLConfig, build_image_setup, run_scheme, summarize,
-                      time_to_accuracy)
+from repro.fl import (FLConfig, build_image_setup, build_runner, run_scheme,
+                      summarize, time_to_accuracy)
 
 ROUNDS = 30  # x 5 clients x ~5-20 local iterations ≈ O(10^3) local steps
 
@@ -52,14 +49,17 @@ def main():
                       f"{h.traffic_bytes/1e6:.2f},{h.accuracy:.4f}")
 
     ckpt_dir = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "ckpt"
-    # persist the Heroes runner's final factors via a fresh short run
+    # persist the full ServerState via a fresh short run: the engine
+    # checkpoints at round boundaries and resumes bitwise
     print(f"\n(checkpointing demo state to {ckpt_dir})")
-    from repro.fl.server import RUNNERS
-    from repro.fl.heterogeneity import HeterogeneityModel
-    het = HeterogeneityModel(cfg.num_clients, seed=0)
-    runner = RUNNERS["heroes"](model, px, py, test, het, cfg, 3)
+    import dataclasses
+    ckpt_cfg = dataclasses.replace(cfg, checkpoint_every=1,
+                                   checkpoint_dir=str(ckpt_dir))
+    runner = build_runner("heroes", model, px, py, test, cfg=ckpt_cfg, seed=0)
     runner.run(3)
-    save_checkpoint(ckpt_dir, runner.round, runner.params)
+    resumed = build_runner("heroes", model, px, py, test, cfg=ckpt_cfg,
+                           seed=0)
+    assert resumed.restore_latest() and resumed.round == runner.round
     print("done.")
 
 

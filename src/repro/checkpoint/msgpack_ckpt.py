@@ -1,9 +1,16 @@
 """Msgpack checkpointing for param/optimizer pytrees.
 
-Layout: a directory per step (``step_000120/state.msgpack``) holding a
-flattened { "path.to.leaf": {dtype, shape, data} } map plus a manifest.
+Layout: a directory per step (``step_00000120/state.msgpack``) holding a
+flattened { "path/to/leaf": {dtype, shape, data} } map plus a manifest.
 Works for any nested dict/list/tuple pytree of jax or numpy arrays;
 restores onto host then (optionally) device_puts with a given sharding.
+
+Writes are atomic at the step-directory level: the payload is staged
+into a ``step_XXXXXXXX.tmp.<pid>`` sibling and renamed into place with
+``os.replace`` once fully written, so an interrupted save never leaves a
+partial ``step_*`` directory for ``restore_latest`` to trip over (stale
+``.tmp`` leftovers are ignored by the strict step pattern and swept on
+the next successful save).
 """
 
 from __future__ import annotations
@@ -11,13 +18,16 @@ from __future__ import annotations
 import json
 import os
 import re
+import shutil
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
 
 
 def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
@@ -44,15 +54,25 @@ def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
     return root
 
 
-_DTYPE_FIX = {"V2": "bfloat16"}  # numpy void16 <- bf16 roundtrip
+def _list_steps(directory: Path) -> List[Tuple[int, Path]]:
+    """(step, path) pairs for complete checkpoints, ascending by step.
+
+    Numeric sort on the strict ``step_<digits>`` pattern, so staging
+    ``.tmp`` directories and unrelated entries are never candidates and
+    unpadded step names still order correctly.
+    """
+    steps = []
+    for p in directory.iterdir():
+        m = _STEP_RE.match(p.name)
+        if m and p.is_dir():
+            steps.append((int(m.group(1)), p))
+    return sorted(steps)
 
 
 def save_checkpoint(directory: str | Path, step: int, state: Any,
                     keep: int = 3) -> Path:
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
-    path = directory / f"step_{step:08d}"
-    path.mkdir(exist_ok=True)
     flat = _flatten(jax.device_get(state))
     payload = {}
     for k, v in flat.items():
@@ -62,15 +82,28 @@ def save_checkpoint(directory: str | Path, step: int, state: Any,
             dtype = "bfloat16"
         payload[k] = {"dtype": dtype, "shape": list(v.shape),
                       "data": v.tobytes()}
-    (path / "state.msgpack").write_bytes(msgpack.packb(payload))
-    (path / "manifest.json").write_text(json.dumps(
-        {"step": step, "leaves": len(payload)}))
-    # prune old
-    steps = sorted(directory.glob("step_*"))
-    for old in steps[:-keep]:
-        for f in old.iterdir():
-            f.unlink()
-        old.rmdir()
+    blob = msgpack.packb(payload)  # serialize before touching disk
+    path = directory / f"step_{step:08d}"
+    tmp = directory / f"{path.name}.tmp.{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    try:
+        (tmp / "state.msgpack").write_bytes(blob)
+        (tmp / "manifest.json").write_text(json.dumps(
+            {"step": step, "leaves": len(payload)}))
+        if path.exists():
+            shutil.rmtree(path)
+        os.replace(tmp, path)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # prune old checkpoints + any stale staging dirs from dead writers
+    for _, old in _list_steps(directory)[:-keep]:
+        shutil.rmtree(old)
+    for stale in directory.glob("step_*.tmp.*"):
+        if stale != tmp:
+            shutil.rmtree(stale, ignore_errors=True)
     return path
 
 
@@ -96,9 +129,8 @@ def restore_latest(directory: str | Path) -> Optional[tuple]:
     directory = Path(directory)
     if not directory.exists():
         return None
-    steps = sorted(directory.glob("step_*"))
+    steps = _list_steps(directory)
     if not steps:
         return None
-    last = steps[-1]
-    step = int(re.search(r"step_(\d+)", last.name).group(1))
+    step, last = steps[-1]
     return step, load_checkpoint(last)

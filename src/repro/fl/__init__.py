@@ -1,16 +1,17 @@
 """Federated-learning runtime: Heroes + baselines over a simulated
 heterogeneous edge network (paper Sec. III / VI)."""
 
-from repro.fl.engine import SCHEMES, build_engine, register_scheme  # noqa: F401
-from repro.fl.heterogeneity import HeterogeneityModel  # noqa: F401
-from repro.fl.population import (  # noqa: F401
+from repro.fl.engine import (SCHEMES, EngineRunner, ServerState,
+                             build_engine, register_scheme)
+from repro.fl.heterogeneity import HeterogeneityModel
+from repro.fl.models import MODELS, make_cnn, make_resnet, make_rnn
+from repro.fl.population import (
     SCHEDULERS,
     PopulationRegistry,
     VirtualPartition,
 )
-from repro.fl.models import MODELS, make_cnn, make_resnet, make_rnn  # noqa: F401
-from repro.fl.server import RUNNERS, FLConfig  # noqa: F401
-from repro.fl.simulation import (  # noqa: F401
+from repro.fl.server import RUNNERS  # deprecated shims onto the engine
+from repro.fl.simulation import (
     build_image_setup,
     build_runner,
     build_setup,
@@ -20,4 +21,16 @@ from repro.fl.simulation import (  # noqa: F401
     time_to_accuracy,
     traffic_to_accuracy,
 )
-from repro.fl.types import RoundLog  # noqa: F401
+from repro.fl.types import FLConfig, RoundLog
+
+__all__ = [
+    "SCHEMES", "EngineRunner", "ServerState", "build_engine",
+    "register_scheme",
+    "HeterogeneityModel",
+    "MODELS", "make_cnn", "make_resnet", "make_rnn",
+    "SCHEDULERS", "PopulationRegistry", "VirtualPartition",
+    "RUNNERS",
+    "build_image_setup", "build_runner", "build_setup", "build_text_setup",
+    "run_scheme", "summarize", "time_to_accuracy", "traffic_to_accuracy",
+    "FLConfig", "RoundLog",
+]

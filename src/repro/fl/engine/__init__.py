@@ -1,26 +1,46 @@
 """Layered FL engine: schemes as policy bundles over a shared core.
 
-See :mod:`repro.fl.engine.base` for the component contracts and
+See :mod:`repro.fl.engine.base` for the component contracts (threaded
+through an explicit :class:`~repro.fl.types.ServerState`) and
 :mod:`repro.fl.engine.registry` for the five paper schemes expressed as
 bundles.  ``build_engine`` is the main entry point; ``run_scheme`` in
 :mod:`repro.fl.simulation` routes through it by default.
 """
 
-from repro.fl.engine.aggregators import (DenseMeanAggregator,  # noqa: F401
+from repro.fl.engine.aggregators import (DenseMeanAggregator,
                                          FlancAggregator, HeroesAggregator,
                                          MaskedDenseAggregator)
-from repro.fl.engine.collective import (CohortSlice, CohortStack,  # noqa: F401
-                                        CollectiveMerger, build_merger)
-from repro.fl.engine.base import (Aggregator, AssignmentPolicy,  # noqa: F401
+from repro.fl.engine.base import (Aggregator, AssignmentPolicy,
                                   LocalTrainer, ParticipationScheduler,
                                   PayloadModel, RoundLoop)
-from repro.fl.engine.loops import SemiAsyncRoundLoop, SyncRoundLoop  # noqa: F401
-from repro.fl.engine.payload import DensePayload, FactorizedPayload  # noqa: F401
-from repro.fl.engine.policies import (FullWidthAssignment,  # noqa: F401
+from repro.fl.engine.collective import (CohortSlice, CohortStack,
+                                        CollectiveMerger, build_merger)
+from repro.fl.engine.loops import SemiAsyncRoundLoop, SyncRoundLoop
+from repro.fl.engine.payload import DensePayload, FactorizedPayload
+from repro.fl.engine.policies import (FullWidthAssignment,
                                       HeroesAssignment, TierWidthAssignment,
                                       tier_width)
-from repro.fl.engine.registry import (SCHEMES, SchemeBundle,  # noqa: F401
+from repro.fl.engine.registry import (SCHEMES, SchemeBundle,
                                       build_engine, register_scheme)
-from repro.fl.engine.runner import EngineRunner  # noqa: F401
-from repro.fl.engine.trainers import (CohortTrainer,  # noqa: F401
+from repro.fl.engine.runner import EngineRunner
+from repro.fl.engine.state import payload_to_state, state_to_payload
+from repro.fl.engine.trainers import (CohortTrainer,
                                       ProximalTrainer, SequentialTrainer)
+from repro.fl.types import InFlight, SchedState, ServerState
+
+__all__ = [
+    "Aggregator", "AssignmentPolicy", "LocalTrainer",
+    "ParticipationScheduler", "PayloadModel", "RoundLoop",
+    "DenseMeanAggregator", "FlancAggregator", "HeroesAggregator",
+    "MaskedDenseAggregator",
+    "CohortSlice", "CohortStack", "CollectiveMerger", "build_merger",
+    "SemiAsyncRoundLoop", "SyncRoundLoop",
+    "DensePayload", "FactorizedPayload",
+    "FullWidthAssignment", "HeroesAssignment", "TierWidthAssignment",
+    "tier_width",
+    "SCHEMES", "SchemeBundle", "build_engine", "register_scheme",
+    "EngineRunner",
+    "payload_to_state", "state_to_payload",
+    "InFlight", "SchedState", "ServerState",
+    "CohortTrainer", "ProximalTrainer", "SequentialTrainer",
+]

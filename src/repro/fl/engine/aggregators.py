@@ -1,14 +1,20 @@
 """Aggregators: global-state owners + merge rules per scheme.
 
-Each aggregator reproduces its legacy runner's merge bitwise when
-``weights is None`` (the synchronous path).  With per-client ``weights``
-(semi-async staleness discounting) every client contribution is first
-blended toward the *current* global state::
+Each aggregator reproduces the legacy runner merge bitwise when
+``weights is None`` (the synchronous path — pinned by the golden
+fixtures in tests/fixtures/golden_legacy_histories.json).  With
+per-client ``weights`` (semi-async staleness discounting) every client
+contribution is first blended toward the *current* global state::
 
     contrib_n = w_n * update_n + (1 - w_n) * global
 
 so a fully fresh client (w=1) merges exactly as in the synchronous rule
 and an infinitely stale one (w=0) is a no-op.
+
+The global model is ``state.params`` — aggregators hold no tensors of
+their own; ``init_global``/``aggregate`` return updated
+:class:`~repro.fl.types.ServerState` values (params + BoundState), which
+is what lets a round boundary checkpoint and resume bitwise.
 
 Two merge backends share each rule: the default *collective* path
 (``eng.merger``, repro.fl.engine.collective) stacks the cohort's dense
@@ -22,6 +28,7 @@ two are bitwise-identical with ``weights=None``.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Optional
 
 import jax
@@ -31,6 +38,7 @@ import numpy as np
 from repro.core import aggregation, convergence
 from repro.fl.client import ClientResult
 from repro.fl.engine.base import Aggregator, Assignment
+from repro.fl.types import ServerState
 
 
 def _weight_list(results: Dict[int, ClientResult],
@@ -40,58 +48,69 @@ def _weight_list(results: Dict[int, ClientResult],
     return [float(weights.get(n, 1.0)) for n in results]
 
 
+def _mean_bound(state: ServerState, results, lr: float,
+                clip: bool) -> Any:
+    """BoundState from the cohort's (L, G^2, sigma^2) estimates; the
+    incoming bound when nobody shipped estimates."""
+    ests = [r.estimates for r in results.values() if r.estimates]
+    if not ests:
+        return state.bound_state
+    mean = {k: float(np.mean([e[k] for e in ests])) for k in ests[0]}
+    loss0 = float(np.mean([r.loss_after for r in results.values()]))
+    if clip:
+        return convergence.BoundState(
+            loss0=max(loss0, 1e-3),
+            smoothness=float(np.clip(mean.get("L", 1.0), 1e-3, 1e3)),
+            grad_sq=mean.get("grad_sq", 1.0),
+            noise_sq=mean.get("sigma_sq", 0.5), lr=lr)
+    return convergence.BoundState(
+        loss0=loss0, smoothness=max(mean.get("L", 1.0), 1e-3),
+        grad_sq=mean.get("grad_sq", 1.0),
+        noise_sq=mean.get("sigma_sq", 0.5), lr=lr)
+
+
 class DenseMeanAggregator(Aggregator):
     """FedAvg/ADP: plain parameter mean over the cohort."""
 
-    def init_global(self) -> None:
+    def init_global(self, state: ServerState) -> ServerState:
         eng = self.eng
-        eng.params = eng.model.init_dense(jax.random.PRNGKey(eng.cfg.seed))
+        return dataclasses.replace(
+            state, params=eng.model.init_dense(
+                jax.random.PRNGKey(eng.cfg.seed)))
 
-    def client_params(self, n: int, assignment: Assignment) -> Any:
-        return self.eng.params
+    def client_params(self, state: ServerState, n: int,
+                      assignment: Assignment) -> Any:
+        return state.params
 
-    def aggregate(self, results, assigns, weights=None) -> None:
+    def aggregate(self, state, results, assigns, weights=None) -> ServerState:
         eng = self.eng
         if eng.merger is not None:
-            eng.params = eng.merger.merge_dense_mean(eng.params, results,
-                                                     weights)
+            params = eng.merger.merge_dense_mean(state.params, results,
+                                                 weights)
         else:
-            self._aggregate_host(results, weights)
-        self._update_bound(results)
+            params = self._aggregate_host(state, results, weights)
+        return dataclasses.replace(
+            state, params=params,
+            bound_state=_mean_bound(state, results, eng.cfg.lr, clip=False))
 
-    def _aggregate_host(self, results, weights) -> None:
-        eng = self.eng
+    def _aggregate_host(self, state, results, weights):
         ws = _weight_list(results, weights)
         if ws is None:
             stacked = [r.params for r in results.values()]
         else:
             stacked = [
                 jax.tree_util.tree_map(lambda u, g, w=w: w * u + (1.0 - w) * g,
-                                       r.params, eng.params)
+                                       r.params, state.params)
                 for r, w in zip(results.values(), ws)
             ]
-        eng.params = jax.tree_util.tree_map(
-            lambda *xs: jnp.mean(jnp.stack(xs), 0), *stacked
-        )
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.mean(jnp.stack(xs), 0), *stacked)
 
-    def _update_bound(self, results) -> None:
-        eng = self.eng
-        ests = [r.estimates for r in results.values() if r.estimates]
-        if ests:
-            mean = {k: float(np.mean([e[k] for e in ests])) for k in ests[0]}
-            eng.bound_state = convergence.BoundState(
-                loss0=float(np.mean([r.loss_after for r in results.values()])),
-                smoothness=max(mean.get("L", 1.0), 1e-3),
-                grad_sq=mean.get("grad_sq", 1.0),
-                noise_sq=mean.get("sigma_sq", 0.5),
-                lr=eng.cfg.lr,
-            )
-
-    def evaluate(self) -> float:
+    def evaluate(self, state: ServerState) -> float:
         eng = self.eng
         ew = eng.eval_width
-        params = eng.params if ew == eng.P else eng.model.slice_dense(
-            eng.params, ew)
+        params = state.params if ew == eng.P else eng.model.slice_dense(
+            state.params, ew)
         # streamed over cfg.eval_batch_size slices (full batch when <= 0)
         return eng.acc_streaming(
             lambda batch: eng.model.forward(params, ew, batch))
@@ -100,23 +119,25 @@ class DenseMeanAggregator(Aggregator):
 class MaskedDenseAggregator(DenseMeanAggregator):
     """HeteroFL: element-wise mean over the clients covering each region."""
 
-    def client_params(self, n: int, assignment: Assignment) -> Any:
-        return self.eng.model.slice_dense(self.eng.params, assignment["width"])
+    def client_params(self, state: ServerState, n: int,
+                      assignment: Assignment) -> Any:
+        return self.eng.model.slice_dense(state.params, assignment["width"])
 
-    def aggregate(self, results, assigns, weights=None) -> None:
+    def aggregate(self, state, results, assigns, weights=None) -> ServerState:
         eng = self.eng
         if eng.merger is not None:
-            eng.params = eng.merger.merge_masked_dense(eng.params, results,
-                                                       weights)
+            params = eng.merger.merge_masked_dense(state.params, results,
+                                                   weights)
         else:
-            self._aggregate_host(results, weights)
-        self._update_bound(results)
+            params = self._aggregate_host(state, results, weights)
+        return dataclasses.replace(
+            state, params=params,
+            bound_state=_mean_bound(state, results, eng.cfg.lr, clip=False))
 
-    def _aggregate_host(self, results, weights) -> None:
-        eng = self.eng
+    def _aggregate_host(self, state, results, weights):
         new = {}
-        for name in eng.params:
-            full = eng.params[name]
+        for name in state.params:
+            full = state.params[name]
             acc = jnp.zeros_like(full)
             cnt = jnp.zeros_like(full)
             for n, r in results.items():
@@ -130,43 +151,52 @@ class MaskedDenseAggregator(DenseMeanAggregator):
                 cnt = cnt + jnp.pad(jnp.ones_like(w), pad)
             covered = cnt > 0
             new[name] = jnp.where(covered, acc / jnp.maximum(cnt, 1), full)
-        eng.params = new
+        return new
 
 
 class FlancAggregator(Aggregator):
-    """Original NC: shared basis average + per-width coefficient average."""
+    """Original NC: shared basis average + per-width coefficient average.
 
-    def init_global(self) -> None:
+    ``state.params`` is ``{"basis": {layer: basis}, "coeffs": {width p:
+    {layer: coeff}}}`` — width p owns its own copy of the first
+    ``blocks_for_width(p)`` blocks (original Flanc: no sharing).
+    """
+
+    def init_global(self, state: ServerState) -> ServerState:
         eng = self.eng
         full = eng.model.init_factorized(jax.random.PRNGKey(eng.cfg.seed))
-        # per-width coefficient sets: width p owns its own copy of the
-        # first blocks_for_width(p) blocks (original Flanc: no sharing)
-        self.basis = {name: full[name]["basis"] for name in full}
-        self.coeffs = {
+        basis = {name: full[name]["basis"] for name in full}
+        coeffs = {
             p: {name: full[name]["coeff"][: eng.model.specs[name].blocks_for_width(p)]
                 for name in full}
             for p in range(1, eng.P + 1)
         }
-        eng.params = {"basis": self.basis, "coeffs": self.coeffs}
+        return dataclasses.replace(state,
+                                   params={"basis": basis, "coeffs": coeffs})
 
-    def client_params(self, n: int, assignment: Assignment) -> Any:
-        return self._width_params(assignment["width"])
+    def client_params(self, state: ServerState, n: int,
+                      assignment: Assignment) -> Any:
+        return self._width_params(state.params, assignment["width"])
 
-    def _width_params(self, p: int):
-        return {name: {"basis": self.basis[name], "coeff": self.coeffs[p][name]}
-                for name in self.basis}
+    def _width_params(self, params, p: int):
+        return {name: {"basis": params["basis"][name],
+                       "coeff": params["coeffs"][p][name]}
+                for name in params["basis"]}
 
-    def aggregate(self, results, assigns, weights=None) -> None:
+    def aggregate(self, state, results, assigns, weights=None) -> ServerState:
         eng = self.eng
+        basis, coeffs = state.params["basis"], state.params["coeffs"]
         if eng.merger is not None:
             widths = {n: assigns[n]["width"] for n in results}
-            self.basis, self.coeffs = eng.merger.merge_flanc(
-                self.basis, self.coeffs, results, widths, weights)
-            eng.params = {"basis": self.basis, "coeffs": self.coeffs}
-            return
-        self._aggregate_host(results, assigns, weights)
+            basis, coeffs = eng.merger.merge_flanc(
+                basis, coeffs, results, widths, weights)
+        else:
+            basis, coeffs = self._aggregate_host(basis, coeffs, results,
+                                                 assigns, weights)
+        return dataclasses.replace(state,
+                                   params={"basis": basis, "coeffs": coeffs})
 
-    def _aggregate_host(self, results, assigns, weights) -> None:
+    def _aggregate_host(self, basis, coeffs, results, assigns, weights):
         def blend(n, name, key, prev):
             v = results[n].params[name][key]
             if weights is None:
@@ -174,26 +204,27 @@ class FlancAggregator(Aggregator):
             w = float(weights.get(n, 1.0))
             return w * v + (1.0 - w) * prev
 
-        self.basis = {
+        new_basis = {
             name: jnp.mean(jnp.stack(
-                [blend(n, name, "basis", self.basis[name]) for n in results]), 0)
-            for name in self.basis
+                [blend(n, name, "basis", basis[name]) for n in results]), 0)
+            for name in basis
         }
         by_width: Dict[int, list] = {}
         for n in results:
             by_width.setdefault(assigns[n]["width"], []).append(n)
+        new_coeffs = dict(coeffs)
         for p, ns in by_width.items():
-            self.coeffs[p] = {
+            new_coeffs[p] = {
                 name: jnp.mean(jnp.stack(
-                    [blend(n, name, "coeff", self.coeffs[p][name]) for n in ns]), 0)
-                for name in self.basis
+                    [blend(n, name, "coeff", coeffs[p][name]) for n in ns]), 0)
+                for name in basis
             }
-        self.eng.params = {"basis": self.basis, "coeffs": self.coeffs}
+        return new_basis, new_coeffs
 
-    def evaluate(self) -> float:
+    def evaluate(self, state: ServerState) -> float:
         eng = self.eng
         ew = eng.eval_width
-        params = self._width_params(ew)
+        params = self._width_params(state.params, ew)
         w = eng.model.compose_all(params, ew)
         return eng.acc_streaming(
             lambda batch: eng.model.forward(w, ew, batch))
@@ -202,35 +233,30 @@ class FlancAggregator(Aggregator):
 class HeroesAggregator(Aggregator):
     """Enhanced NC: basis average + block-wise coefficient merge (Eq. 5)."""
 
-    def init_global(self) -> None:
+    def init_global(self, state: ServerState) -> ServerState:
         eng = self.eng
-        eng.params = eng.model.init_factorized(jax.random.PRNGKey(eng.cfg.seed))
+        return dataclasses.replace(
+            state, params=eng.model.init_factorized(
+                jax.random.PRNGKey(eng.cfg.seed)))
 
-    def client_params(self, n: int, assignment: Assignment) -> Any:
+    def client_params(self, state: ServerState, n: int,
+                      assignment: Assignment) -> Any:
         return self.eng.model.reduce(
-            self.eng.params, assignment["width"],
+            state.params, assignment["width"],
             assignment["hidden_ids"], assignment["anchored_ids"])
 
-    def aggregate(self, results, assigns, weights=None) -> None:
+    def aggregate(self, state, results, assigns, weights=None) -> ServerState:
         eng = self.eng
         if eng.merger is not None:
-            eng.params = eng.merger.merge_factorized(
-                eng.params, eng.model.specs, results, assigns, weights)
+            params = eng.merger.merge_factorized(
+                state.params, eng.model.specs, results, assigns, weights)
         else:
-            self._aggregate_host(results, assigns, weights)
-        ests = [r.estimates for r in results.values() if r.estimates]
-        if ests:
-            mean = {k: float(np.mean([e[k] for e in ests])) for k in ests[0]}
-            eng.bound_state = convergence.BoundState(
-                loss0=max(float(np.mean(
-                    [r.loss_after for r in results.values()])), 1e-3),
-                smoothness=float(np.clip(mean.get("L", 1.0), 1e-3, 1e3)),
-                grad_sq=mean.get("grad_sq", 1.0),
-                noise_sq=mean.get("sigma_sq", 0.5),
-                lr=eng.cfg.lr,
-            )
+            params = self._aggregate_host(state, results, assigns, weights)
+        return dataclasses.replace(
+            state, params=params,
+            bound_state=_mean_bound(state, results, eng.cfg.lr, clip=True))
 
-    def _aggregate_host(self, results, assigns, weights) -> None:
+    def _aggregate_host(self, state, results, assigns, weights):
         eng = self.eng
         ws = _weight_list(results, weights)
         new = {}
@@ -239,17 +265,17 @@ class HeroesAggregator(Aggregator):
             new[name] = {
                 "basis": aggregation.aggregate_basis(
                     [r.params[name]["basis"] for r in results.values()],
-                    weights=ws, prev=eng.params[name]["basis"]),
+                    weights=ws, prev=state.params[name]["basis"]),
                 "coeff": aggregation.aggregate_coefficient(
-                    eng.params[name]["coeff"],
+                    state.params[name]["coeff"],
                     [r.params[name]["coeff"] for r in results.values()],
                     [np.asarray(assigns[n][ids_key]) for n in results],
                     weights=ws,
                 ),
             }
-        eng.params = new
+        return new
 
-    def evaluate(self) -> float:
+    def evaluate(self, state: ServerState) -> float:
         # evaluate the width-``eval_width`` sub-model built from the first
         # blocks (the full set when eval_width == P, the usual case).
         # Evaluation always materialises (compose_all): the weights are
@@ -262,7 +288,7 @@ class HeroesAggregator(Aggregator):
             s for s in eng.model.specs.values() if s.mode == "square")
         hidden_ids = np.arange(square_spec.blocks_for_width(ew))
         anch_ids = np.arange(min(ew, eng.P))
-        reduced = eng.model.reduce(eng.params, ew, hidden_ids, anch_ids)
+        reduced = eng.model.reduce(state.params, ew, hidden_ids, anch_ids)
         w = eng.model.compose_all(reduced, ew)
         return eng.acc_streaming(
             lambda batch: eng.model.forward(w, ew, batch))

@@ -2,8 +2,8 @@
 
 ``SyncRoundLoop`` is the paper's round (Alg. 1 / Eq. 19): sample K
 clients, train all, aggregate, charge the makespan ``max_n (tau mu + nu)``
-to the wall clock.  Bitwise-identical histories to the legacy
-``BaseRunner.run_round``.
+to the wall clock.  Histories are pinned bitwise by the golden legacy
+fixtures (tests/fixtures/golden_legacy_histories.json).
 
 ``SemiAsyncRoundLoop`` keeps up to M clients in flight and aggregates as
 soon as the fastest K of them finish.  Stragglers stay in flight across
@@ -12,6 +12,16 @@ aggregation events and merge later with a staleness-discounted weight
 global model), the FedAsync/FedBuff-style rule adapted to every
 scheme's aggregator.  The wall clock advances event-by-event to the
 K-th completion, so fast clients stop paying for slow ones.
+
+Both loops are pure state transitions: ``run_round(state)`` returns
+``(state', log)`` built with ``dataclasses.replace`` — the wall/traffic
+counters, params, bound, Heroes tallies and (semi-async) the in-flight
+dispatch records all travel inside the :class:`~repro.fl.types.ServerState`,
+which is exactly what makes a round boundary checkpointable.  The time
+model's per-round noise streams are keyed by ``het.round``; the loops
+*derive* it from the state (``het.round = state.round + 1`` while round
+``state.round`` runs) instead of advancing a hidden counter, so a
+restored state replays identical times.
 
 Both loops hand the same ``weights`` dict to ``aggregator.aggregate``;
 with the collective backend the staleness blend is folded into the
@@ -32,13 +42,12 @@ seed histories stay bitwise.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.fl.client import ClientResult
-from repro.fl.engine.base import Assignment, RoundLoop
-from repro.fl.types import RoundLog
+from repro.fl.engine.base import RoundLoop
+from repro.fl.types import InFlight, RoundLog, ServerState
 
 
 def _sample_weights(eng, clients) -> Dict[int, float]:
@@ -61,49 +70,43 @@ def _sample_weights(eng, clients) -> Dict[int, float]:
 class SyncRoundLoop(RoundLoop):
     """Synchronous makespan round (paper Eq. 19)."""
 
-    def run_round(self) -> RoundLog:
+    def run_round(self, state: ServerState) -> Tuple[ServerState, RoundLog]:
         eng = self.eng
         cfg = eng.cfg
-        eng.het.advance_round()
+        eng.het.round = state.round + 1  # per-round time-noise stream key
         # cohort via the participation scheduler (uniform default is the
         # legacy eng.rng.choice draw, bitwise)
-        clients = eng.sample_clients(cfg.clients_per_round)
+        clients = eng.sample_clients(state, cfg.clients_per_round)
         if not clients:
             raise RuntimeError(
                 "participation scheduler returned an empty cohort "
                 f"(scheduler={type(eng.sampler).__name__}, "
                 f"num_clients={cfg.num_clients})")
-        assigns = eng.assignment.assign(clients)
-        results = eng.trainer.train_all(assigns)
+        state, assigns = eng.assignment.assign(state, clients)
+        results = eng.trainer.train_all(state, assigns)
         times = {}
+        traffic = state.traffic
         for n, a in assigns.items():
             mu = eng.het.iter_time(n, eng.flops_per_iter(a["width"]))
             nu = eng.het.upload_time(n, eng.payload.bytes(a))
             times[n] = a["tau"] * mu + nu
-            eng.traffic += 2 * eng.payload.bytes(a)  # down + up
+            traffic += 2 * eng.payload.bytes(a)  # down + up
         weights = (_sample_weights(eng, list(results))
                    if cfg.sample_weighted else None)
-        eng.aggregator.aggregate(results, assigns, weights=weights)
+        state = eng.aggregator.aggregate(
+            dataclasses.replace(state, traffic=traffic),
+            results, assigns, weights=weights)
         makespan = max(times.values())
         wait = float(np.mean([makespan - t for t in times.values()]))
-        eng.wall += makespan
-        eng.round += 1
+        state = dataclasses.replace(state, wall=state.wall + makespan,
+                                    round=state.round + 1)
         acc = None
-        if eng.round % cfg.eval_every == 0 or eng.round == 1:
-            acc = eng.aggregator.evaluate()
-        log = RoundLog(eng.round, eng.wall, eng.traffic, makespan, wait,
+        if state.round % cfg.eval_every == 0 or state.round == 1:
+            acc = eng.aggregator.evaluate(state)
+        log = RoundLog(state.round, state.wall, state.traffic, makespan, wait,
                        float(np.mean([a["tau"] for a in assigns.values()])), acc)
-        eng.history.append(log)
-        return log
-
-
-@dataclasses.dataclass
-class _InFlight:
-    client: int
-    assign: Assignment
-    result: ClientResult
-    finish: float  # absolute virtual time the upload lands at the PS
-    dispatched: int  # eng.round at dispatch (staleness = now - dispatched)
+        state = dataclasses.replace(state, history=state.history + (log,))
+        return state, log
 
 
 class SemiAsyncRoundLoop(RoundLoop):
@@ -113,6 +116,8 @@ class SemiAsyncRoundLoop(RoundLoop):
     computed eagerly at dispatch against the then-current global state —
     exactly what a straggler's update would contain when it finally
     lands — and merged with weight ``staleness_decay ** staleness``.
+    Dispatch records live in ``state.in_flight`` (host-resident numpy
+    param trees), so an event boundary checkpoints stragglers and all.
     """
 
     def __init__(self, k: Optional[int] = None,
@@ -127,72 +132,83 @@ class SemiAsyncRoundLoop(RoundLoop):
             or max(1, cfg.clients_per_round // 2)
         self.decay = (self._decay_override if self._decay_override is not None
                       else cfg.staleness_decay)
-        self.in_flight: List[_InFlight] = []
 
-    def _dispatch(self, clients: List[int]) -> None:
+    def _dispatch(self, state: ServerState,
+                  clients: List[int]) -> ServerState:
         eng = self.eng
-        assigns = eng.assignment.assign(clients)
-        results = eng.trainer.train_all(assigns)
+        state, assigns = eng.assignment.assign(state, clients)
+        results = eng.trainer.train_all(state, assigns)
+        traffic = state.traffic
+        new = []
         for n, a in assigns.items():
             mu = eng.het.iter_time(n, eng.flops_per_iter(a["width"]))
             nu = eng.het.upload_time(n, eng.payload.bytes(a))
-            eng.traffic += 2 * eng.payload.bytes(a)
-            self.in_flight.append(_InFlight(
-                n, a, results[n], eng.wall + a["tau"] * mu + nu, eng.round))
+            traffic += 2 * eng.payload.bytes(a)
+            new.append(InFlight(n, a, results[n],
+                                state.wall + a["tau"] * mu + nu, state.round))
+        return dataclasses.replace(state, traffic=traffic,
+                                   in_flight=state.in_flight + tuple(new))
 
-    def run_round(self) -> RoundLog:
+    def run_round(self, state: ServerState) -> Tuple[ServerState, RoundLog]:
         eng = self.eng
         cfg = eng.cfg
-        eng.het.advance_round()
-        busy = {t.client for t in self.in_flight}
-        need = cfg.clients_per_round - len(self.in_flight)
+        eng.het.round = state.round + 1
+        busy = {t.client for t in state.in_flight}
+        need = cfg.clients_per_round - len(state.in_flight)
         if need > 0:
             # the eligible pool can be empty (clients_per_round >
             # num_clients, every client already in flight, or no client
             # passes its participation gate): skip the dispatch instead
             # of spuriously advancing assignment-policy state on [].
-            newly = eng.sample_clients(need, exclude=busy)
+            newly = eng.sample_clients(state, need, exclude=busy)
             if newly:
-                self._dispatch(newly)
-        if not self.in_flight:
+                state = self._dispatch(state, newly)
+        if not state.in_flight:
             raise RuntimeError(
                 "semi-async round with no dispatchable clients "
                 f"(num_clients={cfg.num_clients}, "
                 f"clients_per_round={cfg.clients_per_round})")
 
-        self.in_flight.sort(key=lambda t: t.finish)
-        k = min(self.k, len(self.in_flight))
-        t_k = self.in_flight[k - 1].finish
-        done = [t for t in self.in_flight if t.finish <= t_k]
-        self.in_flight = [t for t in self.in_flight if t.finish > t_k]
+        # stable sort: ties keep dispatch order, like the legacy in-place
+        # list sort, so event composition is reproducible
+        flight = sorted(state.in_flight, key=lambda t: t.finish)
+        k = min(self.k, len(flight))
+        t_k = flight[k - 1].finish
+        done = [t for t in flight if t.finish <= t_k]
+        remaining = [t for t in flight if t.finish > t_k]
 
         results = {t.client: t.result for t in done}
         assigns = {t.client: t.assign for t in done}
-        stale = sum(1 for t in done if eng.round > t.dispatched)
+        stale = sum(1 for t in done if state.round > t.dispatched)
         # all-fresh events take the cheap synchronous merge path
         weights = None if stale == 0 else {
-            t.client: self.decay ** (eng.round - t.dispatched) for t in done}
+            t.client: self.decay ** (state.round - t.dispatched)
+            for t in done}
         if cfg.sample_weighted:
             sw = _sample_weights(eng, list(results))
             weights = sw if weights is None else \
                 {n: sw[n] * weights[n] for n in sw}
-        eng.aggregator.aggregate(results, assigns, weights=weights)
+        state = eng.aggregator.aggregate(state, results, assigns,
+                                         weights=weights)
         # stragglers must not pin device-resident cohort stacks (and
         # their host caches) across events: degrade their results to the
-        # plain numpy contract now, so each stack dies with its event
-        for t in self.in_flight:
-            t.result = dataclasses.replace(t.result,
-                                           params=t.result.host_params())
+        # plain numpy contract now, so each stack dies with its event —
+        # which also keeps in-flight records checkpointable as-is
+        remaining = tuple(
+            dataclasses.replace(
+                t, result=dataclasses.replace(
+                    t.result, params=t.result.host_params()))
+            for t in remaining)
 
-        makespan = t_k - eng.wall  # time since the previous aggregation
+        makespan = t_k - state.wall  # time since the previous aggregation
         wait = float(np.mean([t_k - t.finish for t in done]))
-        eng.wall = t_k
-        eng.round += 1
+        state = dataclasses.replace(state, wall=t_k, round=state.round + 1,
+                                    in_flight=remaining)
         acc = None
-        if eng.round % cfg.eval_every == 0 or eng.round == 1:
-            acc = eng.aggregator.evaluate()
-        log = RoundLog(eng.round, eng.wall, eng.traffic, makespan, wait,
+        if state.round % cfg.eval_every == 0 or state.round == 1:
+            acc = eng.aggregator.evaluate(state)
+        log = RoundLog(state.round, state.wall, state.traffic, makespan, wait,
                        float(np.mean([a["tau"] for a in assigns.values()])),
                        acc, stale=stale)
-        eng.history.append(log)
-        return log
+        state = dataclasses.replace(state, history=state.history + (log,))
+        return state, log

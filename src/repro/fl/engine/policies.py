@@ -9,16 +9,18 @@ These encode exactly the per-scheme differences of paper Sec. VI-B:
   HeroesAssignment      Alg. 1 — greedy width growth, pacesetter tau*,
                         variance-minimising tau, least-trained blocks
 
-``HeroesAssignment`` is also used by the legacy
-:class:`repro.fl.server.HeroesRunner`, which delegates its ``assign`` to
-this policy — the round-0 (predefined frequency) and planned paths share
-one block-selection/bookkeeping helper instead of the two copies the
-seed carried.
+All policies are pure with respect to round state: ``assign(state,
+clients)`` returns ``(state', assigns)``, and the Heroes block/anchored
+tallies live in ``state.sched`` (a :class:`~repro.fl.types.SchedState`)
+so they checkpoint and resume with the run.  The ``HeroesScheduler``
+instance is a stateless planner whose ``counters`` scratch is synced
+from the state on every call.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -27,7 +29,7 @@ from repro.core.composition import select_blocks
 from repro.core.scheduler import HeroesScheduler, SchedulerConfig
 from repro.fl.engine.base import Assignment, AssignmentPolicy
 from repro.fl.heterogeneity import HeterogeneityModel
-
+from repro.fl.types import SchedState, ServerState
 
 # auto-mu_max probes at most this many clients (exact below, an evenly
 # spaced sample above — population-scale setup stays O(1) in the pop)
@@ -47,29 +49,34 @@ class FullWidthAssignment(AssignmentPolicy):
     def __init__(self, adaptive_tau: bool = False):
         self.adaptive_tau = adaptive_tau
 
-    def assign(self, clients: Sequence[int]) -> Dict[int, Assignment]:
+    def assign(self, state: ServerState, clients: Sequence[int],
+               ) -> Tuple[ServerState, Dict[int, Assignment]]:
         eng = self.eng
         tau = eng.cfg.tau_fixed
-        if self.adaptive_tau and eng.round > 0:
-            t = convergence.tau_star(eng.bound_state, max(200 - eng.round, 1))
+        if self.adaptive_tau and state.round > 0:
+            t = convergence.tau_star(state.bound_state,
+                                     max(200 - state.round, 1))
             tau = int(np.clip(round(t), 1, eng.cfg.tau_max))
-        return {n: {"width": eng.P, "tau": tau} for n in clients}
+        return state, {n: {"width": eng.P, "tau": tau} for n in clients}
 
 
 class TierWidthAssignment(AssignmentPolicy):
     """Width by hardware tier, fixed identical tau."""
 
-    def assign(self, clients: Sequence[int]) -> Dict[int, Assignment]:
+    def assign(self, state: ServerState, clients: Sequence[int],
+               ) -> Tuple[ServerState, Dict[int, Assignment]]:
         eng = self.eng
-        return {n: {"width": tier_width(eng.het, n, eng.P),
-                    "tau": eng.cfg.tau_fixed} for n in clients}
+        return state, {n: {"width": tier_width(eng.het, n, eng.P),
+                           "tau": eng.cfg.tau_fixed} for n in clients}
 
 
 class HeroesAssignment(AssignmentPolicy):
     """Heroes Alg. 1: scheduler-driven width/tau + least-trained blocks.
 
-    Owns the scheduler (hidden-layer P^2 counter) and the anchored-layer
-    P-block counter shared by the boundary layers (DESIGN.md §5).
+    The hidden-layer P^2 counter and the anchored-layer P-block counter
+    shared by the boundary layers (DESIGN.md §5) live in ``state.sched``;
+    ``assign`` copies them, charges the copies, and returns a state with
+    the fresh tallies.
     """
 
     def setup(self, eng) -> None:
@@ -87,7 +94,8 @@ class HeroesAssignment(AssignmentPolicy):
             # from an evenly-spaced deterministic probe — setup must not
             # enumerate the population; below it, every client is probed
             # exactly as before (identical medians, seeded histories
-            # stay bitwise).
+            # stay bitwise).  The probe reads the round-0 time model, so
+            # a resumed run reconstructs the identical mu_max.
             ns = range(cfg.num_clients)
             if cfg.num_clients > _MU_PROBE:
                 ns = np.linspace(0, cfg.num_clients - 1,
@@ -104,13 +112,16 @@ class HeroesAssignment(AssignmentPolicy):
             comm_time_fn=lambda n, p: eng.het.upload_time(
                 n, eng.model.factorized_bytes(p)),
         )
-        # anchored layers share a P-block counter (DESIGN.md §5)
-        self.anchored_counters = np.zeros(self.P, np.int64)
         self.last_plan = None
 
+    def init_state(self, state: ServerState) -> ServerState:
+        return dataclasses.replace(state, sched=SchedState(
+            counters=np.zeros(self.scheduler.spec.num_blocks, np.int64),
+            anchored=np.zeros(self.P, np.int64)))
+
     # -- shared block/anchored bookkeeping ---------------------------------
-    def _charge(self, width: int, tau: int, hidden_ids: np.ndarray,
-                predefined: bool) -> Assignment:
+    def _charge(self, anchored: np.ndarray, width: int, tau: int,
+                hidden_ids: np.ndarray, predefined: bool) -> Assignment:
         """Charge the anchored counter and build one client's assignment.
 
         ``predefined`` is the round-0 rule (Alg. 1 h=0): anchored layers
@@ -120,28 +131,40 @@ class HeroesAssignment(AssignmentPolicy):
         if predefined:
             anch_ids: Optional[np.ndarray] = np.arange(min(width, self.P))
         elif self._anch_spec is not None:
-            anch_ids = select_blocks(self.anchored_counters, width, self._anch_spec)
+            anch_ids = select_blocks(anchored, width, self._anch_spec)
         else:
             anch_ids = None
         if anch_ids is not None:
-            self.anchored_counters[anch_ids] += tau
+            anchored[anch_ids] += tau
         return {"width": width, "tau": tau,
                 "hidden_ids": hidden_ids, "anchored_ids": anch_ids}
 
-    def assign(self, clients: Sequence[int]) -> Dict[int, Assignment]:
+    def assign(self, state: ServerState, clients: Sequence[int],
+               ) -> Tuple[ServerState, Dict[int, Assignment]]:
         eng = self.eng
-        if eng.round == 0:
+        counters = np.array(state.sched.counters, dtype=np.int64)
+        anchored = np.array(state.sched.anchored, dtype=np.int64)
+        if state.round == 0:
             # h=0: identical predefined frequency, no estimates yet (Alg. 1)
             tau = eng.cfg.tau_fixed
             out = {}
             for n in clients:
                 width = self.scheduler.assign_width(n)
-                ids = select_blocks(self.scheduler.counters, width,
-                                    self.scheduler.spec)
-                self.scheduler.counters[ids] += tau
-                out[n] = self._charge(width, tau, ids, predefined=True)
-            return out
-        plan = self.scheduler.plan_round(clients, eng.bound_state)
-        self.last_plan = plan
-        return {n: self._charge(a.width, a.tau, a.block_ids, predefined=False)
-                for n, a in plan.assignments.items()}
+                ids = select_blocks(counters, width, self.scheduler.spec)
+                counters[ids] += tau
+                out[n] = self._charge(anchored, width, tau, ids,
+                                      predefined=True)
+        else:
+            self.scheduler.counters = counters
+            plan = self.scheduler.plan_round(clients, state.bound_state)
+            self.last_plan = plan
+            counters = self.scheduler.counters
+            out = {n: self._charge(anchored, a.width, a.tau, a.block_ids,
+                                   predefined=False)
+                   for n, a in plan.assignments.items()}
+        # keep the planner's scratch mirroring the authoritative tallies
+        # (counter_variance() readers see the post-round state)
+        self.scheduler.counters = counters
+        return (dataclasses.replace(state,
+                                    sched=SchedState(counters, anchored)),
+                out)

@@ -1,33 +1,43 @@
-"""The engine runner: shared round state + component wiring.
+"""The engine runner: component wiring around an explicit ServerState.
 
-Holds everything the five components share — model, data partitions,
-heterogeneity model, virtual wall clock, traffic meter, round counter,
-bound state, global params — and delegates each concern to its
-component.  Public surface matches the legacy ``BaseRunner`` (``run``,
-``run_round``, ``run_until_budget``, ``history``, ``eval_accuracy``) so
-drivers can swap backends without changes.
+The runner owns the *static* collaborators — model, data partitions,
+heterogeneity model, collective merger, the five scheme components —
+and exactly ONE mutable slot: ``self.state``, the current
+:class:`~repro.fl.types.ServerState`.  Each ``run_round`` installs the
+state returned by the loop and (when ``FLConfig.checkpoint_every`` is
+set) saves it at the round boundary through
+:mod:`repro.checkpoint.msgpack_ckpt`; ``restore_latest`` rebuilds the
+state from the newest checkpoint so the continued run is
+bitwise-identical to an uninterrupted one.  Public surface matches the
+retired legacy ``BaseRunner`` (``run``, ``run_round``,
+``run_until_budget``, ``history``, ``eval_accuracy``; round counters as
+read-only properties over the state) so drivers swap backends without
+changes.
 """
 
 from __future__ import annotations
 
-from typing import Any, List, Optional
+from pathlib import Path
+from typing import List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import msgpack_ckpt
 from repro.core import convergence
 from repro.data.streaming import ClientDataLoader
 from repro.fl.engine import collective
+from repro.fl.engine import state as state_lib
 from repro.fl.engine.base import (Aggregator, AssignmentPolicy, LocalTrainer,
                                   ParticipationScheduler, PayloadModel,
                                   RoundLoop)
 from repro.fl.heterogeneity import HeterogeneityModel
 from repro.fl.models import FLModelDef
-from repro.fl.types import FLConfig, RoundLog
+from repro.fl.types import FLConfig, RoundLog, ServerState
 
 
 class EngineRunner:
-    """A scheme = five components sharing this round state."""
+    """A scheme = five components threading one ServerState."""
 
     def __init__(self, scheme: str, model: FLModelDef, parts_x, parts_y,
                  test_batch, het: HeterogeneityModel, cfg: FLConfig,
@@ -43,20 +53,14 @@ class EngineRunner:
         # shards may be lazy ShardViews or a population-scale
         # VirtualShardList — see repro.data.streaming
         self.data = ClientDataLoader(parts_x, parts_y)
-        # population registry (virtual setups): participation
-        # bookkeeping + on-demand per-client state
+        # population registry (virtual setups): adopts the state's
+        # participation dict as its bookkeeping store (below)
         self.population = getattr(parts_x, "registry", None)
         self.test_batch = test_batch
         self.het = het
         self.cfg = cfg
         self.eval_width = eval_width
-        self.rng = np.random.default_rng(cfg.seed)
-        self.wall = 0.0
-        self.traffic = 0.0
-        self.history: List[RoundLog] = []
-        self.round = 0
         self.P = next(iter(model.specs.values())).max_width
-        self.params: Any = None  # owned/initialised by the aggregator
         self.factorized = factorized
         self.estimate = estimate
         # collective merge backend (one compiled call per round; clients
@@ -67,8 +71,6 @@ class EngineRunner:
             self.merger = collective.build_merger(cfg)
         elif cfg.agg_backend != "host":
             raise ValueError(f"unknown agg_backend {cfg.agg_backend!r}")
-        self.bound_state = convergence.BoundState(
-            loss0=2.3, smoothness=1.0, grad_sq=1.0, noise_sq=0.5, lr=cfg.lr)
 
         self.assignment = assignment
         self.payload = payload
@@ -84,15 +86,58 @@ class EngineRunner:
         for comp in (assignment, payload, aggregator, trainer, loop,
                      self.sampler):
             comp.setup(self)
-        aggregator.init_global()
+
+        self.state = ServerState(
+            rng=np.random.default_rng(cfg.seed),
+            bound_state=convergence.BoundState(
+                loss0=2.3, smoothness=1.0, grad_sq=1.0, noise_sq=0.5,
+                lr=cfg.lr))
+        self.state = aggregator.init_global(self.state)
+        self.state = assignment.init_state(self.state)
+        self._bind_population()
+
+    def _bind_population(self) -> None:
+        if self.population is not None:
+            self.population.bind_participation(self.state.participation)
+
+    # --- state views (legacy-compatible read surface) ---------------------
+    @property
+    def round(self) -> int:
+        return self.state.round
+
+    @property
+    def wall(self) -> float:
+        return self.state.wall
+
+    @property
+    def traffic(self) -> float:
+        return self.state.traffic
+
+    @property
+    def params(self):
+        return self.state.params
+
+    @property
+    def bound_state(self):
+        return self.state.bound_state
+
+    @property
+    def rng(self) -> np.random.Generator:
+        return self.state.rng
+
+    @property
+    def history(self) -> List[RoundLog]:
+        return list(self.state.history)
 
     # --- shared helpers ---------------------------------------------------
-    def sample_clients(self, k: int, exclude=frozenset()) -> List[int]:
+    def sample_clients(self, state: ServerState, k: int,
+                       exclude=frozenset()) -> List[int]:
         """One round's cohort via the participation scheduler; records
-        participation in the population registry when one is bound."""
-        clients = self.sampler.sample(k, exclude)
-        if self.population is not None and clients:
-            self.population.note_participation(clients, self.round)
+        participation in ``state.participation`` (the store the
+        population registry shares by identity when one is bound)."""
+        clients = self.sampler.sample(state, k, exclude)
+        for n in clients:
+            state.participation[int(n)] = state.round
         return clients
 
     def close(self) -> None:
@@ -146,11 +191,48 @@ class EngineRunner:
         return correct / total
 
     def eval_accuracy(self) -> float:
-        return self.aggregator.evaluate()
+        return self.aggregator.evaluate(self.state)
+
+    # --- checkpoint / resume ----------------------------------------------
+    def save_checkpoint(self) -> Path:
+        """Write the current ServerState under ``cfg.checkpoint_dir``."""
+        if not self.cfg.checkpoint_dir:
+            raise ValueError("FLConfig.checkpoint_dir is not set")
+        payload = state_lib.state_to_payload(self.state)
+        return msgpack_ckpt.save_checkpoint(
+            self.cfg.checkpoint_dir, self.state.round, payload,
+            keep=self.cfg.checkpoint_keep)
+
+    def restore_latest(self) -> bool:
+        """Adopt the newest checkpoint under ``cfg.checkpoint_dir``.
+
+        Returns False when there is none (fresh start).  The freshly
+        initialised params serve as the key-type template for the
+        restored pytree; afterwards the continued history — rng stream,
+        scheduler tallies and in-flight dispatches included — is
+        bitwise-identical to a never-interrupted run.
+        """
+        if not self.cfg.checkpoint_dir:
+            raise ValueError("FLConfig.checkpoint_dir is not set")
+        got = msgpack_ckpt.restore_latest(self.cfg.checkpoint_dir)
+        if got is None:
+            return False
+        _, payload = got
+        self.state = state_lib.payload_to_state(payload, self.state.params)
+        self._bind_population()
+        return True
+
+    def _maybe_checkpoint(self) -> None:
+        cfg = self.cfg
+        if (cfg.checkpoint_every > 0 and cfg.checkpoint_dir
+                and self.state.round % cfg.checkpoint_every == 0):
+            self.save_checkpoint()
 
     # --- driving ----------------------------------------------------------
     def run_round(self) -> RoundLog:
-        return self.loop.run_round()
+        self.state, log = self.loop.run_round(self.state)
+        self._maybe_checkpoint()
+        return log
 
     def run(self, rounds: int) -> List[RoundLog]:
         for _ in range(rounds):

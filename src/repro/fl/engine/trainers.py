@@ -68,15 +68,16 @@ class SequentialTrainer(LocalTrainer):
     of K per-client device round-trips.
     """
 
-    def train_all(self, assigns: Dict[int, Assignment]) -> Dict[int, ClientResult]:
+    def train_all(self, state, assigns: Dict[int, Assignment],
+                  ) -> Dict[int, ClientResult]:
         eng = self.eng
         out = {}
         for n, a in assigns.items():
-            params = eng.aggregator.client_params(n, a)
+            params = eng.aggregator.client_params(state, n, a)
             res = client_lib.local_train(
                 eng.model, params, a["width"], a["tau"],
                 eng.parts_x[n], eng.parts_y[n], eng.cfg.lr,
-                np.random.default_rng((eng.cfg.seed, eng.round, n)),
+                np.random.default_rng((eng.cfg.seed, state.round, n)),
                 eng.cfg.batch_size, factorized=eng.factorized,
                 estimate=eng.estimate,
                 forward_impl=eng.cfg.forward_impl,
@@ -214,7 +215,8 @@ class CohortTrainer(LocalTrainer):
         self.mesh = flsh.cohort_mesh(
             getattr(eng.cfg, "trainer_mesh_devices", 0))
 
-    def train_all(self, assigns: Dict[int, Assignment]) -> Dict[int, ClientResult]:
+    def train_all(self, state, assigns: Dict[int, Assignment],
+                  ) -> Dict[int, ClientResult]:
         eng = self.eng
         groups: Dict[tuple, List[int]] = {}
         for n, a in assigns.items():
@@ -224,11 +226,12 @@ class CohortTrainer(LocalTrainer):
         # the device step (numpy-only on the worker thread)
         specs = list(groups.items())
         prepared = eng.data.prefetch(
-            specs, lambda s: self._prepare_group(s[0][1], s[1], assigns))
+            specs, lambda s: self._prepare_group(state, s[0][1], s[1], assigns))
         results: Dict[int, ClientResult] = {}
         try:
             for ((width, b_eff), ns), prep in zip(specs, prepared):
-                results.update(self._train_group(width, ns, assigns, prep))
+                results.update(
+                    self._train_group(state, width, ns, assigns, prep))
         finally:
             # a failing device step must not abandon the generator with
             # its prefetch worker blocked on the queue (thread leak) —
@@ -236,7 +239,7 @@ class CohortTrainer(LocalTrainer):
             prepared.close()
         return {n: results[n] for n in assigns}
 
-    def _prepare_group(self, b_eff: int, ns: List[int],
+    def _prepare_group(self, state, b_eff: int, ns: List[int],
                        assigns: Dict[int, Assignment]):
         """Host-side batch staging for one cohort group (numpy only —
         safe to run on the prefetch thread).
@@ -265,7 +268,7 @@ class CohortTrainer(LocalTrainer):
             # batches, then 3 estimate batches (padding steps reuse the
             # last batch — they are masked no-ops in the scan)
             xs, ys, est = eng.data.draw_round(
-                n, seed=cfg.seed, rnd=eng.round, tau=tau, batch_size=b_eff,
+                n, seed=cfg.seed, rnd=state.round, tau=tau, batch_size=b_eff,
                 estimate=eng.estimate, tau_pad=tau_pad)
             xs_steps.append(xs)
             ys_steps.append(ys)
@@ -292,14 +295,14 @@ class CohortTrainer(LocalTrainer):
                            "labels": stack_client_shards(ys_est, chunks)}
         return batches, est_batches, taus_arr, c_pad
 
-    def _train_group(self, width: int, ns: List[int],
+    def _train_group(self, state, width: int, ns: List[int],
                      assigns: Dict[int, Assignment],
                      prep) -> Dict[int, ClientResult]:
         eng, model, cfg = self.eng, self.eng.model, self.eng.cfg
         mesh = self.mesh
         batches_np, est_np, taus_arr, c_pad = prep
 
-        client_params = [eng.aggregator.client_params(n, assigns[n])
+        client_params = [eng.aggregator.client_params(state, n, assigns[n])
                          for n in ns]
         client_params += [client_params[0]] * (c_pad - len(ns))
         stacked = jax.tree_util.tree_map(
@@ -393,7 +396,8 @@ class ProximalTrainer(LocalTrainer):
     def __init__(self, mu: Optional[float] = None):
         self._mu = mu
 
-    def train_all(self, assigns: Dict[int, Assignment]) -> Dict[int, ClientResult]:
+    def train_all(self, state, assigns: Dict[int, Assignment],
+                  ) -> Dict[int, ClientResult]:
         eng, cfg = self.eng, self.eng.cfg
         mu = cfg.prox_mu if self._mu is None else self._mu
         xkey = "tokens" if eng.model.name == "rnn" else "x"
@@ -402,11 +406,11 @@ class ProximalTrainer(LocalTrainer):
             loss_fn, grad_fn, prox_step = _prox_fns(
                 eng.model, a["width"], eng.factorized,
                 cfg.forward_impl)
-            anchor = eng.aggregator.client_params(n, a)
+            anchor = eng.aggregator.client_params(state, n, a)
             nsamp = eng.data.num_samples(n)
             b_eff = min(cfg.batch_size, nsamp)
             tau = max(a["tau"], 1)
-            idx, est_idx = round_batch_indices(cfg.seed, eng.round, n, nsamp,
+            idx, est_idx = round_batch_indices(cfg.seed, state.round, n, nsamp,
                                                tau, b_eff,
                                                estimate=eng.estimate)
             params, first = anchor, None

@@ -21,17 +21,26 @@ Four pieces (docs/POPULATION.md):
                   ``masked_block_merge``.
 """
 
-from repro.fl.population.hierarchy import (HierarchicalMerger,  # noqa: F401
+from repro.fl.population.hierarchy import (HierarchicalMerger,
                                            assign_edge_groups,
                                            grouped_ordered_fold)
-from repro.fl.population.partition import VirtualPartition  # noqa: F401
-from repro.fl.population.registry import (DEFAULT_TIER_WEIGHTS,  # noqa: F401
+from repro.fl.population.partition import VirtualPartition
+from repro.fl.population.registry import (DEFAULT_TIER_WEIGHTS,
                                           PopulationRegistry,
                                           VirtualClientState)
-from repro.fl.population.schedulers import (SCHEDULERS,  # noqa: F401
+from repro.fl.population.schedulers import (SCHEDULERS,
                                             AvailabilityParticipation,
                                             ResourceGatedParticipation,
                                             TraceParticipation,
                                             UniformParticipation,
                                             build_scheduler,
                                             register_scheduler)
+
+__all__ = [
+    "HierarchicalMerger", "assign_edge_groups", "grouped_ordered_fold",
+    "VirtualPartition",
+    "DEFAULT_TIER_WEIGHTS", "PopulationRegistry", "VirtualClientState",
+    "SCHEDULERS", "AvailabilityParticipation", "ResourceGatedParticipation",
+    "TraceParticipation", "UniformParticipation", "build_scheduler",
+    "register_scheduler",
+]

@@ -31,7 +31,7 @@ therefore defers to the flat mesh implementation there.
 from __future__ import annotations
 
 import functools
-from typing import List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp

@@ -16,6 +16,9 @@ pure function of ``(seed, client_id[, round])``:
   * last round    — the ONE piece of accumulated state, a compact dict
     participated     keyed only by clients that actually participated
                     (bounded by rounds x cohort, never the population).
+                    When bound to an engine (``bind_participation``) the
+                    dict IS the engine's ``ServerState.participation``,
+                    so it checkpoints and resumes with the run.
 
 Nothing else is resident between rounds, which is what lets 10^4–10^6
 client simulations run in the memory footprint of their cohort.
@@ -112,6 +115,21 @@ class PopulationRegistry:
     def note_participation(self, clients: Iterable[int], rnd: int) -> None:
         for n in clients:
             self._last_round[int(n)] = int(rnd)
+
+    def bind_participation(self, store: dict) -> dict:
+        """Adopt ``store`` (the engine ``ServerState.participation``
+        dict) as THE bookkeeping store, shared by identity.
+
+        The engine records cohorts into its state — which is what gets
+        checkpointed and restored — and the registry reads the same
+        object, so ``last_participation`` survives a resume without a
+        second copy.  Notes accumulated before binding are folded in
+        (entries already in ``store``, e.g. from a restored checkpoint,
+        win)."""
+        for n, rnd in self._last_round.items():
+            store.setdefault(n, rnd)
+        self._last_round = store
+        return store
 
     def last_participation(self, n: int) -> Optional[int]:
         return self._last_round.get(int(n))

@@ -23,10 +23,11 @@ registry (mirroring the scheme/trainer/loop registries):
                   ``(round, client_id) -> bool``), for experiments
                   driven by recorded device-uptime logs.
 
-All schedulers draw their *selection* randomness from ``eng.rng`` (the
-sequential seeded stream) and their *gate* randomness from keyed
-streams, so cohorts are reproducible and gates are independent of
-population size and query order.
+All schedulers draw their *selection* randomness from ``state.rng``
+(the sequential seeded stream carried by the engine's ServerState —
+checkpointed and restored with the run) and their *gate* randomness from
+keyed streams, so cohorts are reproducible, resumable, and gates are
+independent of population size and query order.
 """
 
 from __future__ import annotations
@@ -79,21 +80,20 @@ def _rejection_sample(rng: np.random.Generator, pop: int, k: int,
 class UniformParticipation(ParticipationScheduler):
     """Uniform without-replacement sampling (the legacy inline policy)."""
 
-    def sample(self, k: int, exclude=frozenset()) -> List[int]:
-        eng = self.eng
-        pop = eng.cfg.num_clients
+    def sample(self, state, k: int, exclude=frozenset()) -> List[int]:
+        pop = self.eng.cfg.num_clients
         if pop <= _EXACT_POOL_MAX:
             if not exclude:
                 # the SyncRoundLoop legacy draw, verbatim (bitwise)
                 return [int(c) for c in
-                        eng.rng.choice(pop, k, replace=False)]
+                        state.rng.choice(pop, k, replace=False)]
             # the SemiAsyncRoundLoop legacy pool + draw, verbatim
             pool = np.array([c for c in range(pop) if c not in exclude])
             if not len(pool):
                 return []
             return [int(c) for c in
-                    eng.rng.choice(pool, min(k, len(pool)), replace=False)]
-        return _rejection_sample(eng.rng, pop, k, exclude)
+                    state.rng.choice(pool, min(k, len(pool)), replace=False)]
+        return _rejection_sample(state.rng, pop, k, exclude)
 
 
 class _GatedParticipation(ParticipationScheduler):
@@ -114,17 +114,16 @@ class _GatedParticipation(ParticipationScheduler):
             (self.eng.cfg.seed, self._tag, int(rnd), int(n))).random()
         return bool(u < p)
 
-    def sample(self, k: int, exclude=frozenset()) -> List[int]:
-        eng = self.eng
-        pop, rnd = eng.cfg.num_clients, eng.round
+    def sample(self, state, k: int, exclude=frozenset()) -> List[int]:
+        pop, rnd = self.eng.cfg.num_clients, state.round
         if pop <= self._exact_max:
             pool = np.array([c for c in range(pop)
                              if c not in exclude and self._gate(c, rnd)])
             if not len(pool):
                 return []
             return [int(c) for c in
-                    eng.rng.choice(pool, min(k, len(pool)), replace=False)]
-        return _rejection_sample(eng.rng, pop, k, exclude,
+                    state.rng.choice(pool, min(k, len(pool)), replace=False)]
+        return _rejection_sample(state.rng, pop, k, exclude,
                                  gate=lambda n: self._gate(n, rnd))
 
 
@@ -196,29 +195,28 @@ class TraceParticipation(ParticipationScheduler):
                 "hook or set eng.availability_trace")
         return self.trace
 
-    def sample(self, k: int, exclude=frozenset()) -> List[int]:
-        eng = self.eng
+    def sample(self, state, k: int, exclude=frozenset()) -> List[int]:
         trace = self._require_trace()
-        pop, rnd = eng.cfg.num_clients, eng.round
+        pop, rnd = self.eng.cfg.num_clients, state.round
         if not callable(trace):
             avail = trace.get(int(rnd))
             if avail is None:  # round not in the trace: all reachable
-                return UniformParticipation.sample(self, k, exclude)
+                return UniformParticipation.sample(self, state, k, exclude)
             pool = np.array(sorted(int(c) for c in avail
                                    if 0 <= int(c) < pop
                                    and int(c) not in exclude))
             if not len(pool):
                 return []
             return [int(c) for c in
-                    eng.rng.choice(pool, min(k, len(pool)), replace=False)]
+                    state.rng.choice(pool, min(k, len(pool)), replace=False)]
         if pop <= _GatedParticipation._exact_max:
             pool = np.array([c for c in range(pop)
                              if c not in exclude and trace(rnd, c)])
             if not len(pool):
                 return []
             return [int(c) for c in
-                    eng.rng.choice(pool, min(k, len(pool)), replace=False)]
-        return _rejection_sample(eng.rng, pop, k, exclude,
+                    state.rng.choice(pool, min(k, len(pool)), replace=False)]
+        return _rejection_sample(state.rng, pop, k, exclude,
                                  gate=lambda n: trace(rnd, n))
 
 

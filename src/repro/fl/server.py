@@ -1,384 +1,50 @@
-"""FL servers: Heroes (Alg. 1) and the four baselines of Sec. VI-B.
+"""Deprecated legacy runner surface.
 
-All runners share a skeleton — per round: sample K clients, assign
-(width, tau, tensors), run local training, aggregate, charge virtual
-wall-clock (Eq. 19) + traffic — and differ exactly where the paper's
-schemes differ:
+The monolithic per-scheme runner classes that used to live here were
+retired in favour of the layered engine (:mod:`repro.fl.engine`): a
+scheme is now a bundle of assignment / payload / aggregator / trainer /
+loop components threading an explicit
+:class:`~repro.fl.types.ServerState`.  The engine reproduces the legacy
+histories bitwise (pinned by tests/fixtures/golden_legacy_histories.json).
 
-  FedAvg    full model, fixed identical tau                  [2]
-  ADP       full model, *adaptive* identical tau             [31]
-  HeteroFL  width-sliced sub-models by tier, fixed tau       [13]
-  Flanc     original neural composition: per-width coeffs    [15]
-  Heroes    enhanced NC (global block counter, block-wise
-            aggregation) + per-client adaptive tau           (this paper)
+What remains is the old entry-point shape: ``RUNNERS[scheme](...)``
+still resolves and returns a ready-to-run runner, but it is a thin shim
+that emits a :class:`DeprecationWarning` and builds the engine bundle.
+New code should call :func:`repro.fl.engine.build_engine` (or
+:func:`repro.fl.simulation.build_runner`) directly.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.fl.engine.policies import tier_width
+from repro.fl.types import FLConfig, RoundLog
 
-from repro.core import aggregation, convergence
-from repro.fl import client as client_lib
-from repro.fl.engine.policies import HeroesAssignment, tier_width  # noqa: F401
-from repro.fl.heterogeneity import HeterogeneityModel
-from repro.fl.models import FLModelDef
-from repro.fl.types import FLConfig, RoundLog  # noqa: F401  (re-exported)
+__all__ = ["RUNNERS", "FLConfig", "RoundLog", "tier_width"]
 
 
-class BaseRunner:
-    """Common round skeleton; subclasses implement assign/train/aggregate."""
+class _RunnerShim:
+    """Callable standing in for a retired legacy runner class."""
 
-    scheme = "base"
+    def __init__(self, scheme: str):
+        self.scheme = scheme
 
-    def __init__(self, model: FLModelDef, parts_x, parts_y, test_batch,
-                 het: HeterogeneityModel, cfg: FLConfig, eval_width: int):
-        self.model = model
-        self.parts_x, self.parts_y = parts_x, parts_y
-        self.test_batch = test_batch
-        self.het = het
-        self.cfg = cfg
-        self.eval_width = eval_width
-        self.rng = np.random.default_rng(cfg.seed)
-        self.wall = 0.0
-        self.traffic = 0.0
-        self.history: List[RoundLog] = []
-        self.round = 0
+    def __call__(self, model, parts_x, parts_y, test_batch, het, cfg,
+                 eval_width=None):
+        warnings.warn(
+            f"repro.fl.server.RUNNERS[{self.scheme!r}] is deprecated: the "
+            "legacy runner classes were retired; this shim builds the "
+            "equivalent engine bundle (repro.fl.engine.build_engine), "
+            "which reproduces the legacy histories bitwise.",
+            DeprecationWarning, stacklevel=2)
+        from repro.fl.engine import build_engine
+        return build_engine(self.scheme, model, parts_x, parts_y, test_batch,
+                            het, cfg, eval_width)
 
-    # --- subclass API ----------------------------------------------------
-    def assign(self, clients) -> Dict[int, Dict[str, Any]]:
-        raise NotImplementedError
-
-    def client_payload_bytes(self, assignment) -> float:
-        raise NotImplementedError
-
-    def train_one(self, n: int, assignment) -> client_lib.ClientResult:
-        raise NotImplementedError
-
-    def aggregate(self, results: Dict[int, client_lib.ClientResult], assigns):
-        raise NotImplementedError
-
-    def eval_accuracy(self) -> float:
-        raise NotImplementedError
-
-    # --- shared ------------------------------------------------------------
-    def flops_per_iter(self, width: int) -> float:
-        return self.model.flops_per_sample(width) * self.cfg.batch_size
-
-    def run_round(self) -> RoundLog:
-        cfg = self.cfg
-        self.het.advance_round()
-        clients = self.rng.choice(cfg.num_clients, cfg.clients_per_round, replace=False)
-        assigns = self.assign(list(map(int, clients)))
-        results, times = {}, {}
-        for n, a in assigns.items():
-            res = self.train_one(n, a)
-            results[n] = res
-            mu = self.het.iter_time(n, self.flops_per_iter(a["width"]))
-            nu = self.het.upload_time(n, self.client_payload_bytes(a))
-            times[n] = a["tau"] * mu + nu
-            self.traffic += 2 * self.client_payload_bytes(a)  # down + up
-        self.aggregate(results, assigns)
-        makespan = max(times.values())
-        wait = float(np.mean([makespan - t for t in times.values()]))
-        self.wall += makespan
-        self.round += 1
-        acc = None
-        if self.round % cfg.eval_every == 0 or self.round == 1:
-            acc = self.eval_accuracy()
-        log = RoundLog(self.round, self.wall, self.traffic, makespan, wait,
-                       float(np.mean([a["tau"] for a in assigns.values()])), acc)
-        self.history.append(log)
-        return log
-
-    def run(self, rounds: int) -> List[RoundLog]:
-        for _ in range(rounds):
-            self.run_round()
-        return self.history
-
-    def run_until_budget(self, time_budget: Optional[float] = None,
-                         traffic_budget: Optional[float] = None,
-                         max_rounds: int = 10_000) -> List[RoundLog]:
-        """Paper Alg. 1 outer loop: train while T <= T^max (and/or a
-        traffic budget) — the budget-driven form the paper actually runs."""
-        assert time_budget or traffic_budget
-        for _ in range(max_rounds):
-            if time_budget is not None and self.wall >= time_budget:
-                break
-            if traffic_budget is not None and self.traffic >= traffic_budget:
-                break
-            self.run_round()
-        return self.history
-
-    def _acc_from_logits(self, logits) -> float:
-        labels = self.test_batch["labels"]
-        pred = jnp.argmax(logits, -1)
-        return float(jnp.mean((pred == labels).astype(jnp.float32)))
+    def __repr__(self) -> str:  # keep debugger/driver output readable
+        return f"<legacy runner shim for {self.scheme!r} (deprecated)>"
 
 
-# ---------------------------------------------------------------------------
-# FedAvg / ADP (dense, full width, identical tau)
-# ---------------------------------------------------------------------------
-
-
-class FedAvgRunner(BaseRunner):
-    scheme = "fedavg"
-    adaptive_tau = False
-
-    def __init__(self, *args, **kw):
-        super().__init__(*args, **kw)
-        self.params = self.model.init_dense(jax.random.PRNGKey(self.cfg.seed))
-        self.P = next(iter(self.model.specs.values())).max_width
-        self.est_state = convergence.BoundState(
-            loss0=2.3, smoothness=1.0, grad_sq=1.0, noise_sq=0.5, lr=self.cfg.lr)
-
-    def assign(self, clients):
-        tau = self.cfg.tau_fixed
-        if self.adaptive_tau and self.round > 0:
-            t = convergence.tau_star(self.est_state, max(200 - self.round, 1))
-            tau = int(np.clip(round(t), 1, self.cfg.tau_max))
-        return {n: {"width": self.P, "tau": tau} for n in clients}
-
-    def client_payload_bytes(self, a) -> float:
-        return self.model.dense_bytes(self.P)
-
-    def train_one(self, n, a):
-        res = client_lib.local_train(
-            self.model, self.params, self.P, a["tau"],
-            self.parts_x[n], self.parts_y[n], self.cfg.lr,
-            np.random.default_rng((self.cfg.seed, self.round, n)),
-            self.cfg.batch_size, factorized=False, estimate=self.adaptive_tau,
-        )
-        return res
-
-    def aggregate(self, results, assigns):
-        stacked = [r.params for r in results.values()]
-        self.params = jax.tree_util.tree_map(
-            lambda *xs: jnp.mean(jnp.stack(xs), 0), *stacked
-        )
-        ests = [r.estimates for r in results.values() if r.estimates]
-        if ests:
-            mean = {k: float(np.mean([e[k] for e in ests])) for k in ests[0]}
-            self.est_state = convergence.BoundState(
-                loss0=float(np.mean([r.loss_after for r in results.values()])),
-                smoothness=max(mean.get("L", 1.0), 1e-3),
-                grad_sq=mean.get("grad_sq", 1.0),
-                noise_sq=mean.get("sigma_sq", 0.5),
-                lr=self.cfg.lr,
-            )
-
-    def eval_accuracy(self):
-        logits = self.model.forward(self.params, self.P, self.test_batch)
-        return self._acc_from_logits(logits)
-
-
-class ADPRunner(FedAvgRunner):
-    scheme = "adp"
-    adaptive_tau = True
-
-
-# ---------------------------------------------------------------------------
-# HeteroFL (dense slices by tier)
-# ---------------------------------------------------------------------------
-
-
-class HeteroFLRunner(FedAvgRunner):
-    scheme = "heterofl"
-
-    def assign(self, clients):
-        return {n: {"width": tier_width(self.het, n, self.P),
-                    "tau": self.cfg.tau_fixed} for n in clients}
-
-    def client_payload_bytes(self, a) -> float:
-        return self.model.dense_bytes(a["width"])
-
-    def train_one(self, n, a):
-        sub = self.model.slice_dense(self.params, a["width"])
-        return client_lib.local_train(
-            self.model, sub, a["width"], a["tau"],
-            self.parts_x[n], self.parts_y[n], self.cfg.lr,
-            np.random.default_rng((self.cfg.seed, self.round, n)),
-            self.cfg.batch_size, factorized=False, estimate=False,
-        )
-
-    def aggregate(self, results, assigns):
-        # element-wise mean over clients covering each region (HeteroFL)
-        new = {}
-        for name in self.params:
-            full = self.params[name]
-            acc = jnp.zeros_like(full)
-            cnt = jnp.zeros_like(full)
-            for n, r in results.items():
-                w = r.params[name]
-                pad = [(0, full.shape[i] - w.shape[i]) for i in range(full.ndim)]
-                acc = acc + jnp.pad(w, pad)
-                cnt = cnt + jnp.pad(jnp.ones_like(w), pad)
-            covered = cnt > 0
-            new[name] = jnp.where(covered, acc / jnp.maximum(cnt, 1), full)
-        self.params = new
-
-
-# ---------------------------------------------------------------------------
-# Flanc (original NC: per-width coefficients, same-shape aggregation)
-# ---------------------------------------------------------------------------
-
-
-class FlancRunner(BaseRunner):
-    scheme = "flanc"
-
-    def __init__(self, *args, **kw):
-        super().__init__(*args, **kw)
-        key = jax.random.PRNGKey(self.cfg.seed)
-        self.P = next(iter(self.model.specs.values())).max_width
-        full = self.model.init_factorized(key)
-        # per-width coefficient sets: width p owns its own copy of the
-        # first blocks_for_width(p) blocks (original Flanc: no sharing)
-        self.basis = {name: full[name]["basis"] for name in full}
-        self.coeffs = {
-            p: {name: full[name]["coeff"][: self.model.specs[name].blocks_for_width(p)]
-                for name in full}
-            for p in range(1, self.P + 1)
-        }
-
-    def assign(self, clients):
-        return {n: {"width": tier_width(self.het, n, self.P),
-                    "tau": self.cfg.tau_fixed} for n in clients}
-
-    def client_payload_bytes(self, a) -> float:
-        return self.model.factorized_bytes(a["width"])
-
-    def _client_params(self, p):
-        return {name: {"basis": self.basis[name], "coeff": self.coeffs[p][name]}
-                for name in self.basis}
-
-    def train_one(self, n, a):
-        return client_lib.local_train(
-            self.model, self._client_params(a["width"]), a["width"], a["tau"],
-            self.parts_x[n], self.parts_y[n], self.cfg.lr,
-            np.random.default_rng((self.cfg.seed, self.round, n)),
-            self.cfg.batch_size, factorized=True, estimate=False,
-            forward_impl=self.cfg.forward_impl,
-        )
-
-    def aggregate(self, results, assigns):
-        bases = [r.params for r in results.values()]
-        self.basis = {
-            name: jnp.mean(jnp.stack([b[name]["basis"] for b in bases]), 0)
-            for name in self.basis
-        }
-        by_width: Dict[int, list] = {}
-        for n, r in results.items():
-            by_width.setdefault(assigns[n]["width"], []).append(r.params)
-        for p, plist in by_width.items():
-            self.coeffs[p] = {
-                name: jnp.mean(jnp.stack([c[name]["coeff"] for c in plist]), 0)
-                for name in self.basis
-            }
-
-    def eval_accuracy(self):
-        params = self._client_params(self.P)
-        w = self.model.compose_all(params, self.P)
-        return self._acc_from_logits(self.model.forward(w, self.P, self.test_batch))
-
-
-# ---------------------------------------------------------------------------
-# Heroes
-# ---------------------------------------------------------------------------
-
-
-class HeroesRunner(BaseRunner):
-    scheme = "heroes"
-
-    def __init__(self, *args, **kw):
-        super().__init__(*args, **kw)
-        key = jax.random.PRNGKey(self.cfg.seed)
-        self.params = self.model.init_factorized(key)
-        any_spec = next(iter(self.model.specs.values()))
-        self.P = any_spec.max_width
-        self.state = convergence.BoundState(
-            loss0=2.3, smoothness=1.0, grad_sq=1.0, noise_sq=0.5, lr=self.cfg.lr)
-        # assignment (scheduler + block/anchored counters) is shared with
-        # the engine: one implementation, two runners
-        self._policy = HeroesAssignment()
-        self._policy.setup(self)
-
-    # the policy reads ``bound_state``; the legacy runner stores it as
-    # ``state`` — alias, so both names stay live.
-    @property
-    def bound_state(self) -> convergence.BoundState:
-        return self.state
-
-    @property
-    def scheduler(self):
-        return self._policy.scheduler
-
-    @property
-    def anchored_counters(self):
-        return self._policy.anchored_counters
-
-    def assign(self, clients):
-        return self._policy.assign(clients)
-
-    def client_payload_bytes(self, a) -> float:
-        return self.model.factorized_bytes(a["width"])
-
-    def train_one(self, n, a):
-        reduced = self.model.reduce(self.params, a["width"],
-                                    a["hidden_ids"], a["anchored_ids"])
-        return client_lib.local_train(
-            self.model, reduced, a["width"], a["tau"],
-            self.parts_x[n], self.parts_y[n], self.cfg.lr,
-            np.random.default_rng((self.cfg.seed, self.round, n)),
-            self.cfg.batch_size, factorized=True, estimate=self.cfg.estimate,
-            forward_impl=self.cfg.forward_impl,
-        )
-
-    def aggregate(self, results, assigns):
-        # basis: plain average; coefficient: block-wise (Eq. 5), per layer
-        new = {}
-        for name, spec in self.model.specs.items():
-            ids_key = "hidden_ids" if spec.mode == "square" else "anchored_ids"
-            new[name] = {
-                "basis": aggregation.aggregate_basis(
-                    [r.params[name]["basis"] for r in results.values()]),
-                "coeff": aggregation.aggregate_coefficient(
-                    self.params[name]["coeff"],
-                    [r.params[name]["coeff"] for r in results.values()],
-                    [np.asarray(assigns[n][ids_key]) for n in results],
-                ),
-            }
-        self.params = new
-        ests = [r.estimates for r in results.values() if r.estimates]
-        if ests:
-            mean = {k: float(np.mean([e[k] for e in ests])) for k in ests[0]}
-            self.state = convergence.BoundState(
-                loss0=max(float(np.mean([r.loss_after for r in results.values()])), 1e-3),
-                smoothness=float(np.clip(mean.get("L", 1.0), 1e-3, 1e3)),
-                grad_sq=mean.get("grad_sq", 1.0),
-                noise_sq=mean.get("sigma_sq", 0.5),
-                lr=self.cfg.lr,
-            )
-
-    def eval_accuracy(self):
-        # evaluation composes at full width P and reuses the ONE
-        # materialised weight set across the whole (streamed) test set —
-        # compose is paid once per eval, not per training step, so this
-        # stays the materialize path regardless of cfg.forward_impl (and
-        # keeps eval accuracies bitwise across forward_impl settings).
-        full_ids = np.arange(self.scheduler.spec.num_blocks)
-        anch_ids = np.arange(self.P)
-        reduced = self.model.reduce(self.params, self.P, full_ids, anch_ids)
-        w = self.model.compose_all(reduced, self.P)
-        return self._acc_from_logits(self.model.forward(w, self.P, self.test_batch))
-
-
-RUNNERS = {
-    "fedavg": FedAvgRunner,
-    "adp": ADPRunner,
-    "heterofl": HeteroFLRunner,
-    "flanc": FlancRunner,
-    "heroes": HeroesRunner,
-}
+RUNNERS = {s: _RunnerShim(s)
+           for s in ("fedavg", "adp", "heterofl", "flanc", "heroes")}

@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -10,8 +10,8 @@ import numpy as np
 from repro.data import load_dataset, make_shards, partition_dataset
 from repro.fl.engine import build_engine
 from repro.fl.heterogeneity import HeterogeneityModel
-from repro.fl.models import MODELS, FLModelDef, make_cnn, make_resnet, make_rnn
-from repro.fl.server import RUNNERS, FLConfig, RoundLog
+from repro.fl.models import FLModelDef, make_cnn, make_resnet, make_rnn
+from repro.fl.types import FLConfig, RoundLog
 
 
 def build_setup(task: str, model_name: Optional[str] = None,
@@ -120,9 +120,9 @@ def build_runner(scheme: str, model: FLModelDef, parts_x, parts_y, test_batch,
     (:mod:`repro.fl.engine`), which honours the ``FLConfig`` engine knobs
     (``trainer``, ``round_mode``, the ``agg_*``/``trainer_mesh_devices``
     device-mesh knobs and ``sample_weighted``).  ``backend="legacy"``
-    uses the original monolithic runner classes in
-    :mod:`repro.fl.server`; the two produce identical histories for the
-    synchronous sequential configuration.
+    is deprecated: the monolithic runner classes were retired, and the
+    flag now warns and routes to the engine — which reproduces the
+    legacy histories bitwise (golden fixtures pin this).
     """
     cfg = cfg or FLConfig(num_clients=len(parts_x), seed=seed)
     registry = getattr(parts_x, "registry", None)
@@ -139,12 +139,12 @@ def build_runner(scheme: str, model: FLModelDef, parts_x, parts_y, test_batch,
                                  tier_weights=tier_weights)
     eval_width = next(iter(model.specs.values())).max_width
     if backend == "legacy":
-        if cfg.round_mode != "sync" or cfg.trainer != "sequential":
-            raise ValueError(
-                "the legacy backend only supports round_mode='sync' and "
-                "trainer='sequential'; use backend='engine'")
-        return RUNNERS[scheme](model, parts_x, parts_y, test_batch, het, cfg,
-                               eval_width)
+        warnings.warn(
+            "build_runner(backend='legacy') is deprecated: the legacy "
+            "runner classes were retired; routing to the engine, which "
+            "reproduces the legacy histories bitwise.",
+            DeprecationWarning, stacklevel=2)
+        backend = "engine"
     if backend != "engine":
         raise ValueError(f"unknown backend {backend!r}")
     return build_engine(scheme, model, parts_x, parts_y, test_batch, het, cfg,

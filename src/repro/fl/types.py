@@ -1,14 +1,19 @@
 """Shared FL runtime types.
 
-``FLConfig`` and ``RoundLog`` are consumed by both the legacy runner tree
-(:mod:`repro.fl.server`) and the layered engine (:mod:`repro.fl.engine`);
-they live here so neither layer imports the other for its data model.
+``FLConfig`` and ``RoundLog`` are the engine's data model; ``ServerState``
+is the explicit, checkpointable round state that
+``RoundLoop.run_round(state) -> (state', RoundLog)`` threads through the
+``AssignmentPolicy`` / ``LocalTrainer`` / ``Aggregator`` contracts.
+They live here (below :mod:`repro.fl.engine`) so policy modules can share
+the data model without import cycles.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -21,6 +26,55 @@ class RoundLog:
     mean_tau: float
     accuracy: Optional[float] = None
     stale: int = 0  # results merged with staleness >= 1 (semi-async only)
+
+
+@dataclasses.dataclass
+class SchedState:
+    """Heroes scheduler bookkeeping (per-block training-iteration tallies).
+
+    Owned by :class:`ServerState` so it is checkpointed with the run; the
+    ``HeroesScheduler`` instance itself is a stateless planner whose
+    ``counters`` scratch is synced from here on every ``assign``.
+    """
+
+    counters: np.ndarray  # (num_blocks,) int64 — hidden-layer tallies
+    anchored: np.ndarray  # (P,) int64 — anchored (first/last) layer tallies
+
+
+@dataclasses.dataclass
+class InFlight:
+    """One dispatched-but-unmerged semi-async client update."""
+
+    client: int
+    assign: Dict[str, Any]  # the assignment the client trained under
+    result: Any  # repro.fl.client.ClientResult
+    finish: float  # virtual completion time (train + upload)
+    dispatched: int  # round index at dispatch (staleness anchor)
+
+
+@dataclasses.dataclass
+class ServerState:
+    """Everything the server carries between rounds, in one place.
+
+    ``RoundLoop.run_round(state)`` returns a NEW instance (via
+    ``dataclasses.replace``) rather than mutating engine attributes, so a
+    round boundary is a value that can be checkpointed, diffed, or handed
+    to another aggregator.  Two fields advance in place by design:
+    ``rng`` (a live numpy Generator — its ``bit_generator.state`` is what
+    gets checkpointed) and ``participation`` (shared by identity with
+    ``PopulationRegistry`` as the single bookkeeping store).
+    """
+
+    rng: np.random.Generator
+    bound_state: Any  # repro.core.convergence.BoundState
+    params: Any = None  # scheme-shaped global model pytree
+    round: int = 0  # completed rounds
+    wall: float = 0.0  # cumulative virtual seconds
+    traffic: float = 0.0  # cumulative bytes (up + down)
+    sched: Optional[SchedState] = None  # Heroes only
+    participation: Dict[int, int] = dataclasses.field(default_factory=dict)
+    in_flight: Tuple[InFlight, ...] = ()  # semi-async dispatch records
+    history: Tuple[RoundLog, ...] = ()
 
 
 @dataclasses.dataclass
@@ -127,3 +181,13 @@ class FLConfig:
     # Dense/per-width scheme states have no block axis and stay
     # replicated.  Only meaningful with a multi-device mesh.
     shard_server_state: bool = False
+    # --- checkpoint/resume (repro.checkpoint.msgpack_ckpt) --------------
+    # Save the full ServerState every N completed rounds at the round
+    # boundary (0 disables).  ``checkpoint_dir`` must be set when
+    # enabled.  ``EngineRunner.restore_latest()`` resumes a run whose
+    # continued history is bitwise-identical to an uninterrupted one
+    # (rng stream, scheduler counters and semi-async in-flight
+    # dispatches included) for every scheme x round mode.
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None
+    checkpoint_keep: int = 3

@@ -1,0 +1,97 @@
+"""Unit tests for repro.checkpoint.msgpack_ckpt: dtype-preserving
+round-trips (bf16 included), atomic step-directory writes, retention
+pruning, and restore_latest step selection."""
+
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.msgpack_ckpt import (load_checkpoint, restore_latest,
+                                           save_checkpoint)
+
+
+def test_roundtrip_preserves_dtypes_and_values(tmp_path):
+    rng = np.random.default_rng(0)
+    state = {
+        "f32": rng.normal(size=(3, 4)).astype(np.float32),
+        "f64": rng.normal(size=(5,)),
+        "i64": rng.integers(-7, 7, size=(2, 3)),
+        "u8": rng.integers(0, 255, size=(4,)).astype(np.uint8),
+        "nested": {"list": [np.float32(1.5), np.arange(3)],
+                   "bool": np.array([True, False])},
+        "bf16": jnp.asarray(rng.normal(size=(6,)), jnp.bfloat16),
+    }
+    p = save_checkpoint(tmp_path, 3, state)
+    got = load_checkpoint(p)
+    assert np.asarray(got["f32"]).dtype == np.float32
+    np.testing.assert_array_equal(got["f32"], state["f32"])
+    assert np.asarray(got["f64"]).dtype == np.float64
+    np.testing.assert_array_equal(got["f64"], state["f64"])
+    assert np.asarray(got["i64"]).dtype == np.int64
+    np.testing.assert_array_equal(got["i64"], state["i64"])
+    assert np.asarray(got["u8"]).dtype == np.uint8
+    np.testing.assert_array_equal(got["u8"], state["u8"])
+    np.testing.assert_array_equal(got["nested"]["bool"],
+                                  state["nested"]["bool"])
+    # lists flatten to string-indexed dict nodes
+    np.testing.assert_array_equal(got["nested"]["list"]["1"],
+                                  state["nested"]["list"][1])
+    # bf16 has no numpy dtype string: compare via the uint16 bit view
+    assert np.asarray(got["bf16"]).dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(got["bf16"]).view(np.uint16),
+        np.asarray(state["bf16"]).view(np.uint16))
+
+
+def test_atomic_write_no_partial_step_on_interrupt(tmp_path, monkeypatch):
+    state = {"w": np.arange(8, dtype=np.float32)}
+    save_checkpoint(tmp_path, 1, state)
+
+    real_write = pathlib.Path.write_bytes
+
+    def boom(self, data):
+        raise OSError("disk pulled mid-write")
+
+    monkeypatch.setattr(pathlib.Path, "write_bytes", boom)
+    with pytest.raises(OSError, match="disk pulled"):
+        save_checkpoint(tmp_path, 2, state)
+    monkeypatch.setattr(pathlib.Path, "write_bytes", real_write)
+
+    # the interrupted step left no directory — partial or otherwise
+    assert not (tmp_path / "step_00000002").exists()
+    assert not list(tmp_path.glob("step_*.tmp.*"))
+    # and the previous checkpoint is still the restorable latest
+    step, got = restore_latest(tmp_path)
+    assert step == 1
+    np.testing.assert_array_equal(got["w"], state["w"])
+    # a later save on the same directory succeeds normally
+    save_checkpoint(tmp_path, 2, {"w": state["w"] + 1})
+    step, got = restore_latest(tmp_path)
+    assert step == 2
+    np.testing.assert_array_equal(got["w"], state["w"] + 1)
+
+
+def test_restore_latest_picks_highest_step(tmp_path):
+    for step in (2, 10, 9):
+        save_checkpoint(tmp_path, step, {"s": np.array([step])}, keep=100)
+    step, got = restore_latest(tmp_path)
+    assert step == 10
+    np.testing.assert_array_equal(got["s"], [10])
+    # stray non-step entries are never candidates
+    (tmp_path / "step_garbage").mkdir()
+    (tmp_path / "notes.txt").write_text("x")
+    assert restore_latest(tmp_path)[0] == 10
+
+
+def test_restore_latest_empty_and_missing(tmp_path):
+    assert restore_latest(tmp_path) is None
+    assert restore_latest(tmp_path / "nope") is None
+
+
+def test_keep_prunes_oldest(tmp_path):
+    for step in range(1, 6):
+        save_checkpoint(tmp_path, step, {"s": np.array([step])}, keep=2)
+    names = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert names == ["step_00000004", "step_00000005"]

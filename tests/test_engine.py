@@ -1,19 +1,27 @@
 """Tests for the layered FL engine (repro.fl.engine).
 
-Covers: same-seed parity legacy-vs-registry for every scheme, the
+Covers: bitwise parity against the golden legacy-history fixtures for
+every scheme, the deprecated legacy entry-point shims, the
 batched-cohort vs sequential trainer equivalence, the semi-async round
 loop, registry extensibility, and the model-identity jit-cache fix.
 """
+
+import dataclasses
+import json
+from pathlib import Path
 
 import numpy as np
 import pytest
 
 from repro.fl import FLConfig, build_image_setup, build_runner, run_scheme
 from repro.fl.engine import (CohortTrainer, SchemeBundle, SequentialTrainer,
-                             build_engine, register_scheme)
+                             register_scheme)
 from repro.fl.engine.registry import SCHEMES
 from repro.fl.models import make_cnn
-from repro.fl.server import RUNNERS
+
+GOLDEN = json.loads(
+    (Path(__file__).parent / "fixtures"
+     / "golden_legacy_histories.json").read_text())
 
 
 @pytest.fixture(scope="module")
@@ -44,33 +52,42 @@ def _assert_history_parity(ha, hb, acc_atol=1e-4):
 
 
 # ---------------------------------------------------------------------------
-# same-seed parity: legacy RUNNERS vs engine registry bundles
+# bitwise parity: engine histories vs the golden legacy fixtures
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("scheme", sorted(SCHEMES))
-def test_engine_matches_legacy(scheme, image_setup):
-    if scheme not in RUNNERS:
-        pytest.skip(f"{scheme} is bundle-only (no legacy parity reference)")
+@pytest.mark.parametrize("scheme", sorted(k for k in GOLDEN if k != "_meta"))
+def test_engine_matches_golden_fixture(scheme, image_setup):
+    """The engine must reproduce the retired legacy runners' histories
+    bitwise (the fixture was captured from the legacy tree before it was
+    deleted; JSON round-trips floats exactly)."""
     model, px, py, test = image_setup
-    h_legacy = run_scheme(scheme, model, px, py, test, rounds=4, cfg=_cfg(),
-                          backend="legacy")
-    h_engine = run_scheme(scheme, model, px, py, test, rounds=4, cfg=_cfg(),
-                          backend="engine")
-    _assert_history_parity(h_legacy, h_engine)
+    rounds = len(GOLDEN[scheme])
+    hist = run_scheme(scheme, model, px, py, test, rounds=rounds, cfg=_cfg())
+    assert [dataclasses.asdict(h) for h in hist] == GOLDEN[scheme]
 
 
-def test_legacy_entry_points_still_work(image_setup):
+def test_legacy_shims_resolve_and_warn(image_setup):
+    """repro.fl.server.RUNNERS survives as DeprecationWarning shims that
+    build the equivalent engine bundle."""
+    from repro.fl import RUNNERS as reexported
+    from repro.fl.server import RUNNERS
+
+    assert reexported is RUNNERS
+    assert set(RUNNERS) == {"fedavg", "adp", "heterofl", "flanc", "heroes"}
     model, px, py, test = image_setup
     cfg = _cfg()
     from repro.fl.heterogeneity import HeterogeneityModel
-    het = HeterogeneityModel(cfg.num_clients, seed=0)
-    runner = RUNNERS["heroes"](model, px, py, test, het, cfg, 3)
+    het = HeterogeneityModel(cfg.num_clients, seed=0,
+                             tier_weights=(0.05, 0.15, 0.30, 0.50))
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        runner = RUNNERS["heroes"](model, px, py, test, het, cfg, 3)
     hist = runner.run(2)
     assert len(hist) == 2
-    # the deduplicated assignment path still exposes the scheduler state
-    assert runner.scheduler.counters.sum() > 0
-    assert runner.anchored_counters.sum() > 0
+    assert [dataclasses.asdict(h) for h in hist] == GOLDEN["heroes"][:2]
+    # the Heroes scheduler tallies live in the threaded ServerState
+    assert runner.state.sched.counters.sum() > 0
+    assert runner.state.sched.anchored.sum() > 0
 
 
 # ---------------------------------------------------------------------------
@@ -84,13 +101,13 @@ def test_cohort_trainer_matches_sequential_results(image_setup):
     model, px, py, test = image_setup
     cfg = _cfg()
     eng = build_runner("heroes", model, px, py, test, cfg=cfg)
-    assigns = eng.assignment.assign(list(range(4)))
+    _, assigns = eng.assignment.assign(eng.state, list(range(4)))
 
     seq, coh = SequentialTrainer(), CohortTrainer()
     seq.setup(eng)
     coh.setup(eng)
-    r_seq = seq.train_all(assigns)
-    r_coh = coh.train_all(assigns)
+    r_seq = seq.train_all(eng.state, assigns)
+    r_coh = coh.train_all(eng.state, assigns)
 
     assert list(r_seq) == list(r_coh)
     for n in r_seq:
@@ -141,11 +158,18 @@ def test_semi_async_round_mode(scheme, image_setup):
     assert all(b >= a for a, b in zip(traffics, traffics[1:]))
 
 
-def test_semi_async_legacy_backend_rejected(image_setup):
+def test_legacy_backend_warns_and_routes_to_engine(image_setup):
+    """build_runner(backend='legacy') is a deprecation shim onto the
+    engine now — including configs the legacy tree never supported."""
     model, px, py, test = image_setup
-    with pytest.raises(ValueError):
-        run_scheme("fedavg", model, px, py, test, rounds=1,
-                   cfg=_cfg(round_mode="semi_async"), backend="legacy")
+    with pytest.warns(DeprecationWarning, match="legacy"):
+        hist = run_scheme("fedavg", model, px, py, test, rounds=1,
+                          cfg=_cfg(round_mode="semi_async", async_k=2),
+                          backend="legacy")
+    assert len(hist) == 1 and hist[0].traffic_bytes > 0
+    with pytest.raises(ValueError, match="unknown backend"):
+        build_runner("fedavg", model, px, py, test, cfg=_cfg(),
+                     backend="nonsense")
 
 
 # ---------------------------------------------------------------------------
@@ -204,8 +228,8 @@ def test_fedprox_proximal_term_pulls_toward_global(image_setup):
 
     def drift(scheme, mu):
         eng = build_runner(scheme, model, px, py, test, cfg=_cfg(prox_mu=mu))
-        assigns = eng.assignment.assign([0, 1])
-        results = eng.trainer.train_all(assigns)
+        _, assigns = eng.assignment.assign(eng.state, [0, 1])
+        results = eng.trainer.train_all(eng.state, assigns)
         base = jax.tree_util.tree_leaves(eng.params)
         tot = 0.0
         for r in results.values():
@@ -241,8 +265,10 @@ def test_proximal_trainer_ships_estimates(image_setup):
     seq, prox = SequentialTrainer(), ProximalTrainer(mu=0.0)
     seq.setup(e_seq)
     prox.setup(e_prox)
-    r_seq = seq.train_all(e_seq.assignment.assign([0, 1]))
-    r_prox = prox.train_all(e_prox.assignment.assign([0, 1]))
+    _, a_seq = e_seq.assignment.assign(e_seq.state, [0, 1])
+    _, a_prox = e_prox.assignment.assign(e_prox.state, [0, 1])
+    r_seq = seq.train_all(e_seq.state, a_seq)
+    r_prox = prox.train_all(e_prox.state, a_prox)
     for n in r_seq:
         assert r_prox[n].estimates, "FedProx dropped the estimate signals"
         for k in ("L", "sigma_sq", "grad_sq"):
@@ -270,8 +296,8 @@ def test_sample_weighted_matches_manual_weighted_mean():
     # twin engine (same seed) to reconstruct the per-client updates
     twin = build_runner("fedavg", model, px, py, test, cfg=_cfg(**cfg_kw))
     clients = twin.rng.choice(8, 4, replace=False)
-    assigns = twin.assignment.assign(list(map(int, clients)))
-    results = twin.trainer.train_all(assigns)
+    _, assigns = twin.assignment.assign(twin.state, list(map(int, clients)))
+    results = twin.trainer.train_all(twin.state, assigns)
     s = np.array([twin.data.num_samples(n) for n in results], np.float64)
     assert len(set(s)) > 1, "partition is balanced; test would be vacuous"
     w = s / s.sum()
@@ -323,8 +349,8 @@ def test_semi_async_empty_pool_skips_dispatch(scheme, image_setup):
                async_k=2, eval_every=100)
     eng = build_runner(scheme, model, px, py, test, cfg=cfg)
     # force the saturated state: every client in flight before the round
-    eng.loop._dispatch(list(range(10)))
-    assert len(eng.loop.in_flight) == 10
+    eng.state = eng.loop._dispatch(eng.state, list(range(10)))
+    assert len(eng.state.in_flight) == 10
     log = eng.run_round()  # need = 2 > 0, pool empty
     assert log.round == 1 and log.makespan > 0
     # and the loop keeps making progress afterwards

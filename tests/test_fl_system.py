@@ -4,11 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.fl import (FLConfig, build_image_setup, build_text_setup,
-                      run_scheme, summarize)
-from repro.fl.heterogeneity import HeterogeneityModel
+from repro.fl import (FLConfig, build_image_setup, build_runner,
+                      build_text_setup, run_scheme, summarize)
 from repro.fl.models import make_cnn
-from repro.fl.server import RUNNERS
+
+PAPER_SCHEMES = ("fedavg", "adp", "heterofl", "flanc", "heroes")
 
 
 @pytest.fixture(scope="module")
@@ -21,7 +21,7 @@ def _cfg():
                     tau_fixed=4, tau_max=15, estimate=True)
 
 
-@pytest.mark.parametrize("scheme", list(RUNNERS))
+@pytest.mark.parametrize("scheme", PAPER_SCHEMES)
 def test_scheme_runs_and_improves(scheme, image_setup):
     model, px, py, test = image_setup
     hist = run_scheme(scheme, model, px, py, test, rounds=6, cfg=_cfg())
@@ -39,11 +39,9 @@ def test_heroes_counters_balanced(image_setup):
     """After several rounds the enhanced-NC block counters stay balanced —
     the paper's V^h constraint (Eq. 21)."""
     model, px, py, test = image_setup
-    cfg = _cfg()
-    het = HeterogeneityModel(cfg.num_clients, seed=0)
-    runner = RUNNERS["heroes"](model, px, py, test, het, cfg, 3)
+    runner = build_runner("heroes", model, px, py, test, cfg=_cfg(), seed=0)
     runner.run(8)
-    c = runner.scheduler.counters
+    c = runner.state.sched.counters
     assert c.min() > 0, "some block never trained — starvation (Flanc's flaw)"
     # balance: spread is bounded relative to the mean
     assert c.max() <= 3.0 * max(c.mean(), 1.0)
@@ -54,11 +52,11 @@ def test_flanc_starves_large_coefficients(image_setup):
     fastest tier — the starvation Heroes fixes (paper Sec. I)."""
     model, px, py, test = image_setup
     cfg = _cfg()
-    het = HeterogeneityModel(cfg.num_clients, seed=0)
-    runner = RUNNERS["flanc"](model, px, py, test, het, cfg, 3)
-    init3 = {n: np.asarray(runner.coeffs[3][n]) for n in runner.coeffs[3]}
+    runner = build_runner("flanc", model, px, py, test, cfg=cfg, seed=0)
+    coeffs3 = runner.params["coeffs"][3]
+    init3 = {n: np.asarray(coeffs3[n]) for n in coeffs3}
     runner.run(4)
-    tiers = {n: het.clients[n].tier for n in range(cfg.num_clients)}
+    tiers = {n: runner.het.clients[n].tier for n in range(cfg.num_clients)}
     if not any(t == "laptop" for t in tiers.values()):
         pytest.skip("no full-width client sampled in this seed")
 

@@ -198,10 +198,12 @@ class _FakeEng:
     """Just enough runner surface for a scheduler."""
 
     def __init__(self, pop, seed=0, rnd=3, participation="uniform"):
+        from repro.fl.types import ServerState
+
         self.cfg = FLConfig(num_clients=pop, seed=seed,
                             participation=participation)
-        self.rng = np.random.default_rng(seed)
-        self.round = rnd
+        self.state = ServerState(rng=np.random.default_rng(seed),
+                                 bound_state=None, round=rnd)
         self.het = HeterogeneityModel(pop, seed=seed, tier_weights=W,
                                       virtual=True)
 
@@ -216,7 +218,7 @@ def test_uniform_matches_legacy_inline_sampling():
     eng = _FakeEng(100, seed=9)
     s = _scheduler(eng)
     expect = np.random.default_rng(9).choice(100, 10, replace=False)
-    assert s.sample(10) == [int(c) for c in expect]
+    assert s.sample(eng.state, 10) == [int(c) for c in expect]
     # semi-async exclude path: legacy pool + choice, same rng stream
     eng2 = _FakeEng(30, seed=4)
     s2 = _scheduler(eng2)
@@ -224,7 +226,7 @@ def test_uniform_matches_legacy_inline_sampling():
     legacy = np.random.default_rng(4)
     pool = np.array([c for c in range(30) if c not in busy])
     expect = legacy.choice(pool, min(7, len(pool)), replace=False)
-    assert s2.sample(7, exclude=busy) == [int(c) for c in expect]
+    assert s2.sample(eng2.state, 7, exclude=busy) == [int(c) for c in expect]
 
 
 def test_uniform_rejection_path_at_population_scale():
@@ -232,33 +234,33 @@ def test_uniform_rejection_path_at_population_scale():
     eng = _FakeEng(pop, seed=0)
     s = _scheduler(eng)
     exclude = {0, 1, 2}
-    got = s.sample(24, exclude=exclude)
+    got = s.sample(eng.state, 24, exclude=exclude)
     assert len(got) == 24 and len(set(got)) == 24
     assert not set(got) & exclude
     assert all(0 <= c < pop for c in got)
     # deterministic given the same engine rng state
     eng2 = _FakeEng(pop, seed=0)
     s2 = _scheduler(eng2)
-    assert s2.sample(24, exclude=exclude) == got
+    assert s2.sample(eng2.state, 24, exclude=exclude) == got
 
 
 def test_uniform_exhausted_pool_returns_empty():
     eng = _FakeEng(4)
     s = _scheduler(eng)
-    assert s.sample(3, exclude={0, 1, 2, 3}) == []
+    assert s.sample(eng.state, 3, exclude={0, 1, 2, 3}) == []
 
 
 @pytest.mark.parametrize("participation", ["availability", "resource_gated"])
 def test_gated_schedulers_contract(participation):
     eng = _FakeEng(300, seed=2, participation=participation)
     s = _scheduler(eng)
-    got = s.sample(20, exclude={7})
+    got = s.sample(eng.state, 20, exclude={7})
     assert len(got) == len(set(got)) <= 20
     assert 7 not in got
     assert all(0 <= c < 300 for c in got)
     # reproducible: same seeds, same round -> same cohort
     eng2 = _FakeEng(300, seed=2, participation=participation)
-    assert _scheduler(eng2).sample(20, exclude={7}) == got
+    assert _scheduler(eng2).sample(eng2.state, 20, exclude={7}) == got
 
 
 def test_trace_participation_replays_trace():
@@ -267,18 +269,19 @@ def test_trace_participation_replays_trace():
     eng = _FakeEng(100, seed=0, rnd=3)
     s = TraceParticipation({3: [5, 9, 12, 40, 41], 4: []})
     s.setup(eng)
-    got = s.sample(3)
+    got = s.sample(eng.state, 3)
     assert len(got) == 3 and set(got) <= {5, 9, 12, 40, 41}
-    eng.round = 4
-    assert s.sample(3) == []
-    eng.round = 7  # round absent from the trace: uniform fallback
-    assert len(s.sample(3)) == 3
+    eng.state.round = 4
+    assert s.sample(eng.state, 3) == []
+    eng.state.round = 7  # round absent from the trace: uniform fallback
+    assert len(s.sample(eng.state, 3)) == 3
     # exclusion and out-of-range ids are filtered from the trace pool
-    eng.round = 3
-    assert set(s.sample(5, exclude={5, 9})) == {12, 40, 41}
+    eng.state.round = 3
+    assert set(s.sample(eng.state, 5, exclude={5, 9})) == {12, 40, 41}
     s2 = TraceParticipation({0: [999]})
-    s2.setup(_FakeEng(10, rnd=0))
-    assert s2.sample(2) == []
+    eng_b = _FakeEng(10, rnd=0)
+    s2.setup(eng_b)
+    assert s2.sample(eng_b.state, 2) == []
 
 
 def test_trace_participation_callable_and_missing():
@@ -287,18 +290,19 @@ def test_trace_participation_callable_and_missing():
     eng = _FakeEng(50, seed=1, rnd=2)
     s = TraceParticipation(lambda rnd, n: n % 2 == rnd % 2)
     s.setup(eng)
-    got = s.sample(10)
+    got = s.sample(eng.state, 10)
     assert len(got) == 10 and all(n % 2 == 0 for n in got)
     bare = TraceParticipation()
-    bare.setup(_FakeEng(10))
+    eng_b = _FakeEng(10)
+    bare.setup(eng_b)
     with pytest.raises(ValueError, match="no trace"):
-        bare.sample(2)
+        bare.sample(eng_b.state, 2)
     # eng.availability_trace is picked up when none was passed
     eng2 = _FakeEng(20, rnd=0)
     eng2.availability_trace = {0: [1, 2, 3]}
     s3 = TraceParticipation()
     s3.setup(eng2)
-    assert set(s3.sample(5)) == {1, 2, 3}
+    assert set(s3.sample(eng2.state, 5)) == {1, 2, 3}
 
 
 def test_build_scheduler_rejects_unknown():
@@ -312,7 +316,8 @@ def test_build_scheduler_rejects_unknown():
 
 def _sampler_property(pop, seed, k, exclude):
     eng = _FakeEng(pop, seed=seed)
-    got = UniformParticipation.sample(_scheduler(eng), k, exclude=exclude)
+    got = UniformParticipation.sample(_scheduler(eng), eng.state, k,
+                                      exclude=exclude)
     # without replacement, correct cardinality, exclusions honoured
     assert len(got) == len(set(got)) == min(k, pop - len(exclude))
     assert not set(got) & exclude

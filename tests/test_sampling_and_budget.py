@@ -40,15 +40,12 @@ def test_perplexity_uniform():
 
 
 def test_run_until_budget_respects_limits():
-    from repro.fl import FLConfig, build_image_setup
-    from repro.fl.heterogeneity import HeterogeneityModel
-    from repro.fl.server import RUNNERS
+    from repro.fl import FLConfig, build_image_setup, build_runner
 
     model, px, py, test = build_image_setup(num_clients=8, seed=0)
     cfg = FLConfig(num_clients=8, clients_per_round=3, eval_every=5,
                    tau_fixed=3, tau_max=10)
-    het = HeterogeneityModel(8, seed=0)
-    runner = RUNNERS["heroes"](model, px, py, test, het, cfg, 3)
+    runner = build_runner("heroes", model, px, py, test, cfg=cfg, seed=0)
     hist = runner.run_until_budget(time_budget=0.4)
     # stops within one round of the budget
     assert hist[-1].wall_time >= 0.4 or len(hist) == 10_000
@@ -56,8 +53,7 @@ def test_run_until_budget_respects_limits():
     before_last = hist[-2].wall_time if len(hist) > 1 else 0.0
     assert before_last < 0.4
 
-    het2 = HeterogeneityModel(8, seed=0)
-    runner2 = RUNNERS["fedavg"](model, px, py, test, het2, cfg, 3)
+    runner2 = build_runner("fedavg", model, px, py, test, cfg=cfg, seed=0)
     hist2 = runner2.run_until_budget(traffic_budget=2e6)
     assert hist2[-1].traffic_bytes >= 2e6
     assert (len(hist2) < 2 or hist2[-2].traffic_bytes < 2e6)

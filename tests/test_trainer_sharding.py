@@ -212,7 +212,8 @@ SHARDED_SCRIPT = textwrap.dedent("""
                        cfg=FLConfig(**base, trainer="cohort"))
     assert eng.trainer.mesh is not None
     assert eng.trainer.mesh.devices.size == 4
-    results = eng.trainer.train_all(eng.assignment.assign([0, 1, 2]))
+    _, assigns = eng.assignment.assign(eng.state, [0, 1, 2])
+    results = eng.trainer.train_all(eng.state, assigns)
     assert all(isinstance(r.params, CohortSlice) for r in results.values())
     leaves = jax.tree_util.tree_leaves(results[0].host_params())
     assert all(np.isfinite(np.asarray(l)).all() for l in leaves)
@@ -237,10 +238,10 @@ SHARDED_SCRIPT = textwrap.dedent("""
                        cfg=FLConfig(**base, trainer="cohort",
                                     trainer_mesh_devices=1))
     assert coh.trainer.mesh is not None and ref.trainer.mesh is None
-    a4 = coh.assignment.assign([0, 1, 2])
-    a1 = ref.assignment.assign([0, 1, 2])
-    r4 = coh.trainer.train_all(a4)
-    r1 = ref.trainer.train_all(a1)
+    _, a4 = coh.assignment.assign(coh.state, [0, 1, 2])
+    _, a1 = ref.assignment.assign(ref.state, [0, 1, 2])
+    r4 = coh.trainer.train_all(coh.state, a4)
+    r1 = ref.trainer.train_all(ref.state, a1)
     for n in r1:
         for x, y in zip(jax.tree_util.tree_leaves(r4[n].host_params()),
                         jax.tree_util.tree_leaves(r1[n].host_params())):
@@ -268,7 +269,7 @@ SHARDED_SCRIPT = textwrap.dedent("""
             # stragglers must not pin device-resident stacks across
             # events (they are degraded to the numpy contract)
             assert all(not hasattr(t.result.params, "materialize")
-                       for t in coll.loop.in_flight)
+                       for t in coll.state.in_flight)
         for x, y in zip(jax.tree_util.tree_leaves(host.params),
                         jax.tree_util.tree_leaves(coll.params)):
             np.testing.assert_allclose(np.asarray(x), np.asarray(y),
