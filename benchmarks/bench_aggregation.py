@@ -132,12 +132,15 @@ def main() -> None:
               f"collective {r['collective_ms']:8.1f} ms   "
               f"speedup {r['speedup']:.1f}x")
 
+    import common
+
     out = {
         "benchmark": "aggregation_host_vs_collective",
         "setup": {"layers": 4, "max_width": 4, "num_blocks": 16,
                   "rank": 16, "out": 32,
                   "devices": len(jax.devices()),
                   "reps": reps},
+        "provenance": common.provenance(),
         "results": results,
     }
     path = Path(args.out) if args.out else \

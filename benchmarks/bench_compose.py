@@ -132,6 +132,8 @@ def main() -> None:
                   f"{cell['speedup']:.2f}x   (flops ratio "
                   f"{cell['flops_ratio']:.2f}x)")
 
+    import common
+
     out = {
         "benchmark": "compose_rank_space_vs_materialize",
         "setup": {"scheme": "flanc", "num_clients": 10,
@@ -140,6 +142,7 @@ def main() -> None:
                   "note": "uniform-tier network pins every client to the "
                           "target width; flops tables use the static "
                           "model the auto knob reads"},
+        "provenance": common.provenance(),
         "results": results,
     }
     path = Path(args.out) if args.out else \

@@ -90,9 +90,12 @@ def main() -> None:
     e2e_rounds = 2 if args.fast else 10
     warmup = 1 if args.fast else 3
 
+    import common
+
     results = {
         "config": {"num_clients": NUM_CLIENTS, "clients_per_round": K,
                    "fast": args.fast},
+        "provenance": common.provenance(),
         "setup": {
             "streaming_s": bench_setup(True, reps),
             "materialized_s": bench_setup(False, reps),

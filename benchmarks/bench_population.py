@@ -142,11 +142,14 @@ def main() -> None:
         print(f"peak RSS {worst:.0f} MB within the "
               f"{args.rss_mb:.0f} MB ceiling")
 
+    import common
+
     out = {
         "benchmark": "population_virtual_scaling",
         "setup": {"scheme": "heroes", "task": "synthetic_image",
                   "cohort": COHORT, "tau": 5, "samples_per_client": 64,
                   "rounds_timed": rounds, "warmup_rounds": args.warmup},
+        "provenance": common.provenance(),
         "baseline": base,
         "scaling": legs[1:],
     }

@@ -16,6 +16,17 @@ from repro.fl import (FLConfig, build_image_setup, build_text_setup,  # noqa: E4
 SCHEMES = ["fedavg", "adp", "heterofl", "flanc", "heroes"]
 
 
+def provenance() -> Dict:
+    """Environment fingerprint stamped into every ``BENCH_*.json``: a
+    recorded number is only comparable to another number from the same
+    toolchain/host class, so each entry carries the jax version, device
+    kind/count, cpu count and git sha it was measured under.  Delegates
+    to :func:`repro.obs.runtime_provenance` (never raises)."""
+    from repro.obs import runtime_provenance
+
+    return runtime_provenance()
+
+
 def quick_cfg(num_clients: int = 20, **overrides) -> FLConfig:
     base = dict(
         num_clients=num_clients, clients_per_round=5, eval_every=2,

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Any, Callable, Iterable, Iterator, Optional, Sequence, Tuple
 
 import numpy as np
@@ -189,6 +190,11 @@ class ClientDataLoader:
             raise ValueError(f"{len(parts_x)} x-shards vs {len(parts_y)} y")
         self.parts_x, self.parts_y = parts_x, parts_y
         self.prefetch_depth = max(1, prefetch_depth)
+        # telemetry recorder (repro.obs); the engine runner rebinds this
+        # to its live recorder — the default no-op keeps standalone
+        # loaders uninstrumented at zero cost
+        from repro.obs.recorder import NOOP
+        self.obs = NOOP
         # live prefetch workers: (stop event, thread) pairs, so close()
         # can release them deterministically even when a round body died
         # before its generator's finally ran
@@ -293,9 +299,19 @@ class ClientDataLoader:
         with self._workers_lock:
             self._workers.append((stop, t))
         t.start()
+        obs = self.obs
         try:
             while True:
-                got = q.get()
+                if obs.enabled:
+                    # stall = consumer time blocked on the staging thread;
+                    # depth sampled just before the blocking get
+                    obs.observe("data.prefetch_depth", q.qsize())
+                    t0 = time.perf_counter()
+                    got = q.get()
+                    obs.observe("data.prefetch_stall_s",
+                                time.perf_counter() - t0)
+                else:
+                    got = q.get()
                 if got is _END:
                     break
                 if isinstance(got, tuple) and len(got) == 2 \

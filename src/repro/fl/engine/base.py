@@ -33,6 +33,7 @@ from typing import TYPE_CHECKING, Any, Dict, Optional, Sequence, Tuple
 
 from repro.fl.client import ClientResult
 from repro.fl.types import RoundLog, ServerState
+from repro.obs.recorder import NOOP
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.fl.engine.runner import EngineRunner
@@ -47,6 +48,12 @@ class Component:
 
     def setup(self, eng: "EngineRunner") -> None:
         self.eng = eng
+
+    @property
+    def obs(self):
+        """The bound runner's telemetry recorder (:mod:`repro.obs`);
+        the shared no-op before :meth:`setup` binds a runner."""
+        return getattr(getattr(self, "eng", None), "obs", NOOP)
 
 
 class AssignmentPolicy(Component):

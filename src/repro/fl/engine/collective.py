@@ -44,6 +44,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 
 from repro.core import aggregation
+from repro.obs.recorder import NOOP
 from repro.sharding import fl as flsh
 
 
@@ -237,6 +238,14 @@ class CollectiveMerger:
         # (not lru_cache-on-method, which would pin the merger + its
         # executables in a class-level cache for the process lifetime)
         self._mesh_fns: Dict[Any, Any] = {}
+        # telemetry recorder (rebound by the engine runner); merge
+        # *latency* is spanned at the loop level ("aggregate.merge"),
+        # the merger itself counts per-rule compiled-merge invocations
+        self.obs = NOOP
+
+    def _count(self, rule: str) -> None:
+        if self.obs.enabled:
+            self.obs.counter_add("aggregate.collective_calls", rule=rule)
 
     # -- finish stage: dispatch the prepped stacks to a compiled merge.
     # Split out so subclasses can reroute the reduction topology (the
@@ -453,6 +462,7 @@ class CollectiveMerger:
     def merge_factorized(self, prev_params, specs, results, assigns,
                          weights=None):
         """Heroes merge: basis mean + Eq. 5 block-wise coefficient merge."""
+        self._count("factorized")
         k = len(results)
         k_pad = flsh.pad_cohort(k, self.mesh)
         if weights is None:
@@ -498,6 +508,7 @@ class CollectiveMerger:
 
     def merge_dense_mean(self, prev_params, results, weights=None):
         """FedAvg/ADP: plain parameter mean over the cohort."""
+        self._count("dense_mean")
         k = len(results)
         k_pad = flsh.pad_cohort(k, self.mesh)
         if weights is None:
@@ -523,6 +534,7 @@ class CollectiveMerger:
 
     def merge_masked_dense(self, prev_params, results, weights=None):
         """HeteroFL: element-wise mean over the covering clients."""
+        self._count("masked_dense")
         results = _host_results(results)
         k_pad = flsh.pad_cohort(len(results), self.mesh)
         stacked = {}
@@ -553,6 +565,7 @@ class CollectiveMerger:
         the client trained).  Returns ``(new_basis, new_coeffs)`` where
         widths nobody trained keep their previous coefficients.
         """
+        self._count("flanc")
         results = _host_results(results)
         k = len(results)
         names = list(basis)

@@ -84,18 +84,35 @@ class SyncRoundLoop(RoundLoop):
                 f"num_clients={cfg.num_clients})")
         state, assigns = eng.assignment.assign(state, clients)
         results = eng.trainer.train_all(state, assigns)
+        obs = eng.obs
         times = {}
         traffic = state.traffic
+        up = 0.0
         for n, a in assigns.items():
             mu = eng.het.iter_time(n, eng.flops_per_iter(a["width"]))
-            nu = eng.het.upload_time(n, eng.payload.bytes(a))
+            b = eng.payload.bytes(a)
+            nu = eng.het.upload_time(n, b)
             times[n] = a["tau"] * mu + nu
-            traffic += 2 * eng.payload.bytes(a)  # down + up
+            traffic += 2 * b  # down + up
+            up += b  # symmetric payloads: uplink == downlink == b
+            if obs.enabled:
+                t0 = state.wall
+                t_train = t0 + a["tau"] * mu
+                obs.span("client.train", t0, t_train, client=int(n),
+                         width=int(a["width"]), tau=int(a["tau"]),
+                         round=state.round + 1)
+                obs.span("client.upload", t_train, t_train + nu,
+                         client=int(n), bytes=b, round=state.round + 1)
+                obs.counter_add("traffic.up", b, width=int(a["width"]))
+                obs.counter_add("traffic.down", b, width=int(a["width"]))
         weights = (_sample_weights(eng, list(results))
                    if cfg.sample_weighted else None)
-        state = eng.aggregator.aggregate(
-            dataclasses.replace(state, traffic=traffic),
-            results, assigns, weights=weights)
+        with obs.wall_span("aggregate.merge", clients=len(results)):
+            state = eng.aggregator.aggregate(
+                dataclasses.replace(state, traffic=traffic,
+                                    traffic_up=state.traffic_up + up,
+                                    traffic_down=state.traffic_down + up),
+                results, assigns, weights=weights)
         makespan = max(times.values())
         wait = float(np.mean([makespan - t for t in times.values()]))
         state = dataclasses.replace(state, wall=state.wall + makespan,
@@ -103,8 +120,14 @@ class SyncRoundLoop(RoundLoop):
         acc = None
         if state.round % cfg.eval_every == 0 or state.round == 1:
             acc = eng.aggregator.evaluate(state)
+        if obs.enabled:
+            obs.observe("round.makespan", makespan)
+            obs.observe("round.wait", wait)
+            obs.event("round.aggregate", state.wall, round=state.round,
+                      clients=len(results))
         log = RoundLog(state.round, state.wall, state.traffic, makespan, wait,
-                       float(np.mean([a["tau"] for a in assigns.values()])), acc)
+                       float(np.mean([a["tau"] for a in assigns.values()])),
+                       acc, up_bytes=up, down_bytes=up)
         state = dataclasses.replace(state, history=state.history + (log,))
         return state, log
 
@@ -138,21 +161,38 @@ class SemiAsyncRoundLoop(RoundLoop):
         eng = self.eng
         state, assigns = eng.assignment.assign(state, clients)
         results = eng.trainer.train_all(state, assigns)
+        obs = eng.obs
         traffic = state.traffic
+        up = 0.0
         new = []
         for n, a in assigns.items():
             mu = eng.het.iter_time(n, eng.flops_per_iter(a["width"]))
-            nu = eng.het.upload_time(n, eng.payload.bytes(a))
-            traffic += 2 * eng.payload.bytes(a)
-            new.append(InFlight(n, a, results[n],
-                                state.wall + a["tau"] * mu + nu, state.round))
+            b = eng.payload.bytes(a)
+            nu = eng.het.upload_time(n, b)
+            traffic += 2 * b
+            up += b
+            finish = state.wall + a["tau"] * mu + nu
+            new.append(InFlight(n, a, results[n], finish, state.round))
+            if obs.enabled:
+                t_train = state.wall + a["tau"] * mu
+                obs.span("client.train", state.wall, t_train, client=int(n),
+                         width=int(a["width"]), tau=int(a["tau"]),
+                         round=state.round + 1)
+                obs.span("client.upload", t_train, finish, client=int(n),
+                         bytes=b, round=state.round + 1)
+                obs.counter_add("traffic.up", b, width=int(a["width"]))
+                obs.counter_add("traffic.down", b, width=int(a["width"]))
         return dataclasses.replace(state, traffic=traffic,
+                                   traffic_up=state.traffic_up + up,
+                                   traffic_down=state.traffic_down + up,
                                    in_flight=state.in_flight + tuple(new))
 
     def run_round(self, state: ServerState) -> Tuple[ServerState, RoundLog]:
         eng = self.eng
         cfg = eng.cfg
+        obs = eng.obs
         eng.het.round = state.round + 1
+        up0, down0 = state.traffic_up, state.traffic_down
         busy = {t.client for t in state.in_flight}
         need = cfg.clients_per_round - len(state.in_flight)
         if need > 0:
@@ -188,8 +228,13 @@ class SemiAsyncRoundLoop(RoundLoop):
             sw = _sample_weights(eng, list(results))
             weights = sw if weights is None else \
                 {n: sw[n] * weights[n] for n in sw}
-        state = eng.aggregator.aggregate(state, results, assigns,
-                                         weights=weights)
+        if obs.enabled:
+            for t in done:
+                obs.observe("staleness", float(state.round - t.dispatched))
+        with obs.wall_span("aggregate.merge", clients=len(results),
+                           stale=stale):
+            state = eng.aggregator.aggregate(state, results, assigns,
+                                             weights=weights)
         # stragglers must not pin device-resident cohort stacks (and
         # their host caches) across events: degrade their results to the
         # plain numpy contract now, so each stack dies with its event —
@@ -207,8 +252,17 @@ class SemiAsyncRoundLoop(RoundLoop):
         acc = None
         if state.round % cfg.eval_every == 0 or state.round == 1:
             acc = eng.aggregator.evaluate(state)
+        if obs.enabled:
+            obs.observe("round.makespan", makespan)
+            obs.observe("round.wait", wait)
+            obs.event("round.aggregate", state.wall, round=state.round,
+                      clients=len(results), stale=stale,
+                      in_flight=len(remaining))
+            obs.gauge_set("loop.in_flight", len(remaining))
         log = RoundLog(state.round, state.wall, state.traffic, makespan, wait,
                        float(np.mean([a["tau"] for a in assigns.values()])),
-                       acc, stale=stale)
+                       acc, stale=stale,
+                       up_bytes=state.traffic_up - up0,
+                       down_bytes=state.traffic_down - down0)
         state = dataclasses.replace(state, history=state.history + (log,))
         return state, log

@@ -17,6 +17,7 @@ changes.
 
 from __future__ import annotations
 
+import dataclasses
 from pathlib import Path
 from typing import List, Optional
 
@@ -24,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import msgpack_ckpt
+from repro.obs import build_recorder
 from repro.core import convergence
 from repro.data.streaming import ClientDataLoader
 from repro.fl.engine import collective
@@ -49,10 +51,17 @@ class EngineRunner:
         self.scheme = scheme
         self.model = model
         self.parts_x, self.parts_y = parts_x, parts_y
+        # telemetry recorder (repro.obs); cfg.telemetry="off" resolves to
+        # the shared no-op singleton, so instrumented paths stay
+        # bitwise-identical to the golden histories.  Built first so
+        # every component (data loader included) can bind to it.
+        self.obs = build_recorder(cfg, meta={
+            "scheme": scheme, "config": dataclasses.asdict(cfg)})
         # per-client minibatch streams (host RNG contract + prefetch);
         # shards may be lazy ShardViews or a population-scale
         # VirtualShardList — see repro.data.streaming
         self.data = ClientDataLoader(parts_x, parts_y)
+        self.data.obs = self.obs
         # population registry (virtual setups): adopts the state's
         # participation dict as its bookkeeping store (below)
         self.population = getattr(parts_x, "registry", None)
@@ -69,6 +78,7 @@ class EngineRunner:
         self.merger = None
         if cfg.agg_backend == "collective":
             self.merger = collective.build_merger(cfg)
+            self.merger.obs = self.obs
         elif cfg.agg_backend != "host":
             raise ValueError(f"unknown agg_backend {cfg.agg_backend!r}")
 
@@ -138,11 +148,17 @@ class EngineRunner:
         clients = self.sampler.sample(state, k, exclude)
         for n in clients:
             state.participation[int(n)] = state.round
+        if self.obs.enabled:
+            for n in clients:
+                self.obs.counter_add("participation.tier",
+                                     tier=self.het.clients[int(n)].tier)
         return clients
 
     def close(self) -> None:
-        """Release background resources (prefetch workers)."""
+        """Release background resources (prefetch workers) and flush the
+        telemetry recorder (final metrics snapshot)."""
         self.data.close()
+        self.obs.close()
 
     def __enter__(self) -> "EngineRunner":
         return self
@@ -198,10 +214,16 @@ class EngineRunner:
         """Write the current ServerState under ``cfg.checkpoint_dir``."""
         if not self.cfg.checkpoint_dir:
             raise ValueError("FLConfig.checkpoint_dir is not set")
-        payload = state_lib.state_to_payload(self.state)
-        return msgpack_ckpt.save_checkpoint(
-            self.cfg.checkpoint_dir, self.state.round, payload,
-            keep=self.cfg.checkpoint_keep)
+        with self.obs.wall_span("checkpoint.save", round=self.state.round):
+            payload = state_lib.state_to_payload(self.state)
+            path = msgpack_ckpt.save_checkpoint(
+                self.cfg.checkpoint_dir, self.state.round, payload,
+                keep=self.cfg.checkpoint_keep)
+        if self.obs.enabled:
+            self.obs.counter_add("checkpoint.saves")
+            self.obs.counter_add("checkpoint.bytes",
+                                 float(Path(path).stat().st_size))
+        return path
 
     def restore_latest(self) -> bool:
         """Adopt the newest checkpoint under ``cfg.checkpoint_dir``.

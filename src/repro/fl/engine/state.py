@@ -94,6 +94,8 @@ def state_to_payload(state: ServerState) -> Dict[str, Any]:
         "round": int(state.round),
         "wall": float(state.wall),
         "traffic": float(state.traffic),
+        "traffic_up": float(state.traffic_up),
+        "traffic_down": float(state.traffic_down),
         "bound_state": dataclasses.asdict(state.bound_state),
         "rng_state": state.rng.bit_generator.state,
         "participation": {str(k): int(v)
@@ -134,6 +136,9 @@ def payload_to_state(payload: Dict[str, Any],
         bound_state=convergence.BoundState(**meta["bound_state"]),
         params=_rekey_like(template_params, arrays["params"]),
         round=meta["round"], wall=meta["wall"], traffic=meta["traffic"],
+        # .get: pre-telemetry checkpoints carry no directional split
+        traffic_up=float(meta.get("traffic_up", 0.0)),
+        traffic_down=float(meta.get("traffic_down", 0.0)),
         sched=sched,
         participation={int(k): int(v)
                        for k, v in meta["participation"].items()},

@@ -59,6 +59,26 @@ from repro.fl.models import FLModelDef
 from repro.sharding import fl as flsh
 
 
+def _cache_size(fn) -> Optional[int]:
+    """Compiled-signature count of a ``jax.jit`` wrapper, when this jax
+    exposes it (None otherwise — telemetry then skips recompile
+    accounting instead of guessing)."""
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return None
+
+
+def _count_recompiles(obs, fn, before: Optional[int], **labels) -> None:
+    """Credit ``trainer.jit_recompiles`` with the cache growth of ``fn``
+    since ``before`` (a ``_cache_size`` snapshot taken pre-call)."""
+    if before is None:
+        return
+    after = _cache_size(fn)
+    if after is not None and after > before:
+        obs.counter_add("trainer.jit_recompiles", after - before, **labels)
+
+
 class SequentialTrainer(LocalTrainer):
     """One ``local_train`` call per client (legacy-equivalent backend).
 
@@ -71,17 +91,32 @@ class SequentialTrainer(LocalTrainer):
     def train_all(self, state, assigns: Dict[int, Assignment],
                   ) -> Dict[int, ClientResult]:
         eng = self.eng
+        obs = eng.obs
         out = {}
         for n, a in assigns.items():
             params = eng.aggregator.client_params(state, n, a)
-            res = client_lib.local_train(
-                eng.model, params, a["width"], a["tau"],
-                eng.parts_x[n], eng.parts_y[n], eng.cfg.lr,
-                np.random.default_rng((eng.cfg.seed, state.round, n)),
-                eng.cfg.batch_size, factorized=eng.factorized,
-                estimate=eng.estimate,
-                forward_impl=eng.cfg.forward_impl,
-            )
+            before = None
+            if obs.enabled:
+                # the per-step jits live in client._jitted_fns (lru
+                # cached — this lookup is the one local_train makes)
+                _, _, sgd_step = client_lib._jitted_fns(
+                    eng.model, a["width"], eng.factorized,
+                    eng.cfg.forward_impl)
+                before = _cache_size(sgd_step)
+            with obs.wall_span("trainer.local_train", client=int(n),
+                               width=int(a["width"]), tau=int(a["tau"])):
+                res = client_lib.local_train(
+                    eng.model, params, a["width"], a["tau"],
+                    eng.parts_x[n], eng.parts_y[n], eng.cfg.lr,
+                    np.random.default_rng((eng.cfg.seed, state.round, n)),
+                    eng.cfg.batch_size, factorized=eng.factorized,
+                    estimate=eng.estimate,
+                    forward_impl=eng.cfg.forward_impl,
+                )
+            if obs.enabled:
+                _count_recompiles(obs, sgd_step, before,
+                                  trainer="sequential",
+                                  width=int(a["width"]))
             out[n] = ClientResult(jax.device_get(res.params), res.estimates,
                                   res.loss_before, res.loss_after)
         return out
@@ -249,6 +284,14 @@ class CohortTrainer(LocalTrainer):
         each chunk straight to its device — the monolithic stacked
         batch never exists when the cohort is sharded.
         """
+        # spans land from the prefetch worker thread; the recorder's
+        # lock makes that safe
+        with self.eng.obs.wall_span("trainer.host_stage", clients=len(ns),
+                                    batch=int(b_eff)):
+            return self._prepare_group_inner(state, b_eff, ns, assigns)
+
+    def _prepare_group_inner(self, state, b_eff: int, ns: List[int],
+                             assigns: Dict[int, Assignment]):
         eng, cfg = self.eng, self.eng.cfg
         taus = [max(assigns[n]["tau"], 1) for n in ns]
         # bucketed padding (bounded recompiles under varying assignments)
@@ -322,7 +365,24 @@ class CohortTrainer(LocalTrainer):
         train_fn, est_fn = _cohort_fns(
             model, width, eng.factorized, mesh,
             cfg.forward_impl)
-        final, loss_b, loss_a = train_fn(stacked, batches, taus, cfg.lr)
+        obs = eng.obs
+        before = _cache_size(train_fn) if obs.enabled else None
+        # (tau_pad, C', B, ...) per host chunk — the compiled signature
+        lead = batches_np[next(iter(batches_np))][0].shape
+        with obs.wall_span("trainer.device_step", clients=c_pad,
+                           width=int(width), tau_pad=int(lead[0])):
+            final, loss_b, loss_a = train_fn(stacked, batches, taus, cfg.lr)
+            if obs.enabled:
+                # make the span cover the device work, not just dispatch;
+                # only when telemetry is on (no-op path stays untouched)
+                jax.block_until_ready(loss_a)
+        if obs.enabled:
+            _count_recompiles(obs, train_fn, before, trainer="cohort",
+                              width=int(width))
+            # distinct compiled signatures are keyed by the cohort shape
+            obs.counter_add("trainer.cohort_shape", width=int(width),
+                            clients=c_pad, tau_pad=int(lead[0]),
+                            batch=int(lead[2]))
         ests = None
         if est_np is not None:
             if mesh is None:
@@ -399,6 +459,7 @@ class ProximalTrainer(LocalTrainer):
     def train_all(self, state, assigns: Dict[int, Assignment],
                   ) -> Dict[int, ClientResult]:
         eng, cfg = self.eng, self.eng.cfg
+        obs = eng.obs
         mu = cfg.prox_mu if self._mu is None else self._mu
         xkey = "tokens" if eng.model.name == "rnn" else "x"
         out: Dict[int, ClientResult] = {}
@@ -406,30 +467,37 @@ class ProximalTrainer(LocalTrainer):
             loss_fn, grad_fn, prox_step = _prox_fns(
                 eng.model, a["width"], eng.factorized,
                 cfg.forward_impl)
-            anchor = eng.aggregator.client_params(state, n, a)
-            nsamp = eng.data.num_samples(n)
-            b_eff = min(cfg.batch_size, nsamp)
-            tau = max(a["tau"], 1)
-            idx, est_idx = round_batch_indices(cfg.seed, state.round, n, nsamp,
-                                               tau, b_eff,
-                                               estimate=eng.estimate)
-            params, first = anchor, None
-            for t in range(tau):
-                xb, yb = eng.data.gather(n, idx[t])
-                batch = {xkey: jnp.asarray(xb), "labels": jnp.asarray(yb)}
-                if first is None:
-                    first = batch
-                params = prox_step(params, anchor, batch, cfg.lr, mu)
-            est: Dict[str, float] = {}
-            if est_idx is not None:
-                ebs = []
-                for i in range(3):
-                    xb, yb = eng.data.gather(n, est_idx[i])
-                    ebs.append({xkey: jnp.asarray(xb),
-                                "labels": jnp.asarray(yb)})
-                est = estimator.client_estimates(grad_fn, anchor, params, ebs)
-                est = {k: float(v) for k, v in est.items()}
-            out[n] = ClientResult(jax.device_get(params), est,
-                                  float(loss_fn(anchor, first)),
-                                  float(loss_fn(params, first)))
+            before = _cache_size(prox_step) if obs.enabled else None
+            with obs.wall_span("trainer.local_train", client=int(n),
+                               width=int(a["width"]), tau=int(a["tau"])):
+                anchor = eng.aggregator.client_params(state, n, a)
+                nsamp = eng.data.num_samples(n)
+                b_eff = min(cfg.batch_size, nsamp)
+                tau = max(a["tau"], 1)
+                idx, est_idx = round_batch_indices(cfg.seed, state.round, n,
+                                                   nsamp, tau, b_eff,
+                                                   estimate=eng.estimate)
+                params, first = anchor, None
+                for t in range(tau):
+                    xb, yb = eng.data.gather(n, idx[t])
+                    batch = {xkey: jnp.asarray(xb), "labels": jnp.asarray(yb)}
+                    if first is None:
+                        first = batch
+                    params = prox_step(params, anchor, batch, cfg.lr, mu)
+                est: Dict[str, float] = {}
+                if est_idx is not None:
+                    ebs = []
+                    for i in range(3):
+                        xb, yb = eng.data.gather(n, est_idx[i])
+                        ebs.append({xkey: jnp.asarray(xb),
+                                    "labels": jnp.asarray(yb)})
+                    est = estimator.client_estimates(grad_fn, anchor, params,
+                                                     ebs)
+                    est = {k: float(v) for k, v in est.items()}
+                out[n] = ClientResult(jax.device_get(params), est,
+                                      float(loss_fn(anchor, first)),
+                                      float(loss_fn(params, first)))
+            if obs.enabled:
+                _count_recompiles(obs, prox_step, before, trainer="proximal",
+                                  width=int(a["width"]))
         return out

@@ -166,7 +166,12 @@ def run_scheme(scheme: str, model: FLModelDef, parts_x, parts_y, test_batch,
 
 
 def summarize(history: List[RoundLog]) -> Dict[str, float]:
-    """Run summary; an empty history yields an empty dict (no crash)."""
+    """Run summary; an empty history yields an empty dict (no crash).
+
+    ``traffic_gb`` stays the combined (up + down) figure every existing
+    consumer reads; ``traffic_up_gb``/``traffic_down_gb`` split it by
+    direction from the per-round deltas the loops now record.
+    """
     if not history:
         return {}
     accs = [h.accuracy for h in history if h.accuracy is not None]
@@ -175,6 +180,8 @@ def summarize(history: List[RoundLog]) -> Dict[str, float]:
         "best_acc": max(accs) if accs else float("nan"),
         "wall_time": history[-1].wall_time,
         "traffic_gb": history[-1].traffic_bytes / 1e9,
+        "traffic_up_gb": float(sum(h.up_bytes for h in history)) / 1e9,
+        "traffic_down_gb": float(sum(h.down_bytes for h in history)) / 1e9,
         "avg_wait": float(np.mean([h.avg_wait for h in history])),
         "mean_tau": float(np.mean([h.mean_tau for h in history])),
     }

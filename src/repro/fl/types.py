@@ -26,6 +26,12 @@ class RoundLog:
     mean_tau: float
     accuracy: Optional[float] = None
     stale: int = 0  # results merged with staleness >= 1 (semi-async only)
+    # Directional traffic split of this round's contribution to
+    # ``traffic_bytes`` (uplink = client->server results, downlink =
+    # server->client payloads).  Their sum equals the round's traffic
+    # delta bitwise (2*b == b+b in IEEE); summaries report them apart.
+    up_bytes: float = 0.0
+    down_bytes: float = 0.0
 
 
 @dataclasses.dataclass
@@ -71,6 +77,8 @@ class ServerState:
     round: int = 0  # completed rounds
     wall: float = 0.0  # cumulative virtual seconds
     traffic: float = 0.0  # cumulative bytes (up + down)
+    traffic_up: float = 0.0  # cumulative uplink bytes
+    traffic_down: float = 0.0  # cumulative downlink bytes
     sched: Optional[SchedState] = None  # Heroes only
     participation: Dict[int, int] = dataclasses.field(default_factory=dict)
     in_flight: Tuple[InFlight, ...] = ()  # semi-async dispatch records
@@ -191,3 +199,12 @@ class FLConfig:
     checkpoint_every: int = 0
     checkpoint_dir: Optional[str] = None
     checkpoint_keep: int = 3
+    # --- telemetry (repro.obs) ------------------------------------------
+    # "off" (default): the shared no-op recorder — zero overhead, and the
+    # instrumented code paths stay bitwise-identical to the golden
+    # histories.  "memory": in-process MemorySink (tests/notebooks).
+    # "jsonl": append every span/event to
+    # ``<telemetry_dir>/events.jsonl`` with a final metrics snapshot at
+    # close; render with ``python -m repro.obs.report``.
+    telemetry: str = "off"
+    telemetry_dir: Optional[str] = None

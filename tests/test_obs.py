@@ -1,0 +1,343 @@
+"""Telemetry tests (repro.obs + engine instrumentation).
+
+Covers: the recorder/sink/schema/trace/coverage/report toolkit units,
+telemetry-off bitwise parity against the golden legacy fixtures,
+telemetry-on leaving histories bitwise-unchanged for every scheme in
+both round modes while the in-memory sink sees at least one span per
+sampled client per round, and the generalized recompile-count
+regression driven by the new ``trainer.jit_recompiles`` counter.
+"""
+
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.fl import FLConfig, build_image_setup, build_runner, run_scheme
+from repro.obs import (NOOP, JsonlSink, MemorySink, NoopRecorder, Recorder,
+                       build_recorder, coverage_table, format_coverage,
+                       load_events, metric_key, to_trace_events,
+                       validate_events)
+from repro.obs.report import render_report
+
+GOLDEN = json.loads(
+    (Path(__file__).parent / "fixtures"
+     / "golden_legacy_histories.json").read_text())
+SCHEMES = sorted(k for k in GOLDEN if k != "_meta")
+
+
+@pytest.fixture(scope="module")
+def image_setup():
+    return build_image_setup(num_clients=10, seed=0)
+
+
+def _cfg(**kw):
+    base = dict(num_clients=10, clients_per_round=4, eval_every=2,
+                tau_fixed=4, tau_max=15, estimate=True)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# recorder + metrics registry units
+# ---------------------------------------------------------------------------
+
+
+def test_metric_key_label_folding():
+    assert metric_key("traffic.up", {}) == "traffic.up"
+    assert metric_key("traffic.up", {"width": 2}) == "traffic.up[width=2]"
+    # labels sort, so call-site keyword order never splits a series
+    assert (metric_key("x", {"b": 1, "a": 2})
+            == metric_key("x", {"a": 2, "b": 1}) == "x[a=2,b=1]")
+
+
+def test_recorder_registry_and_snapshot():
+    rec = Recorder()
+    rec.counter_add("c", 2.0)
+    rec.counter_add("c", 3.0)
+    rec.counter_add("c", 1.0, width=1)
+    rec.gauge_set("g", 7.0)
+    rec.gauge_set("g", 9.0)
+    rec.observe("h", 0.5)
+    rec.observe("h", 1.5)
+    snap = rec.snapshot()
+    assert snap["counters"] == {"c": 5.0, "c[width=1]": 1.0}
+    assert snap["gauges"] == {"g": 9.0}
+    assert snap["histograms"] == {"h": [0.5, 1.5]}
+
+
+def test_tally_grows_and_accumulates_repeated_ids():
+    rec = Recorder()
+    rec.tally_add("cov", [0, 2, 2], 1)
+    assert rec.tallies["cov"].tolist() == [1, 0, 2]
+    rec.tally_add("cov", [5], 3)  # grows the dense array
+    assert rec.tallies["cov"].tolist() == [1, 0, 2, 0, 0, 3]
+    rec.tally_add("cov", [0, 1], np.array([10, 20]))  # per-id amounts
+    assert rec.tallies["cov"].tolist() == [11, 20, 2, 0, 0, 3]
+    rec.tally_add("cov", [])  # empty id list is a no-op
+    assert rec.tallies["cov"].tolist() == [11, 20, 2, 0, 0, 3]
+
+
+def test_span_stream_and_wall_span():
+    sink = MemorySink()
+    rec = Recorder([sink], meta={"scheme": "heroes"})
+    rec.span("client.train", 1.0, 3.5, client=4)
+    rec.event("round.aggregate", 3.5, round=0)
+    with rec.wall_span("aggregate.merge", clients=4):
+        pass
+    rec.close()
+
+    assert sink.events[0]["type"] == "meta"
+    assert sink.events[0]["scheme"] == "heroes"
+    (tr,) = sink.spans("client.train")
+    assert tr["clock"] == "virtual" and tr["t0"] == 1.0 and tr["t1"] == 3.5
+    assert tr["attrs"] == {"client": 4}
+    (ev,) = sink.events_named("round.aggregate")
+    assert ev["t"] == 3.5
+    (mg,) = sink.spans("aggregate.merge")
+    assert mg["clock"] == "wall" and mg["t1"] >= mg["t0"]
+    # wall_span also lands a <name>_s histogram entry
+    assert len(rec.histograms["aggregate.merge_s"]) == 1
+    # close emitted the final metrics snapshot (and is idempotent)
+    assert sink.metrics is not None
+    n = len(sink.events)
+    rec.close()
+    assert len(sink.events) == n
+
+
+def test_noop_recorder_is_inert_singleton():
+    assert NOOP.enabled is False
+    assert isinstance(NOOP, NoopRecorder)
+    NOOP.counter_add("c", 5)
+    NOOP.observe("h", 1.0)
+    NOOP.tally_add("t", [0, 1])
+    NOOP.span("s", 0, 1)
+    with NOOP.wall_span("w"):
+        pass
+    assert NOOP.snapshot() == {"counters": {}, "gauges": {},
+                               "histograms": {}, "tallies": {}}
+    assert NOOP.counters == {} and NOOP.tallies == {}
+
+
+def test_build_recorder_modes(tmp_path):
+    assert build_recorder(_cfg()) is NOOP
+    rec = build_recorder(_cfg(telemetry="memory"), meta={"scheme": "x"})
+    assert rec.enabled and isinstance(rec.sinks[0], MemorySink)
+    # the meta header always carries an environment fingerprint
+    assert "provenance" in rec.sinks[0].events[0]
+    with pytest.raises(ValueError, match="telemetry_dir"):
+        build_recorder(_cfg(telemetry="jsonl"))
+    with pytest.raises(ValueError, match="unknown telemetry"):
+        build_recorder(_cfg(telemetry="bogus"))
+    rec = build_recorder(_cfg(telemetry="jsonl",
+                              telemetry_dir=str(tmp_path)))
+    rec.span("s", 0.0, 1.0)
+    rec.close()
+    assert (tmp_path / "events.jsonl").exists()
+
+
+# ---------------------------------------------------------------------------
+# jsonl round-trip, schema, trace export
+# ---------------------------------------------------------------------------
+
+
+def test_jsonl_roundtrip_schema_and_trace(tmp_path):
+    path = tmp_path / "events.jsonl"
+    rec = Recorder([JsonlSink(path)], meta={"scheme": "heroes"})
+    rec.span("client.train", 0.0, 2.0, client=1, round=0)
+    rec.span("aggregate.merge", 0.1, 0.2, clock="wall", clients=4)
+    rec.event("round.aggregate", 2.0, round=0)
+    rec.counter_add("traffic.up", 100.0, width=2)
+    rec.close()
+
+    events = load_events(path)
+    validate_events(events)  # raises on any malformed entry
+    assert events[0]["type"] == "meta"
+    assert events[-1]["type"] == "metrics"
+    assert events[-1]["counters"] == {"traffic.up[width=2]": 100.0}
+
+    trace = to_trace_events(events)
+    tev = trace["traceEvents"]
+    kinds = {t["ph"] for t in tev}
+    assert "X" in kinds and "M" in kinds and "i" in kinds
+    (tr,) = [t for t in tev if t["ph"] == "X"
+             and t["name"] == "client.train"]
+    assert tr["dur"] == pytest.approx(2.0 * 1e6)  # seconds -> microseconds
+    # virtual spans with a client attr land on per-client tracks under
+    # the virtual-clock process; wall spans under the host process
+    assert tr["pid"] == 1
+    (mg,) = [t for t in tev if t["ph"] == "X"
+             and t["name"] == "aggregate.merge"]
+    assert mg["pid"] == 2
+    json.dumps(trace)  # valid trace_event JSON
+
+
+def test_load_events_tolerates_torn_tail(tmp_path):
+    path = tmp_path / "events.jsonl"
+    path.write_text('{"type": "meta", "schema": 1}\n{"type": "spa')
+    events = load_events(path)
+    assert len(events) == 1 and events[0]["type"] == "meta"
+
+
+def test_schema_rejects_malformed_events():
+    from repro.obs.schema import validate_event
+
+    with pytest.raises(ValueError):
+        validate_event({"type": "span", "name": "x"})  # missing t0/t1
+    with pytest.raises(ValueError):
+        validate_event({"type": "span", "name": "x", "clock": "lunar",
+                        "t0": 0.0, "t1": 1.0, "attrs": {}})
+    with pytest.raises(ValueError):
+        validate_events([{"type": "span", "name": "x", "clock": "wall",
+                          "t0": 0.0, "t1": 1.0, "attrs": {}}])  # no meta
+
+
+# ---------------------------------------------------------------------------
+# coverage table + report rendering
+# ---------------------------------------------------------------------------
+
+
+def test_coverage_table_from_tallies():
+    metrics = {"counters": {"coverage.events": 4.0},
+               "tallies": {"coverage.hidden_rounds": [4, 2, 0],
+                           "coverage.hidden_iters": [40, 20, 0]}}
+    table = coverage_table(metrics)
+    t = table["hidden"]
+    assert t["events"] == 4
+    assert t["coverage"] == pytest.approx([1.0, 0.5, 0.0])
+    assert t["min"] == 0.0 and t["max"] == 1.0
+    assert t["iters"] == [40, 20, 0]
+    text = format_coverage(table)
+    assert "hidden" in text and "100.00%" in text
+    assert format_coverage({}).startswith("(no coverage")
+
+
+def test_report_renders_engine_run(image_setup):
+    model, px, py, test = image_setup
+    eng = build_runner("heroes", model, px, py, test,
+                       cfg=_cfg(telemetry="memory"))
+    eng.run(3)
+    eng.close()
+    text = render_report(eng.obs.sinks[0].events)
+    assert "scheme=heroes" in text
+    assert "per-block coverage" in text
+    assert "-- traffic --" in text and "uplink" in text
+    assert "participation by capacity class" in text
+    assert "compiled-step cache" in text
+
+
+# ---------------------------------------------------------------------------
+# engine parity: telemetry must be invisible to training
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_off_matches_golden(image_setup):
+    """The default (off) path reproduces the pre-telemetry goldens
+    bitwise on the fields the fixture records."""
+    model, px, py, test = image_setup
+    rounds = len(GOLDEN["heroes"])
+    hist = run_scheme("heroes", model, px, py, test, rounds=rounds,
+                      cfg=_cfg())
+    keys = set(GOLDEN["heroes"][0])
+    got = [{k: v for k, v in dataclasses.asdict(h).items() if k in keys}
+           for h in hist]
+    assert got == GOLDEN["heroes"]
+
+
+@pytest.mark.parametrize("round_mode", ["sync", "semi_async"])
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_telemetry_on_leaves_histories_unchanged(scheme, round_mode,
+                                                 image_setup):
+    """telemetry='memory' must not perturb training at all — histories
+    are compared bitwise against the telemetry-off run — and the sink
+    must see >= 1 train span per sampled client per round."""
+    model, px, py, test = image_setup
+    rounds = 3
+    h_off = run_scheme(scheme, model, px, py, test, rounds=rounds,
+                       cfg=_cfg(round_mode=round_mode))
+    eng = build_runner(scheme, model, px, py, test,
+                       cfg=_cfg(round_mode=round_mode, telemetry="memory"))
+    h_on = eng.run(rounds)
+    eng.close()
+
+    assert ([dataclasses.asdict(h) for h in h_on]
+            == [dataclasses.asdict(h) for h in h_off])
+
+    sink = eng.obs.sinks[0]
+    trains = sink.spans("client.train")
+    uploads = sink.spans("client.upload")
+    assert len(uploads) == len(trains)
+    # every dispatch of every round shows up (span rounds are 1-indexed):
+    # in sync mode that is exactly one span per sampled client per round;
+    # semi-async always refills the flight pool, so every event
+    # dispatches at least one client too
+    by_round = {}
+    for s in trains:
+        by_round.setdefault(s["attrs"]["round"], []).append(
+            s["attrs"]["client"])
+    assert set(by_round) == set(range(1, rounds + 1))
+    for r, clients in by_round.items():
+        assert len(clients) >= 1
+        assert len(set(clients)) == len(clients)
+        if round_mode == "sync":
+            assert len(clients) == 4  # clients_per_round
+    # virtual-clock sanity: train precedes upload, both non-negative
+    for tr, up in zip(trains, uploads):
+        assert tr["t1"] >= tr["t0"] >= 0.0
+        assert up["t1"] >= up["t0"] >= tr["t1"]
+    # uplink/downlink counters account for the run's traffic bitwise
+    snap = sink.metrics
+    up = sum(v for k, v in snap["counters"].items()
+             if k.startswith("traffic.up"))
+    down = sum(v for k, v in snap["counters"].items()
+               if k.startswith("traffic.down"))
+    assert up + down == pytest.approx(h_on[-1].traffic_bytes)
+    if round_mode == "semi_async":
+        assert snap["histograms"].get("staleness")
+
+
+def test_semi_async_staleness_and_split_consistency(image_setup):
+    model, px, py, test = image_setup
+    eng = build_runner("heroes", model, px, py, test,
+                       cfg=_cfg(round_mode="semi_async",
+                                telemetry="memory"))
+    hist = eng.run(4)
+    eng.close()
+    prev = 0.0
+    for h in hist:
+        assert h.up_bytes + h.down_bytes == h.traffic_bytes - prev
+        prev = h.traffic_bytes
+    stale = eng.obs.sinks[0].metrics["histograms"]["staleness"]
+    assert all(s >= 0 for s in stale)
+
+
+# ---------------------------------------------------------------------------
+# recompile accounting (generalizes the semi-async cohort regression)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("round_mode", ["sync", "semi_async"])
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_recompiles_bounded_by_distinct_cohort_shapes(scheme, round_mode,
+                                                      image_setup):
+    """Over 6 rounds, each scheme x round-mode compiles its cohort train
+    step at most once per *distinct* padded cohort shape — the counter
+    the instrumentation exports is exactly the regression signal the
+    old semi-async-only test probed via jit internals."""
+    model, px, py, test = image_setup
+    eng = build_runner(scheme, model, px, py, test,
+                       cfg=_cfg(round_mode=round_mode, trainer="cohort",
+                                eval_every=100, telemetry="memory"))
+    eng.run(6)
+    eng.close()
+    counters = eng.obs.sinks[0].metrics["counters"]
+    recompiles = sum(v for k, v in counters.items()
+                     if k.startswith("trainer.jit_recompiles"))
+    shapes = [k for k in counters if k.startswith("trainer.cohort_shape[")]
+    assert shapes, counters  # the cohort trainer ran and was observed
+    # make_cnn memoizes model instances, so the jitted step cache is
+    # shared process-wide: earlier tests may have pre-compiled some
+    # shapes (fewer recompiles here), but never the reverse.
+    assert recompiles <= len(shapes), (recompiles, shapes)

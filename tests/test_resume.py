@@ -79,7 +79,12 @@ def test_resume_history_bitwise_identical(scheme, mode, image_setup,
     continued = _history(resumed)
     resumed.close()
 
-    assert continued == reference
+    # the golden fixture predates RoundLog's up/down traffic split, so
+    # compare on its own fields; the restored-prefix assert above pins
+    # the new fields' checkpoint round-trip bitwise (live vs live)
+    keys = set(reference[0])
+    assert [{k: v for k, v in h.items() if k in keys}
+            for h in continued] == reference
 
 
 def test_restore_latest_false_on_empty_dir(image_setup, tmp_path):
