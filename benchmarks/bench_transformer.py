@@ -1,0 +1,127 @@
+"""Federated composed transformer benchmark: round time + decode tokens/s.
+
+Two numbers close the training->serving loop (docs/TRANSFORMERS.md):
+
+  * federated round time — Heroes (factorized) and FedAvg (dense)
+    rounds of the transformer ``FLModelDef`` through the engine, timed
+    after a jit warmup round;
+  * decode tokens/s — per-width weights composed ONCE from the trained
+    server state, then token-by-token greedy decode through the Pallas
+    decode-attention kernel (``kernels/decode_attention.py``; interpret
+    mode on CPU hosts, compiled on TPU) and through the inline XLA
+    reference for comparison, timed after a warmup generation.
+
+Writes ``BENCH_transformer.json`` next to the repo root with
+``benchmarks/common.provenance()`` stamped.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_transformer.py [--fast|--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from common import provenance  # noqa: E402
+
+
+def bench_rounds(scheme: str, model, px, py, test, cfg, *, warmup: int,
+                 rounds: int) -> dict:
+    from repro.fl import build_runner
+
+    with build_runner(scheme, model, px, py, test, cfg=cfg, seed=0) as eng:
+        for _ in range(warmup):
+            eng.run_round()
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            eng.run_round()
+        dt = time.perf_counter() - t0
+        return {"scheme": scheme, "rounds": rounds, "total_s": dt,
+                "per_round_s": dt / rounds,
+                "params": eng.state.params}
+
+
+def bench_decode(model, params, width: int, backend: str, *, batch: int,
+                 steps: int) -> dict:
+    import numpy as np
+
+    from repro.fl import greedy_decode, serving_weights
+
+    weights = serving_weights(model, params, width)
+    prompt = (np.arange(batch * 8, dtype=np.int32).reshape(batch, 8)
+              % model.num_classes)
+    greedy_decode(model, weights, width, prompt, steps, backend=backend)
+    t0 = time.perf_counter()
+    tokens, _ = greedy_decode(model, weights, width, prompt, steps,
+                              backend=backend)
+    dt = time.perf_counter() - t0
+    n = int(tokens.shape[0] * tokens.shape[1])
+    return {"width": width, "backend": backend, "batch": batch,
+            "steps": steps, "total_s": dt, "tokens_per_s": n / dt}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal shapes (CI 4-device leg)")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default=str(
+        Path(__file__).resolve().parents[1] / "BENCH_transformer.json"))
+    args = ap.parse_args()
+
+    from repro.fl import FLConfig, build_text_setup
+
+    if args.smoke:
+        warmup, rounds, batch, steps = 1, 1, 2, 8
+    elif args.fast:
+        warmup, rounds, batch, steps = 1, 2, 2, 16
+    else:
+        warmup, rounds, batch, steps = 2, 5, 4, 32
+
+    num_clients = 8
+    model, px, py, test = build_text_setup(
+        num_clients=num_clients, max_width=3, seed=0,
+        model_name="transformer")
+    cfg = FLConfig(num_clients=num_clients, clients_per_round=4,
+                   batch_size=8, tau_fixed=5, eval_every=10_000,
+                   estimate=True, seed=0)
+
+    results = {"round_time": [], "decode": []}
+    heroes_params = None
+    for scheme in ("heroes", "fedavg"):
+        r = bench_rounds(scheme, model, px, py, test, cfg,
+                         warmup=warmup, rounds=rounds)
+        if scheme == "heroes":
+            heroes_params = r.pop("params")
+        else:
+            r.pop("params")
+        print(f"# {scheme}: {r['per_round_s']:.2f}s/round", file=sys.stderr)
+        results["round_time"].append(r)
+
+    max_width = model.specs["head"].max_width
+    widths = (1, max_width) if args.smoke else tuple(range(1, max_width + 1))
+    for width in widths:
+        for backend in ("pallas", "xla"):
+            d = bench_decode(model, heroes_params, width, backend,
+                             batch=batch, steps=steps)
+            print(f"# decode w={width} {backend}: "
+                  f"{d['tokens_per_s']:.1f} tok/s", file=sys.stderr)
+            results["decode"].append(d)
+
+    out = {"provenance": provenance(), "config": {
+        "num_clients": num_clients, "batch_size": cfg.batch_size,
+        "tau_fixed": cfg.tau_fixed, "mode": (
+            "smoke" if args.smoke else "fast" if args.fast else "full")},
+        **results}
+    Path(args.out).write_text(json.dumps(out, indent=2, sort_keys=True))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

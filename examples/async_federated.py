@@ -12,10 +12,7 @@ for never paying the straggler makespan, which is exactly the waiting
 time the paper's Fig. 2 shows fixed-tau schemes wasting.
 """
 
-import pathlib
-import sys
-
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+# Run with the package importable: ``pip install -e .`` or ``PYTHONPATH=src``.
 
 from repro.fl import FLConfig, build_image_setup, run_scheme, summarize
 

@@ -1,71 +1,85 @@
-"""Heroes composition applied to a transformer LM — the framework's
-first-class integration (CompositionConfig on any assigned arch).
+"""Federated composed transformer: train through the engine, then serve.
 
-Trains a reduced deepseek-style decoder twice on a synthetic LM task:
-  (a) dense parameterisation,
-  (b) factorized (Heroes) parameterisation at width p=P,
-showing the factorized model trains to comparable loss with a smaller
-parameter/traffic footprint — the paper's value proposition applied to a
-modern LLM layer stack (DESIGN.md §4).
+Heroes' neural composition IS low-rank adaptation, so the transformer
+trains through the *real* federated engine like any other model def:
+the ``"transformer"`` registry entry maps decoder blocks onto
+``CompositionSpec``s (q/k/v/o and MLP projections as square rank-R
+blocks, embedding + LM head anchored — docs/TRANSFORMERS.md), and every
+registered scheme / trainer / round mode applies unchanged.
+
+This example
+  1. builds the synthetic-text federation with the transformer def,
+  2. runs Heroes (factorized, width+frequency assignment) and FedAvg
+     (dense) for a few rounds each,
+  3. composes the trained factors ONCE per width and serves greedy
+     decode through the Pallas decode-attention kernel.
 """
 
-import pathlib
-import sys
+# Run with the package importable: ``pip install -e .`` or ``PYTHONPATH=src``.
+
+import argparse
 import time
 
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.configs.base import CompositionConfig
-from repro.data import SyntheticTextTask, lm_batches
-from repro.launch.steps import make_train_step
-from repro.models import model
-from repro.models.module import count_params
-from repro.optim import make_optimizer
-
-STEPS = 120
+from repro.fl import (FLConfig, build_runner, build_text_setup, greedy_decode,
+                      run_scheme, serving_weights, summarize)
 
 
-def train(cfg, task, tag: str):
-    params = model.init(jax.random.PRNGKey(0), cfg)
-    opt = make_optimizer("adamw", 3e-3)
-    opt_state = opt.init(params)
-    step = jax.jit(make_train_step(cfg, opt))
-    rng = np.random.default_rng(0)
-    t0, losses = time.time(), []
-    for i in range(STEPS):
-        toks, labels = lm_batches(task.train, 16, rng)
-        toks = jnp.asarray(toks % cfg.vocab)
-        labels = jnp.asarray(labels % cfg.vocab)
-        params, opt_state, metrics = step(params, opt_state,
-                                          {"tokens": toks, "labels": labels})
-        losses.append(float(metrics["loss"]))
-        if i % 30 == 0 or i == STEPS - 1:
-            print(f"  [{tag}] step {i:3d} loss {losses[-1]:.3f}")
-    print(f"  [{tag}] params={count_params(params):,}  "
-          f"{time.time()-t0:.1f}s  final loss {np.mean(losses[-10:]):.3f}")
-    return np.mean(losses[-10:])
+def train(scheme: str, model, parts_x, parts_y, test_batch, cfg, rounds):
+    t0 = time.time()
+    history = run_scheme(scheme, model, parts_x, parts_y, test_batch,
+                         rounds, cfg=cfg, seed=0)
+    s = summarize(history)
+    print(f"  [{scheme}] {rounds} rounds in {time.time() - t0:.1f}s wall "
+          f"(virtual {s['wall_time']:.1f}s) acc={s['final_acc']:.3f} "
+          f"traffic={s['traffic_gb'] * 1e3:.2f} MB")
+    return history
+
+
+def serve(model, params, width: int, steps: int):
+    """Compose width-p weights once, then greedy-decode a continuation."""
+    weights = serving_weights(model, params, width)
+    prompt = np.arange(8, dtype=np.int32)[None, :] % model.num_classes
+    t0 = time.time()
+    tokens, _ = greedy_decode(model, weights, width, prompt, steps)
+    dt = time.time() - t0
+    print(f"  [serve] width={width} generated {tokens.shape[1]} tokens "
+          f"({tokens.shape[1] / dt:.1f} tok/s incl. compile): "
+          f"{tokens[0].tolist()}")
 
 
 def main():
-    task = SyntheticTextTask(vocab=64, seq_len=32)
-    base = configs.get_smoke("deepseek-coder-33b").replace(
-        vocab=64, max_seq=64, remat=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="2 rounds, tiny cohort (CI)")
+    ap.add_argument("--rounds", type=int, default=10)
+    args = ap.parse_args()
+    rounds = 2 if args.smoke else args.rounds
+    num_clients = 8 if args.smoke else 24
 
-    print("dense parameterisation:")
-    dense_loss = train(base, task, "dense")
+    model, parts_x, parts_y, test_batch = build_text_setup(
+        num_clients=num_clients, max_width=3, seed=0,
+        model_name="transformer")
+    cfg = FLConfig(num_clients=num_clients,
+                   clients_per_round=min(4, num_clients),
+                   batch_size=8, eval_every=max(rounds // 2, 1), seed=0)
 
-    print("factorized (Heroes composition, P=2, rank=d/4):")
-    fac = base.replace(composition=CompositionConfig(
-        enabled=True, max_width=2, rank=base.d_model // 4))
-    fac_loss = train(fac, task, "heroes")
+    print("federated transformer (composed rank-R blocks) through the engine:")
+    train("heroes", model, parts_x, parts_y, test_batch, cfg, rounds)
+    train("fedavg", model, parts_x, parts_y, test_batch, cfg, rounds)
 
-    print(f"\ndense final={dense_loss:.3f}  factorized final={fac_loss:.3f} "
-          f"(factorized trains the same task with fewer shipped params)")
+    # Serving: run Heroes once more with the runner held open so the
+    # server's factorized state is in hand, compose per-width dense
+    # weights once, decode through the Pallas kernel (interpret mode on
+    # CPU hosts, compiled on TPU).
+    with build_runner("heroes", model, parts_x, parts_y, test_batch,
+                      cfg=cfg, seed=0) as runner:
+        runner.run(rounds)
+        params = runner.state.params
+        print("serving the trained model (compose once, decode via Pallas):")
+        for width in (1, model.specs["head"].max_width):
+            serve(model, params, width, steps=4 if args.smoke else 16)
 
 
 if __name__ == "__main__":

@@ -11,10 +11,7 @@ Run:  PYTHONPATH=src python examples/federated_datasets.py [--data-root D]
 """
 
 import argparse
-import pathlib
-import sys
-
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+# Run with the package importable: ``pip install -e .`` or ``PYTHONPATH=src``.
 
 import numpy as np
 

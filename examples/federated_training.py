@@ -6,10 +6,9 @@ paper plots (Figs. 4/6) on the reduced synthetic CIFAR stand-in, plus a
 checkpoint of the final global factors.
 """
 
-import pathlib
-import sys
+# Run with the package importable: ``pip install -e .`` or ``PYTHONPATH=src``.
 
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+import pathlib
 
 from repro.fl import (FLConfig, build_image_setup, build_runner, run_scheme,
                       summarize, time_to_accuracy)

@@ -6,10 +6,7 @@
    block-wise aggregation) on a 10-client simulation — Alg. 1/2
 """
 
-import pathlib
-import sys
-
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+# Run with the package importable: ``pip install -e .`` or ``PYTHONPATH=src``.
 
 import jax
 import jax.numpy as jnp

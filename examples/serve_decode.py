@@ -7,10 +7,7 @@ Also demonstrates the sliding-window (ring-buffer) cache used by the
 long_500k variant and the Pallas decode-attention kernel.
 """
 
-import pathlib
-import sys
-
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+# Run with the package importable: ``pip install -e .`` or ``PYTHONPATH=src``.
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,11 @@ heterogeneous edge network (paper Sec. III / VI)."""
 from repro.fl.engine import (SCHEMES, EngineRunner, ServerState,
                              build_engine, register_scheme)
 from repro.fl.heterogeneity import HeterogeneityModel
-from repro.fl.models import MODELS, make_cnn, make_resnet, make_rnn
+from repro.fl.models import (MODELS, ComposedLayer, FLModelDef, LayerHint,
+                             get_model, make_cnn, make_resnet, make_rnn,
+                             register_model)
+from repro.fl.transformer import (greedy_decode, make_transformer,
+                                  serving_weights)
 from repro.fl.population import (
     SCHEDULERS,
     PopulationRegistry,
@@ -27,7 +31,10 @@ __all__ = [
     "SCHEMES", "EngineRunner", "ServerState", "build_engine",
     "register_scheme",
     "HeterogeneityModel",
-    "MODELS", "make_cnn", "make_resnet", "make_rnn",
+    "MODELS", "ComposedLayer", "FLModelDef", "LayerHint",
+    "get_model", "register_model",
+    "make_cnn", "make_resnet", "make_rnn",
+    "make_transformer", "serving_weights", "greedy_decode",
     "SCHEDULERS", "PopulationRegistry", "VirtualPartition",
     "RUNNERS",
     "build_image_setup", "build_runner", "build_setup", "build_text_setup",

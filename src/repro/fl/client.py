@@ -28,9 +28,8 @@ Array = jax.Array
 
 
 def data_batch(model: FLModelDef, x, y, idx) -> Dict[str, Array]:
-    if model.name == "rnn":
-        return {"tokens": jnp.asarray(x[idx]), "labels": jnp.asarray(y[idx])}
-    return {"x": jnp.asarray(x[idx]), "labels": jnp.asarray(y[idx])}
+    return {model.input_key: jnp.asarray(x[idx]),
+            "labels": jnp.asarray(y[idx])}
 
 
 def _ce(logits: Array, labels: Array) -> Array:

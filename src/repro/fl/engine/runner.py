@@ -70,6 +70,9 @@ class EngineRunner:
         self.cfg = cfg
         self.eval_width = eval_width
         self.P = next(iter(model.specs.values())).max_width
+        if cfg.clock_model not in ("dense", "rank_aware"):
+            raise ValueError(f"unknown clock_model {cfg.clock_model!r} "
+                             f"(expected 'dense' or 'rank_aware')")
         self.factorized = factorized
         self.estimate = estimate
         # collective merge backend (one compiled call per round; clients
@@ -167,6 +170,21 @@ class EngineRunner:
         self.close()
 
     def flops_per_iter(self, width: int) -> float:
+        """Per-iteration FLOPs the virtual clock charges a client.
+
+        ``cfg.clock_model="dense"`` (default, bitwise-history path)
+        charges the materialised forward+backward regardless of how the
+        client actually computes.  ``"rank_aware"`` charges factorized
+        schemes the per-layer impl mix ``forward_impl`` selects — a
+        rank-space layer costs its factor contractions, a materialised
+        one its amortised compose plus dense application — so simulated
+        edge devices speed up exactly where the rank path wins.  Both
+        round loops AND the Heroes mu_max probe route through here.
+        """
+        if self.cfg.clock_model == "rank_aware" and self.factorized:
+            per_sample = self.model.apply_flops_per_sample(
+                width, self.cfg.batch_size, self.cfg.forward_impl)
+            return per_sample * self.cfg.batch_size
         return self.model.flops_per_sample(width) * self.cfg.batch_size
 
     def acc_from_logits(self, logits) -> float:

@@ -327,7 +327,7 @@ class CohortTrainer(LocalTrainer):
         taus_arr = np.zeros((c_pad,), np.int32)
         taus_arr[:n_real] = taus
 
-        xkey = "tokens" if eng.model.name == "rnn" else "x"
+        xkey = eng.model.input_key
         batches = {  # per chunk: (C', tau_pad, B, ...) -> (tau_pad, C', B, ...)
             xkey: stack_client_shards(xs_steps, chunks, step_leading=True),
             "labels": stack_client_shards(ys_steps, chunks, step_leading=True),
@@ -461,7 +461,7 @@ class ProximalTrainer(LocalTrainer):
         eng, cfg = self.eng, self.eng.cfg
         obs = eng.obs
         mu = cfg.prox_mu if self._mu is None else self._mu
-        xkey = "tokens" if eng.model.name == "rnn" else "x"
+        xkey = eng.model.input_key
         out: Dict[int, ClientResult] = {}
         for n, a in assigns.items():
             loss_fn, grad_fn, prox_step = _prox_fns(

@@ -24,6 +24,14 @@ from reduced factors under a ``forward_impl`` knob:
   auto         pick per (layer, width, batch) by the static FLOPs model
                (``apply_flops`` vs ``compose_flops + dense_apply_flops``),
                with per-layer reuse folded into the application count.
+
+The per-layer apply/compose/FLOPs/hint bundle is the reusable
+:class:`ComposedLayer`; model definitions assemble layers with
+:meth:`FLModelDef.from_layers` and register themselves in the model
+registry (:func:`register_model` / :func:`get_model`) that
+``simulation.build_setup`` resolves ``model_name`` through.  The
+transformer definition lives in :mod:`repro.fl.transformer` on the same
+abstraction.
 """
 
 from __future__ import annotations
@@ -37,9 +45,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.composition import (CompositionSpec, apply_factors, compose,
-                                    conv_rank_overhead, gather_blocks,
-                                    init_factors, rank_space_wins)
+from repro.core.composition import (CompositionSpec, apply_factors,
+                                    apply_flops, compose, compose_flops,
+                                    conv_rank_overhead, dense_apply_flops,
+                                    gather_blocks, init_factors,
+                                    rank_space_wins)
 
 Array = jax.Array
 
@@ -88,6 +98,56 @@ class LayerHint:
         return self.apps_per_sample
 
 
+LAYER_KINDS = ("dense", "conv", "embed")
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposedLayer:
+    """One width-scalable layer: spec + application kind + auto-impl hint.
+
+    The reusable unit every model definition is assembled from.  A layer
+    knows how to *apply* a weight entry — either a composed dense array
+    (the bitwise historical op) or raw ``{"basis", "coeff"}`` factors
+    (the rank-space contraction) — and carries the static facts
+    (``LayerHint``) the auto forward-impl choice and the rank-aware
+    clock model consume.
+
+    Kinds:
+      dense  ``x @ W`` on the last axis (any leading shape, so sequence
+             inputs ``(B, T, pI)`` work unchanged);
+      conv   NHWC SAME conv, ``ksq`` taps, optional stride;
+      embed  token gather; the rank path gathers R-length basis rows and
+             finishes with the coefficient contraction.
+    """
+
+    name: str
+    spec: CompositionSpec
+    kind: str = "dense"
+    stride: int = 1
+    hint: LayerHint = LayerHint()
+
+    def __post_init__(self):
+        if self.kind not in LAYER_KINDS:
+            raise ValueError(f"unknown layer kind {self.kind!r} "
+                             f"(expected one of {LAYER_KINDS})")
+        if self.kind != "conv" and self.spec.ksq != 1:
+            raise ValueError(f"layer {self.name!r}: ksq={self.spec.ksq} "
+                             f"requires kind='conv'")
+        if self.kind == "embed" and self.spec.mode != "grow_out":
+            raise ValueError(f"embed layer {self.name!r} must use "
+                             f"mode='grow_out' (vocab-anchored input)")
+
+    def apply(self, entry, x: Array, width: int) -> Array:
+        if self.kind == "conv":
+            return _apply_conv(entry, x, width, self.spec, stride=self.stride)
+        if self.kind == "embed":
+            return _apply_embed(entry, x, width, self.spec)
+        return _apply_dense(entry, x, width, self.spec)
+
+    def materialized(self, entry, width: int) -> Array:
+        return _materialized(entry, width, self.spec)
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class FLModelDef:
     """A width-scalable FL model.
@@ -107,6 +167,25 @@ class FLModelDef:
     # static per-layer facts for the auto forward-impl choice; layers
     # without a hint default to LayerHint() (1 application, rank-capable)
     hints: Optional[Dict[str, LayerHint]] = None
+    # which batch key carries the input ("x" for images, "tokens" for
+    # sequence models) — the engine keys batch assembly off this instead
+    # of special-casing model names
+    input_key: str = "x"
+    # the ComposedLayer dict the forward was assembled from (None for
+    # defs built directly on raw specs)
+    layers: Optional[Dict[str, ComposedLayer]] = None
+
+    @classmethod
+    def from_layers(cls, name: str, layers: Dict[str, ComposedLayer],
+                    forward: Callable, flops_per_sample: Callable,
+                    num_classes: int, *, input_key: str = "x") -> "FLModelDef":
+        """Assemble a def from an ordered ComposedLayer dict: the specs
+        and hints tables are projections of the layers, so they can
+        never drift apart."""
+        specs = {n: layer.spec for n, layer in layers.items()}
+        hints = {n: layer.hint for n, layer in layers.items()}
+        return cls(name, specs, forward, flops_per_sample, num_classes,
+                   hints, input_key=input_key, layers=layers)
 
     # ---- factorized parameterisation -----------------------------------
     def init_factorized(self, key) -> Dict[str, Dict[str, Array]]:
@@ -188,7 +267,7 @@ class FLModelDef:
         """
         if forward_impl == "materialize":
             return self.compose_all(reduced, width)
-        data = (batch.get("x", batch.get("tokens"))
+        data = (batch.get(self.input_key, batch.get("x", batch.get("tokens")))
                 if isinstance(batch, dict) else None)
         shape = tuple(data.shape) if data is not None else None
         batch_size = shape[0] if shape else 1
@@ -199,6 +278,36 @@ class FLModelDef:
                            width, spec))
             for name, spec in self.specs.items()
         }
+
+    def apply_flops_per_sample(self, width: int, batch_size: int,
+                               forward_impl: str,
+                               data_shape: Optional[tuple] = None) -> float:
+        """Per-sample fwd+bwd FLOPs under the per-layer impl the client
+        forward actually takes (the ``clock_model="rank_aware"`` time
+        model).
+
+        Rank-space layers charge :func:`apply_flops`; materialised
+        layers charge their one-off ``compose`` amortised over the
+        batch plus the dense application (free for embedding gathers).
+        Backward ~ 2x forward, so the total is 3x — the same convention
+        the dense ``flops_per_sample`` tables use.
+        """
+        impls = self.layer_impls(width, batch_size, forward_impl, data_shape)
+        hints = self.hints or {}
+        bs = max(int(batch_size), 1)
+        total = 0.0
+        for name, spec in self.specs.items():
+            hint = hints.get(name, LayerHint())
+            apps = hint.apps(data_shape)
+            if impls[name] == "rank_space":
+                fwd = apply_flops(width, spec, applications=apps,
+                                  basis_is_gather=hint.basis_gather)
+            else:
+                fwd = compose_flops(width, spec) / bs
+                if not hint.dense_apply_free:
+                    fwd += dense_apply_flops(width, spec, applications=apps)
+            total += 3.0 * fwd
+        return total
 
     def factorized_bytes(self, width: int) -> int:
         return 4 * sum(s.params_factorized(width) for s in self.specs.values())
@@ -223,6 +332,47 @@ class FLModelDef:
 
     def dense_bytes(self, width: int) -> int:
         return 4 * sum(s.params_materialized(width) for s in self.specs.values())
+
+
+# ---------------------------------------------------------------------------
+# model registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelEntry:
+    """Registry row: the builder plus the data modality it expects.
+
+    ``build(max_width, meta, **overrides)`` receives the dataset's
+    metadata dict and returns the (memoized) ``FLModelDef``.
+    """
+
+    name: str
+    modality: str  # "image" | "text"
+    build: Callable[..., FLModelDef]
+
+
+MODEL_REGISTRY: Dict[str, ModelEntry] = {}
+
+
+def register_model(name: str, *, modality: str = "image"):
+    """Decorator registering a ``build(max_width, meta, **kw)`` factory
+    under ``name`` so ``simulation.build_setup`` can resolve it."""
+    def deco(build):
+        if name in MODEL_REGISTRY:
+            raise ValueError(f"model {name!r} already registered")
+        MODEL_REGISTRY[name] = ModelEntry(name, modality, build)
+        return build
+    return deco
+
+
+def get_model(name: str) -> ModelEntry:
+    try:
+        return MODEL_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown model {name!r}; registered: {sorted(MODEL_REGISTRY)}"
+        ) from None
 
 
 # ---------------------------------------------------------------------------
@@ -288,22 +438,34 @@ def _materialized(entry, width: int, spec: CompositionSpec) -> Array:
 @functools.lru_cache(maxsize=None)
 def make_cnn(max_width: int = 3, base: int = 8, rank: int = 8,
              num_classes: int = 10, in_ch: int = 3) -> FLModelDef:
-    specs = {
-        "conv1": CompositionSpec(max_width, rank, in_ch, base, ksq=9, mode="grow_out"),
-        "conv2": CompositionSpec(max_width, rank, base, base, ksq=9),
-        "conv3": CompositionSpec(max_width, rank, base, base, ksq=9),
-        "fc": CompositionSpec(max_width, rank, base, num_classes, ksq=1, mode="grow_in"),
+    layers = {
+        "conv1": ComposedLayer(
+            "conv1",
+            CompositionSpec(max_width, rank, in_ch, base, ksq=9, mode="grow_out"),
+            kind="conv",
+            hint=LayerHint(64, lambda s: s[1] * s[2])),
+        "conv2": ComposedLayer(
+            "conv2", CompositionSpec(max_width, rank, base, base, ksq=9),
+            kind="conv", stride=2,
+            hint=LayerHint(16, lambda s: -(-s[1] // 2) * (-(-s[2] // 2)))),
+        "conv3": ComposedLayer(
+            "conv3", CompositionSpec(max_width, rank, base, base, ksq=9),
+            kind="conv", stride=2,
+            hint=LayerHint(4, lambda s: -(-s[1] // 4) * (-(-s[2] // 4)))),
+        "fc": ComposedLayer(
+            "fc",
+            CompositionSpec(max_width, rank, base, num_classes, ksq=1,
+                            mode="grow_in"),
+            hint=LayerHint(apps_per_sample=1)),
     }
 
     def forward(w: Dict[str, Any], width: int, batch) -> Array:
         x = batch["x"]
-        x = jax.nn.relu(_apply_conv(w["conv1"], x, width, specs["conv1"]))
-        x = jax.nn.relu(_apply_conv(w["conv2"], x, width, specs["conv2"],
-                                    stride=2))
-        x = jax.nn.relu(_apply_conv(w["conv3"], x, width, specs["conv3"],
-                                    stride=2))
+        x = jax.nn.relu(layers["conv1"].apply(w["conv1"], x, width))
+        x = jax.nn.relu(layers["conv2"].apply(w["conv2"], x, width))
+        x = jax.nn.relu(layers["conv3"].apply(w["conv3"], x, width))
         x = jnp.mean(x, axis=(1, 2))  # GAP
-        return _apply_dense(w["fc"], x, width, specs["fc"])
+        return layers["fc"].apply(w["fc"], x, width)
 
     def flops(width: int, hw: int = 8) -> int:
         p = width
@@ -314,13 +476,7 @@ def make_cnn(max_width: int = 3, base: int = 8, rank: int = 8,
         f += 2 * (p * base) * num_classes
         return 3 * f  # fwd + bwd ~ 3x
 
-    hints = {  # conv output positions (strides 1, 2, 2); reference 8x8
-        "conv1": LayerHint(64, lambda s: s[1] * s[2]),
-        "conv2": LayerHint(16, lambda s: -(-s[1] // 2) * (-(-s[2] // 2))),
-        "conv3": LayerHint(4, lambda s: -(-s[1] // 4) * (-(-s[2] // 4))),
-        "fc": LayerHint(apps_per_sample=1),
-    }
-    return FLModelDef("cnn", specs, forward, flops, num_classes, hints)
+    return FLModelDef.from_layers("cnn", layers, forward, flops, num_classes)
 
 
 # ---------------------------------------------------------------------------
@@ -331,24 +487,32 @@ def make_cnn(max_width: int = 3, base: int = 8, rank: int = 8,
 @functools.lru_cache(maxsize=None)
 def make_resnet(max_width: int = 3, base: int = 8, rank: int = 8,
                 num_classes: int = 10, in_ch: int = 3) -> FLModelDef:
-    specs = {
-        "stem": CompositionSpec(max_width, rank, in_ch, base, ksq=9, mode="grow_out"),
-        "b1a": CompositionSpec(max_width, rank, base, base, ksq=9),
-        "b1b": CompositionSpec(max_width, rank, base, base, ksq=9),
-        "b2a": CompositionSpec(max_width, rank, base, base, ksq=9),
-        "b2b": CompositionSpec(max_width, rank, base, base, ksq=9),
-        "fc": CompositionSpec(max_width, rank, base, num_classes, ksq=1, mode="grow_in"),
+    conv_hint = LayerHint(64, lambda s: s[1] * s[2])  # stride-1 convs
+    layers = {
+        "stem": ComposedLayer(
+            "stem",
+            CompositionSpec(max_width, rank, in_ch, base, ksq=9, mode="grow_out"),
+            kind="conv", hint=conv_hint),
+        **{name: ComposedLayer(
+            name, CompositionSpec(max_width, rank, base, base, ksq=9),
+            kind="conv", hint=conv_hint)
+           for name in ("b1a", "b1b", "b2a", "b2b")},
+        "fc": ComposedLayer(
+            "fc",
+            CompositionSpec(max_width, rank, base, num_classes, ksq=1,
+                            mode="grow_in"),
+            hint=LayerHint(apps_per_sample=1)),
     }
 
     def forward(w, width, batch):
         x = batch["x"]
-        x = jax.nn.relu(_apply_conv(w["stem"], x, width, specs["stem"]))
-        h = jax.nn.relu(_apply_conv(w["b1a"], x, width, specs["b1a"]))
-        x = jax.nn.relu(x + _apply_conv(w["b1b"], h, width, specs["b1b"]))
-        h = jax.nn.relu(_apply_conv(w["b2a"], x, width, specs["b2a"]))
-        x = jax.nn.relu(x + _apply_conv(w["b2b"], h, width, specs["b2b"]))
+        x = jax.nn.relu(layers["stem"].apply(w["stem"], x, width))
+        h = jax.nn.relu(layers["b1a"].apply(w["b1a"], x, width))
+        x = jax.nn.relu(x + layers["b1b"].apply(w["b1b"], h, width))
+        h = jax.nn.relu(layers["b2a"].apply(w["b2a"], x, width))
+        x = jax.nn.relu(x + layers["b2b"].apply(w["b2b"], h, width))
         x = jnp.mean(x, axis=(1, 2))
-        return _apply_dense(w["fc"], x, width, specs["fc"])
+        return layers["fc"].apply(w["fc"], x, width)
 
     def flops(width, hw: int = 8):
         p = width
@@ -357,10 +521,8 @@ def make_resnet(max_width: int = 3, base: int = 8, rank: int = 8,
         f += 2 * (p * base) * num_classes
         return 3 * f
 
-    hints = {name: LayerHint(64, lambda s: s[1] * s[2])  # stride-1 convs
-             for name in ("stem", "b1a", "b1b", "b2a", "b2b")}
-    hints["fc"] = LayerHint(apps_per_sample=1)
-    return FLModelDef("resnet", specs, forward, flops, num_classes, hints)
+    return FLModelDef.from_layers("resnet", layers, forward, flops,
+                                  num_classes)
 
 
 # ---------------------------------------------------------------------------
@@ -371,27 +533,45 @@ def make_resnet(max_width: int = 3, base: int = 8, rank: int = 8,
 @functools.lru_cache(maxsize=None)
 def make_rnn(max_width: int = 3, base: int = 16, rank: int = 8,
              vocab: int = 64) -> FLModelDef:
-    specs = {
-        "embed": CompositionSpec(max_width, rank, vocab, base, ksq=1, mode="grow_out"),
-        "wx": CompositionSpec(max_width, rank, base, base, ksq=1),
-        "wh": CompositionSpec(max_width, rank, base, base, ksq=1),
-        "out": CompositionSpec(max_width, rank, base, vocab, ksq=1, mode="grow_in"),
+    seq_len = lambda s: s[1]  # noqa: E731 — tokens (B, T)
+    layers = {
+        # embedding application is a gather on BOTH paths: materialised
+        # rows cost ~0, and the rank path gathers R-length basis rows
+        # then pays only the coefficient contraction per token
+        "embed": ComposedLayer(
+            "embed",
+            CompositionSpec(max_width, rank, vocab, base, ksq=1,
+                            mode="grow_out"),
+            kind="embed",
+            hint=LayerHint(32, seq_len, dense_apply_free=True,
+                           basis_gather=True)),
+        "wx": ComposedLayer(
+            "wx", CompositionSpec(max_width, rank, base, base, ksq=1),
+            hint=LayerHint(32, seq_len)),
+        # scan recurrence: composed once, reused T times per evaluation
+        "wh": ComposedLayer(
+            "wh", CompositionSpec(max_width, rank, base, base, ksq=1),
+            hint=LayerHint(32, seq_len, rank_capable=False)),
+        "out": ComposedLayer(
+            "out",
+            CompositionSpec(max_width, rank, base, vocab, ksq=1,
+                            mode="grow_in"),
+            hint=LayerHint(32, seq_len)),
     }
 
     def forward(w, width, batch):
         tokens = batch["tokens"]  # (B, T)
-        emb = _apply_embed(w["embed"], tokens, width, specs["embed"])  # (B,T,pE)
+        emb = layers["embed"].apply(w["embed"], tokens, width)  # (B,T,pE)
         # the scan-carried recurrence weight is materialised ONCE per
         # evaluation and reused T times in the carry loop — rank-space
         # application would redo two contractions per step for a weight
         # whose compose is amortised T-fold (see LayerHint.rank_capable)
-        wh = _materialized(w["wh"], width, specs["wh"])[0]
+        wh = layers["wh"].materialized(w["wh"], width)[0]
 
         if isinstance(w["wx"], dict):
             # input projection in rank space, hoisted out of the scan:
             # all T steps contract through R in one shot
-            xp = apply_factors(emb, w["wx"]["basis"], w["wx"]["coeff"],
-                               width, specs["wx"], "dense")
+            xp = layers["wx"].apply(w["wx"], emb, width)
 
             def step(h, x):
                 h = jnp.tanh(x + h @ wh)
@@ -410,26 +590,32 @@ def make_rnn(max_width: int = 3, base: int = 16, rank: int = 8,
         h0 = jnp.zeros((emb.shape[0], wh.shape[0]), emb.dtype)
         _, hs = jax.lax.scan(step, h0, xs)
         hs = jnp.moveaxis(hs, 0, 1)  # (B,T,pH)
-        return _apply_dense(w["out"], hs, width, specs["out"])  # (B,T,V)
+        return layers["out"].apply(w["out"], hs, width)  # (B,T,V)
 
     def flops(width, seq: int = 32):
         p = width
         per_tok = 2 * vocab * (p * base) + 4 * (p * base) ** 2 + 2 * (p * base) * vocab
         return 3 * per_tok * seq
 
-    seq_len = lambda s: s[1]  # noqa: E731 — tokens (B, T)
-    hints = {
-        # embedding application is a gather on BOTH paths: materialised
-        # rows cost ~0, and the rank path gathers R-length basis rows
-        # then pays only the coefficient contraction per token
-        "embed": LayerHint(32, seq_len, dense_apply_free=True,
-                           basis_gather=True),
-        "wx": LayerHint(32, seq_len),
-        # scan recurrence: composed once, reused T times per evaluation
-        "wh": LayerHint(32, seq_len, rank_capable=False),
-        "out": LayerHint(32, seq_len),
-    }
-    return FLModelDef("rnn", specs, forward, flops, vocab, hints)
+    return FLModelDef.from_layers("rnn", layers, forward, flops, vocab,
+                                  input_key="tokens")
 
 
 MODELS = {"cnn": make_cnn, "resnet": make_resnet, "rnn": make_rnn}
+
+
+@register_model("cnn", modality="image")
+def _build_cnn(max_width: int, meta: Dict[str, Any], **kw) -> FLModelDef:
+    return make_cnn(max_width=max_width, num_classes=meta["num_classes"],
+                    in_ch=meta["channels"], **kw)
+
+
+@register_model("resnet", modality="image")
+def _build_resnet(max_width: int, meta: Dict[str, Any], **kw) -> FLModelDef:
+    return make_resnet(max_width=max_width, num_classes=meta["num_classes"],
+                       in_ch=meta["channels"], **kw)
+
+
+@register_model("rnn", modality="text")
+def _build_rnn(max_width: int, meta: Dict[str, Any], **kw) -> FLModelDef:
+    return make_rnn(max_width=max_width, vocab=meta["vocab"], **kw)

@@ -10,7 +10,8 @@ import numpy as np
 from repro.data import load_dataset, make_shards, partition_dataset
 from repro.fl.engine import build_engine
 from repro.fl.heterogeneity import HeterogeneityModel
-from repro.fl.models import FLModelDef, make_cnn, make_resnet, make_rnn
+from repro.fl.models import FLModelDef, get_model
+from repro.fl.transformer import make_transformer  # noqa: F401 — registers "transformer"
 from repro.fl.types import FLConfig, RoundLog
 
 
@@ -18,7 +19,8 @@ def build_setup(task: str, model_name: Optional[str] = None,
                 num_clients: int = 100, max_width: int = 3, seed: int = 0, *,
                 partitioner: Optional[str] = None, partition_kw=None,
                 data_root=None, cache_dir=None, streaming: bool = True,
-                task_kw=None, population: Optional[int] = None):
+                task_kw=None, population: Optional[int] = None,
+                model_kw=None):
     """Registry-driven setup: any dataset x any partitioner x any model.
 
     Returns the ``(model, parts_x, parts_y, test_batch)`` tuple every
@@ -56,19 +58,17 @@ def build_setup(task: str, model_name: Optional[str] = None,
                                   **(partition_kw or {}))
         parts_x, parts_y = make_shards(ds.x, ds.y, parts, streaming)
     meta = ds.metadata
-    if ds.modality == "text":
-        model = make_rnn(max_width=max_width, vocab=meta["vocab"])
-    elif model_name in (None, "cnn"):
-        model = make_cnn(max_width=max_width,
-                         num_classes=meta["num_classes"],
-                         in_ch=meta["channels"])
-    elif model_name == "resnet":
-        model = make_resnet(max_width=max_width,
-                            num_classes=meta["num_classes"],
-                            in_ch=meta["channels"])
-    else:
+    # model registry lookup (repro.fl.models): model_name=None resolves
+    # to the modality default — the historical rnn-for-text /
+    # cnn-for-image behaviour
+    if model_name is None:
+        model_name = "rnn" if ds.modality == "text" else "cnn"
+    entry = get_model(model_name)
+    if entry.modality != ds.modality:
         raise ValueError(
-            f"unknown model_name {model_name!r}; expected 'cnn' or 'resnet'")
+            f"model {model_name!r} expects {entry.modality} data but "
+            f"dataset {task!r} is {ds.modality}")
+    model = entry.build(max_width, meta, **(model_kw or {}))
     return model, parts_x, parts_y, ds.test_batch()
 
 
@@ -94,20 +94,24 @@ def build_image_setup(model_name: str = "cnn", num_clients: int = 100,
 
 def build_text_setup(num_clients: int = 100, max_width: int = 3, seed: int = 0,
                      *, task: str = "synthetic_text",
+                     model_name: Optional[str] = None,
                      partitioner: str = "natural", partition_kw=None,
                      data_root=None, cache_dir=None, streaming: bool = True,
-                     task_kw=None):
+                     task_kw=None, model_kw=None):
     """Char-LM setup as a registry lookup.
 
     The default ``natural`` partitioner groups by speaker when the
     dataset carries ids (Shakespeare) and falls back to the contiguous
     shards of the synthetic corpus — but any registered partitioner
     (``dirichlet``, ``class_skew``, ``iid``) now applies to text too.
+    ``model_name`` picks any registered text model (``"rnn"`` default,
+    ``"transformer"`` for the composed-LLM path).
     """
-    return build_setup(task, None, num_clients, max_width, seed,
+    return build_setup(task, model_name, num_clients, max_width, seed,
                        partitioner=partitioner, partition_kw=partition_kw,
                        data_root=data_root, cache_dir=cache_dir,
-                       streaming=streaming, task_kw=task_kw)
+                       streaming=streaming, task_kw=task_kw,
+                       model_kw=model_kw)
 
 
 def build_runner(scheme: str, model: FLModelDef, parts_x, parts_y, test_batch,

@@ -169,6 +169,20 @@ class FLConfig:
     #                 weights stay materialised).
     # Dense schemes (FedAvg/ADP/HeteroFL) are unaffected.
     forward_impl: str = "auto"
+    # Virtual-clock client time model: what FLOPs count a simulated
+    # device is charged per local iteration.
+    #   "dense"       (default) the materialised width-p forward+backward
+    #                 (flops_per_sample) — the historical accounting;
+    #                 keeps every recorded history bitwise.
+    #   "rank_aware"  factorized schemes charge the per-layer impl the
+    #                 client forward actually takes under forward_impl
+    #                 (apply_flops for rank-space layers, amortised
+    #                 compose + dense application otherwise) — see
+    #                 FLModelDef.apply_flops_per_sample.  Affects
+    #                 iter-time, tau planning and the Heroes mu_max
+    #                 probe; histories are versioned, not comparable to
+    #                 "dense" runs.
+    clock_model: str = "dense"
     # --- population knobs (repro.fl.population) -------------------------
     # Participation scheduler drawing each round's cohort from the
     # population: "uniform" (the legacy inline sampling, bitwise at

@@ -4,6 +4,11 @@ The decode_32k / long_500k hot-spot: memory-bound streaming of the cache
 through VMEM with an online-softmax accumulator.  Grid (BH, nk); the KV
 axis is sequential so (m, l, acc) scratch carries across tiles.  Valid
 lengths arrive via scalar prefetch (SMEM) so ragged batches mask exactly.
+
+Servers of freshly-federated models also decode through here: the
+composed-transformer serving path (``repro.fl.transformer.greedy_decode``,
+docs/TRANSFORMERS.md) keeps its per-layer KV caches in this kernel's
+(B*H, S, D) layout and calls it once per generated token.
 """
 
 from __future__ import annotations
