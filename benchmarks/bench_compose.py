@@ -13,6 +13,15 @@ Alongside the timings the static FLOPs model is recorded for every
 width: per-layer ``apply_flops`` / ``compose_flops + dense_apply_flops``
 and the model-level ratio, i.e. the number the ``auto`` knob acts on.
 
+A second, per-layer **micro** section times the fused rank-path
+primitives against their separate-ops formulations at every unique
+layer shape of cnn/resnet/rnn/transformer, per width: the fused conv
+rank apply (:mod:`repro.kernels.conv_rank`) vs the unfused basis-conv +
+contraction vs compose-then-conv, and the fused compose+apply dense
+kernel (``compose_dense_apply``) vs compose-then-matmul.  Same
+interleaved median-of-3 protocol; these are the numbers the measured
+calibration (:mod:`repro.core.calibration`) generalises from.
+
 Usage:  PYTHONPATH=src python benchmarks/bench_compose.py [--smoke]
 Writes BENCH_compose.json next to the repo root (override with --out).
 """
@@ -64,6 +73,133 @@ def flops_table(model_name: str) -> dict:
     return out
 
 
+def _make_model(name: str):
+    from repro.fl.models import MODELS
+
+    if name == "transformer":
+        from repro.fl.transformer import make_transformer
+
+        return make_transformer()
+    return MODELS[name]()
+
+
+def _median_interleaved(legs: dict, repeats: int, iters: int) -> dict:
+    """Median seconds/call per leg, legs interleaved within each repeat
+    (load drift hits every leg equally instead of the last one)."""
+    import jax
+
+    for fn in legs.values():  # compile + warm
+        jax.block_until_ready(fn())
+        jax.block_until_ready(fn())
+    times = {k: [] for k in legs}
+    for _ in range(repeats):
+        for k, fn in legs.items():
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(fn())
+            times[k].append((time.perf_counter() - t0) / iters)
+    return {k: statistics.median(v) for k, v in times.items()}
+
+
+def micro_rank_paths(model_name: str, width: int, repeats: int,
+                     iters: int) -> dict:
+    """Fused vs separate-ops rank-path primitives at this model's
+    unique layer shapes (batch 16, the engine's 8x8 reference images).
+
+    Conv layers: fused ``conv_rank_apply`` vs the unfused basis-conv +
+    contraction (``apply_factors(..., fused=False)``) vs
+    compose-then-conv.  Dense layers: fused ``compose_dense_apply`` vs
+    compose-then-matmul.  Gather layers (embeddings) and
+    materialize-pinned layers (scan recurrences) have no fused path and
+    are skipped.
+    """
+    import jax
+    import numpy as np
+    from repro.core.composition import (apply_factors, compose,
+                                        gather_blocks, init_factors)
+    from repro.kernels.compose import compose_dense_apply
+
+    model = _make_model(model_name)
+    p = width
+    dn = ("NHWC", "HWIO", "NHWC")
+    cells, seen = {}, {}
+    for idx, (name, layer) in enumerate((model.layers or {}).items()):
+        spec, hint = layer.spec, layer.hint
+        if hint.dense_apply_free or not hint.rank_capable:
+            continue
+        stride = getattr(layer, "stride", 1)
+        g = 1 if spec.mode == "grow_out" else p
+        if spec.ksq > 1:
+            sig = ("conv", spec.base_in, spec.base_out, spec.rank,
+                   spec.mode, stride)
+        else:
+            sig = ("dense", spec.base_in, spec.base_out, spec.rank,
+                   spec.mode, min(hint.apps_per_sample, 32))
+        if sig in seen:
+            seen[sig]["count"] += 1
+            continue
+        ks = jax.random.split(jax.random.PRNGKey(idx), 2)
+        v, u = init_factors(ks[0], spec)
+        red = gather_blocks(u, np.arange(spec.blocks_for_width(p)))
+        if spec.ksq > 1:
+            k = int(round(spec.ksq ** 0.5))
+            x = jax.random.normal(ks[1], (16, 8, 8, g * spec.base_in))
+            fused = jax.jit(lambda x, v, u, s=spec, st=stride: apply_factors(
+                x, v, u, p, s, "conv", stride=st))
+            unf = jax.jit(lambda x, v, u, s=spec, st=stride: apply_factors(
+                x, v, u, p, s, "conv", stride=st, fused=False))
+
+            def mat(x, v, u, s=spec, st=stride, k=k):
+                w = compose(v, u, p, s)
+                w4 = w.reshape(k, k, w.shape[1], w.shape[2])
+                return jax.lax.conv_general_dilated(
+                    x, w4, (st, st), "SAME", dimension_numbers=dn)
+
+            matf = jax.jit(mat)
+            legs = {"fused": lambda: fused(x, v, red),
+                    "unfused": lambda: unf(x, v, red),
+                    "materialize": lambda: matf(x, v, red)}
+            med = _median_interleaved(legs, repeats, iters)
+            cell = {"layer": name, "kind": "conv", "count": 1,
+                    "fused_s": med["fused"], "unfused_s": med["unfused"],
+                    "materialize_s": med["materialize"],
+                    "fused_vs_unfused": med["unfused"] / med["fused"],
+                    "fused_vs_materialize":
+                        med["materialize"] / med["fused"]}
+        else:
+            M = 16 * max(1, min(hint.apps_per_sample, 32))
+            x = jax.random.normal(ks[1], (M, g * spec.base_in))
+            fusd = jax.jit(lambda x, v, u, m=spec.mode: compose_dense_apply(
+                x, v, u, p, m))
+            sep = jax.jit(lambda x, v, u, s=spec: x @ compose(
+                v, u, p, s)[0])
+            legs = {"fused": lambda: fusd(x, v, red),
+                    "separate": lambda: sep(x, v, red)}
+            med = _median_interleaved(legs, repeats, iters)
+            cell = {"layer": name, "kind": "dense", "count": 1,
+                    "rows": M, "fused_s": med["fused"],
+                    "separate_s": med["separate"],
+                    "fused_vs_separate": med["separate"] / med["fused"]}
+        seen[sig] = cell
+        cells[name] = cell
+    conv = [c for c in cells.values() if c["kind"] == "conv"]
+    dense = [c for c in cells.values() if c["kind"] == "dense"]
+    out = {"layers": cells}
+    if conv:
+        tf = sum(c["fused_s"] * c["count"] for c in conv)
+        tu = sum(c["unfused_s"] * c["count"] for c in conv)
+        tm = sum(c["materialize_s"] * c["count"] for c in conv)
+        out["conv"] = {"fused_s": tf, "unfused_s": tu, "materialize_s": tm,
+                       "fused_vs_unfused": tu / tf,
+                       "fused_vs_materialize": tm / tf}
+    if dense:
+        tf = sum(c["fused_s"] * c["count"] for c in dense)
+        ts = sum(c["separate_s"] * c["count"] for c in dense)
+        out["dense"] = {"fused_s": tf, "separate_s": ts,
+                        "fused_vs_separate": ts / tf}
+    return out
+
+
 def bench_round(task: str, width: int, forward_impl: str, rounds: int,
                 warmup: int) -> float:
     """Per-round cohort time with every client pinned to ``width``."""
@@ -102,11 +238,28 @@ def main() -> None:
     repeats = 1 if args.smoke else 3
     rounds = 2 if args.smoke else 5
     warmup = 2
+    widths = (3,) if args.smoke else (1, 2, 3)
+    micro_iters = 5 if args.smoke else 50
 
     results = {}
+    for task in ("cnn", "resnet", "rnn", "transformer"):
+        results[task] = {"micro": {}}
+        for width in widths:
+            cell = micro_rank_paths(task, width, repeats, micro_iters)
+            results[task]["micro"][f"width_{width}"] = cell
+            bits = []
+            if "conv" in cell:
+                bits.append(f"conv fused vs unfused "
+                            f"{cell['conv']['fused_vs_unfused']:.2f}x, "
+                            f"vs materialize "
+                            f"{cell['conv']['fused_vs_materialize']:.2f}x")
+            if "dense" in cell:
+                bits.append(f"dense fused vs separate "
+                            f"{cell['dense']['fused_vs_separate']:.2f}x")
+            print(f"{task} width {width} micro: " + "   ".join(bits))
+
     for task in ("cnn", "rnn"):
-        results[task] = {"flops": flops_table(task)}
-        widths = (3,) if args.smoke else (1, 2, 3)
+        results[task]["flops"] = flops_table(task)
         for width in widths:
             times = {"materialize": [], "rank_space": []}
             for _ in range(repeats):
@@ -141,7 +294,10 @@ def main() -> None:
                   "trainer": "cohort",
                   "note": "uniform-tier network pins every client to the "
                           "target width; flops tables use the static "
-                          "model the auto knob reads"},
+                          "model the auto knob reads; micro cells time "
+                          "the fused rank-path primitives vs their "
+                          "separate-ops formulations per unique layer "
+                          "shape (batch 16, 8x8 reference images)"},
         "provenance": common.provenance(),
         "results": results,
     }

@@ -232,7 +232,7 @@ def _coeff_blocks(reduced_coeff: Array, p: int, spec: CompositionSpec) -> Array:
 
 def apply_factors(x: Array, basis: Array, reduced_coeff: Array, p: int,
                   spec: CompositionSpec, mode: str = "dense", *,
-                  stride: int = 1) -> Array:
+                  stride: int = 1, fused: bool = True) -> Array:
     """Apply the factorized weight to ``x`` *without materialising it*.
 
     Exploits ``w = v·û``: instead of composing the ``(ksq, pI, pO)``
@@ -256,6 +256,11 @@ def apply_factors(x: Array, basis: Array, reduced_coeff: Array, p: int,
         I→R per input group followed by a 1×1 coefficient contraction
         R→pO, the paper's block reshape folded into the contraction).
       stride: conv stride (``mode="conv"`` only).
+      fused: ``mode="conv"`` only — route through the fused
+        :func:`repro.kernels.conv_rank.conv_rank_apply` primitive (one
+        kernel/formulation, rank intermediate never in HBM, rank-space
+        backward).  ``False`` keeps the unfused separate-ops XLA body
+        below, retained as the benchmark/parity reference.
 
     Returns:
       exactly what ``x @ compose(...)`` / ``conv(x, compose(...))``
@@ -273,10 +278,18 @@ def apply_factors(x: Array, basis: Array, reduced_coeff: Array, p: int,
         return rank_dense_apply(x, basis, reduced_coeff, p, spec.mode)
     if mode != "conv":
         raise ValueError(f"unknown apply mode {mode!r}")
-    u = _coeff_blocks(reduced_coeff, p, spec)
     k = int(round(spec.ksq ** 0.5))
     if k * k != spec.ksq:
         raise ValueError(f"conv apply needs square ksq, got {spec.ksq}")
+    if fused:
+        _coeff_blocks(reduced_coeff, p, spec)  # validates the block count
+        from repro.kernels.conv_rank import conv_rank_apply
+
+        return conv_rank_apply(x, basis, reduced_coeff, p, spec.mode,
+                               stride=stride)
+    # Unfused separate-ops reference: basis conv, then an einsum
+    # contraction over the (N, g, Ho, Wo, R) rank intermediate.
+    u = _coeff_blocks(reduced_coeff, p, spec)
     vk = basis.reshape(k, k, spec.base_in, spec.rank)
     dn = ("NHWC", "HWIO", "NHWC")
     if spec.mode == "grow_out":
@@ -360,17 +373,24 @@ def rank_space_wins(p: int, spec: CompositionSpec, *, applications: int,
     return overhead * rank < compose_flops(p, spec) + dense
 
 
-def conv_rank_overhead() -> float:
-    """Effective cost multiplier of the conv rank path on this platform.
+def conv_rank_overhead(calibration=None) -> float:
+    """Effective cost multiplier of the conv rank path on this host.
 
-    On accelerator backends the basis-conv + 1×1 contraction is
-    FLOPs-bound (multiplier 1).  On CPU hosts the extra ops (group
-    batching transposes, the second contraction) dominate the tiny
-    per-channel convs: BENCH_compose measures the rank path ~2.7x more
-    expensive than its FLOPs count at the benchmark shapes, so ``auto``
-    only picks it there when the FLOPs advantage clears that bar.
+    Formerly a hardcoded platform constant (3.0 on CPU — calibrated
+    against the *unfused* separate-ops rank path, which disabled the
+    conv rank path everywhere on CPU including shapes where it wins).
+    Now the fused :mod:`repro.kernels.conv_rank` primitive is measured
+    directly: the value comes from the per-process micro-calibration in
+    :mod:`repro.core.calibration` (or an ``FLConfig`` override threaded
+    through as ``calibration``), so ``auto`` enables the conv rank path
+    exactly where this host's measurement says it is faster,
+    extrapolated by FLOPs elsewhere.
     """
-    return 1.0 if jax.default_backend() in ("tpu", "gpu") else 3.0
+    if calibration is not None:
+        return float(calibration.conv_rank_overhead)
+    from repro.core.calibration import get_calibration
+
+    return float(get_calibration().conv_rank_overhead)
 
 
 def decompose(

@@ -41,13 +41,17 @@ def _ce(logits: Array, labels: Array) -> Array:
 
 @functools.lru_cache(maxsize=64)
 def _jitted_fns(model: FLModelDef, width: int, factorized: bool,
-                forward_impl: str = "auto"):
+                forward_impl: str = "auto", calibration=None):
     # Keyed on the model *instance* (FLModelDef hashes by identity): the
     # old string registry key dropped constructor kwargs that are not part
     # of the encoding (e.g. ``in_ch``), silently training the wrong model.
+    # ``calibration`` (a frozen RankPathCalibration, or None = the
+    # per-process measurement) joins the key so two configs with
+    # different cost-model overrides never share impl choices.
 
     def loss_fn(params, batch):
-        w = (model.prepare_weights(params, width, batch, forward_impl)
+        w = (model.prepare_weights(params, width, batch, forward_impl,
+                                   calibration)
              if factorized else {k: v for k, v in params.items()})
         logits = model.forward(w, width, batch)
         return _ce(logits, batch["labels"])
@@ -93,17 +97,19 @@ def local_train(
     factorized: bool = True,
     estimate: bool = True,
     forward_impl: str = "auto",
+    calibration=None,
 ) -> ClientResult:
     """tau local SGD iterations (Alg. 2 lines 4-9).
 
     ``forward_impl`` selects the factorized compute path (see
     ``FLConfig.forward_impl``): ``"materialize"`` reproduces the
     historical compose-then-apply updates bitwise; ``"auto"`` (default)
-    applies factors in rank space wherever the static FLOPs model says
-    it is cheaper.  Ignored when ``factorized=False``.
+    applies factors in rank space wherever the measured cost model says
+    it is cheaper (``calibration`` carries an FLConfig override; None =
+    the per-process measurement).  Ignored when ``factorized=False``.
     """
     loss_jit, grad_fn, sgd_step = _jitted_fns(model, width, factorized,
-                                              forward_impl)
+                                              forward_impl, calibration)
     params0 = reduced_params
     params = params0
     n = len(y)

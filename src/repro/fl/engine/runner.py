@@ -182,8 +182,11 @@ class EngineRunner:
         round loops AND the Heroes mu_max probe route through here.
         """
         if self.cfg.clock_model == "rank_aware" and self.factorized:
+            from repro.core.calibration import for_dispatch
+
             per_sample = self.model.apply_flops_per_sample(
-                width, self.cfg.batch_size, self.cfg.forward_impl)
+                width, self.cfg.batch_size, self.cfg.forward_impl,
+                calibration=for_dispatch(self.cfg))
             return per_sample * self.cfg.batch_size
         return self.model.flops_per_sample(width) * self.cfg.batch_size
 

@@ -50,6 +50,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding
 
 from repro.core import estimator
+from repro.core.calibration import for_dispatch
 from repro.data.streaming import round_batch_indices, stack_client_shards
 from repro.fl import client as client_lib
 from repro.fl.client import ClientResult
@@ -92,6 +93,7 @@ class SequentialTrainer(LocalTrainer):
                   ) -> Dict[int, ClientResult]:
         eng = self.eng
         obs = eng.obs
+        cal = for_dispatch(eng.cfg)
         out = {}
         for n, a in assigns.items():
             params = eng.aggregator.client_params(state, n, a)
@@ -101,7 +103,7 @@ class SequentialTrainer(LocalTrainer):
                 # cached — this lookup is the one local_train makes)
                 _, _, sgd_step = client_lib._jitted_fns(
                     eng.model, a["width"], eng.factorized,
-                    eng.cfg.forward_impl)
+                    eng.cfg.forward_impl, cal)
                 before = _cache_size(sgd_step)
             with obs.wall_span("trainer.local_train", client=int(n),
                                width=int(a["width"]), tau=int(a["tau"])):
@@ -112,6 +114,7 @@ class SequentialTrainer(LocalTrainer):
                     eng.cfg.batch_size, factorized=eng.factorized,
                     estimate=eng.estimate,
                     forward_impl=eng.cfg.forward_impl,
+                    calibration=cal,
                 )
             if obs.enabled:
                 _count_recompiles(obs, sgd_step, before,
@@ -124,7 +127,7 @@ class SequentialTrainer(LocalTrainer):
 
 @functools.lru_cache(maxsize=32)
 def _cohort_fns(model: FLModelDef, width: int, factorized: bool, mesh=None,
-                forward_impl: str = "auto"):
+                forward_impl: str = "auto", calibration=None):
     """Compiled cohort functions, keyed on the model instance identity.
 
     With ``mesh`` (a 1-D cohort mesh from :func:`repro.sharding.fl.
@@ -143,7 +146,8 @@ def _cohort_fns(model: FLModelDef, width: int, factorized: bool, mesh=None,
     path in the ONE compiled call."""
 
     def loss_fn(params, batch):
-        w = (model.prepare_weights(params, width, batch, forward_impl)
+        w = (model.prepare_weights(params, width, batch, forward_impl,
+                                   calibration)
              if factorized else {k: v for k, v in params.items()})
         logits = model.forward(w, width, batch)
         return client_lib._ce(logits, batch["labels"])
@@ -364,7 +368,7 @@ class CohortTrainer(LocalTrainer):
 
         train_fn, est_fn = _cohort_fns(
             model, width, eng.factorized, mesh,
-            cfg.forward_impl)
+            cfg.forward_impl, for_dispatch(cfg))
         obs = eng.obs
         before = _cache_size(train_fn) if obs.enabled else None
         # (tau_pad, C', B, ...) per host chunk — the compiled signature
@@ -417,11 +421,12 @@ class CohortTrainer(LocalTrainer):
 
 @functools.lru_cache(maxsize=32)
 def _prox_fns(model: FLModelDef, width: int, factorized: bool,
-              forward_impl: str = "auto"):
+              forward_impl: str = "auto", calibration=None):
     """Compiled FedProx step/loss/grad, keyed on the model instance."""
 
     def loss_fn(params, batch):
-        w = (model.prepare_weights(params, width, batch, forward_impl)
+        w = (model.prepare_weights(params, width, batch, forward_impl,
+                                   calibration)
              if factorized else {k: v for k, v in params.items()})
         logits = model.forward(w, width, batch)
         return client_lib._ce(logits, batch["labels"])
@@ -463,10 +468,11 @@ class ProximalTrainer(LocalTrainer):
         mu = cfg.prox_mu if self._mu is None else self._mu
         xkey = eng.model.input_key
         out: Dict[int, ClientResult] = {}
+        cal = for_dispatch(cfg)
         for n, a in assigns.items():
             loss_fn, grad_fn, prox_step = _prox_fns(
                 eng.model, a["width"], eng.factorized,
-                cfg.forward_impl)
+                cfg.forward_impl, cal)
             before = _cache_size(prox_step) if obs.enabled else None
             with obs.wall_span("trainer.local_train", client=int(n),
                                width=int(a["width"]), tau=int(a["tau"])):

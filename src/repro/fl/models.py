@@ -23,7 +23,14 @@ from reduced factors under a ``forward_impl`` knob:
   rank_space   keep factors for every rank-capable layer;
   auto         pick per (layer, width, batch) by the static FLOPs model
                (``apply_flops`` vs ``compose_flops + dense_apply_flops``),
-               with per-layer reuse folded into the application count.
+               with per-layer reuse folded into the application count and
+               the measured per-host calibration
+               (:mod:`repro.core.calibration`) supplying the overheads
+               FLOPs cannot see.  Layers that stay weight-shaped may
+               still get the internal ``fused_compose`` impl — the
+               compose+apply fusion of ``compose_dense_apply`` — when
+               the measured gain says it is cheaper than
+               compose-then-matmul.
 
 The per-layer apply/compose/FLOPs/hint bundle is the reusable
 :class:`ComposedLayer`; model definitions assemble layers with
@@ -215,8 +222,10 @@ class FLModelDef:
         }
 
     def layer_impls(self, width: int, batch_size: int, forward_impl: str,
-                    data_shape: Optional[tuple] = None) -> Dict[str, str]:
-        """Per-layer materialize/rank_space choice (static, per trace).
+                    data_shape: Optional[tuple] = None,
+                    calibration=None) -> Dict[str, str]:
+        """Per-layer materialize/rank_space/fused_compose choice (static,
+        per trace).
 
         ``auto`` compares, per layer, the rank-space application cost
         against compose + dense application over the layer's total
@@ -226,12 +235,29 @@ class FLModelDef:
         (the input array's shape) lets hints derive true application
         counts from the traced geometry instead of the model's
         reference input size.
+
+        The overheads the FLOPs model cannot see come from the measured
+        per-process calibration (:mod:`repro.core.calibration`), or the
+        ``calibration`` argument when the engine threads an ``FLConfig``
+        override through.  Two consequences beyond the binary choice:
+        conv layers use the *measured* ``conv_rank_overhead`` (the fused
+        :mod:`repro.kernels.conv_rank` path wins on CPU at high
+        FLOPs-ratio shapes, so ``auto`` now enables it there), and a
+        rank-capable dense layer that still loses to materialisation is
+        labelled ``"fused_compose"`` when the measured
+        ``fused_compose_gain < 1`` — same math as materialize, but the
+        p-width weight is built and consumed inside one kernel
+        (``compose_dense_apply``) instead of round-tripping HBM.
         """
         if forward_impl not in FORWARD_IMPLS:
             raise ValueError(f"unknown forward_impl {forward_impl!r} "
                              f"(expected one of {FORWARD_IMPLS})")
         if forward_impl == "materialize":
             return {name: "materialize" for name in self.specs}
+        if forward_impl == "auto" and calibration is None:
+            from repro.core.calibration import get_calibration
+
+            calibration = get_calibration()
         hints = self.hints or {}
         out = {}
         for name, spec in self.specs.items():
@@ -242,28 +268,35 @@ class FLModelDef:
                 out[name] = "rank_space"
             else:
                 apps = max(batch_size, 1) * hint.apps(data_shape)
-                # conv layers pay platform-dependent overhead beyond
-                # their FLOPs count (group-batched conv + second
-                # contraction) — on CPU hosts that eats a ~2x FLOPs
-                # advantage, on accelerators it doesn't
-                ovh = conv_rank_overhead() if spec.ksq > 1 else 1.0
-                out[name] = "rank_space" if rank_space_wins(
-                    width, spec, applications=apps,
-                    dense_apply_free=hint.dense_apply_free,
-                    basis_is_gather=hint.basis_gather,
-                    overhead=ovh) else "materialize"
+                ovh = (conv_rank_overhead(calibration)
+                       if spec.ksq > 1 else 1.0)
+                if rank_space_wins(
+                        width, spec, applications=apps,
+                        dense_apply_free=hint.dense_apply_free,
+                        basis_is_gather=hint.basis_gather,
+                        overhead=ovh):
+                    out[name] = "rank_space"
+                elif (spec.ksq == 1 and not hint.dense_apply_free
+                      and calibration.fused_compose_gain < 1.0):
+                    out[name] = "fused_compose"
+                else:
+                    out[name] = "materialize"
         return out
 
     def prepare_weights(self, reduced, width: int, batch,
-                        forward_impl: str = "materialize") -> Dict[str, Any]:
+                        forward_impl: str = "materialize",
+                        calibration=None) -> Dict[str, Any]:
         """The weight dict ``forward`` consumes, per ``forward_impl``.
 
         ``materialize`` is exactly :meth:`compose_all` (the bitwise
         reference path).  Otherwise rank-space layers pass their raw
         ``{"basis", "coeff"}`` factors through untouched — the forward
-        applies them via rank-space contractions — and the rest compose
-        as usual.  The choice keys on static shapes only, so it is
-        jit-cache-stable per (width, batch shape).
+        applies them via rank-space contractions — ``fused_compose``
+        layers pass the factors with a static ``"fused"`` marker (the
+        forward routes them through ``compose_dense_apply``), and the
+        rest compose as usual.  The choice keys on static shapes and
+        the (hashable) calibration only, so it is jit-cache-stable per
+        (width, batch shape, calibration).
         """
         if forward_impl == "materialize":
             return self.compose_all(reduced, width)
@@ -271,28 +304,36 @@ class FLModelDef:
                 if isinstance(batch, dict) else None)
         shape = tuple(data.shape) if data is not None else None
         batch_size = shape[0] if shape else 1
-        impls = self.layer_impls(width, batch_size, forward_impl, shape)
-        return {
-            name: (reduced[name] if impls[name] == "rank_space" else
-                   compose(reduced[name]["basis"], reduced[name]["coeff"],
-                           width, spec))
-            for name, spec in self.specs.items()
-        }
+        impls = self.layer_impls(width, batch_size, forward_impl, shape,
+                                 calibration)
+        out = {}
+        for name, spec in self.specs.items():
+            if impls[name] == "rank_space":
+                out[name] = reduced[name]
+            elif impls[name] == "fused_compose":
+                out[name] = {**reduced[name], "fused": True}
+            else:
+                out[name] = compose(reduced[name]["basis"],
+                                    reduced[name]["coeff"], width, spec)
+        return out
 
     def apply_flops_per_sample(self, width: int, batch_size: int,
                                forward_impl: str,
-                               data_shape: Optional[tuple] = None) -> float:
+                               data_shape: Optional[tuple] = None,
+                               calibration=None) -> float:
         """Per-sample fwd+bwd FLOPs under the per-layer impl the client
         forward actually takes (the ``clock_model="rank_aware"`` time
         model).
 
         Rank-space layers charge :func:`apply_flops`; materialised
-        layers charge their one-off ``compose`` amortised over the
-        batch plus the dense application (free for embedding gathers).
-        Backward ~ 2x forward, so the total is 3x — the same convention
-        the dense ``flops_per_sample`` tables use.
+        layers — including ``fused_compose`` ones, whose fusion saves
+        memory traffic, not FLOPs — charge their one-off ``compose``
+        amortised over the batch plus the dense application (free for
+        embedding gathers).  Backward ~ 2x forward, so the total is 3x
+        — the same convention the dense ``flops_per_sample`` tables use.
         """
-        impls = self.layer_impls(width, batch_size, forward_impl, data_shape)
+        impls = self.layer_impls(width, batch_size, forward_impl, data_shape,
+                                 calibration)
         hints = self.hints or {}
         bs = max(int(batch_size), 1)
         total = 0.0
@@ -405,6 +446,15 @@ def _apply_conv(entry, x: Array, width: int, spec: CompositionSpec,
 
 def _apply_dense(entry, x: Array, width: int, spec: CompositionSpec) -> Array:
     if isinstance(entry, dict):
+        if entry.get("fused"):
+            # "fused_compose" impl: materialize-path math, but the
+            # p-width weight is built and consumed inside one kernel
+            # (the marker is a static Python bool prepare_weights sets
+            # at trace time, so this branch is trace-static too)
+            from repro.kernels.compose import compose_dense_apply
+
+            return compose_dense_apply(x, entry["basis"], entry["coeff"],
+                                       width, spec.mode)
         return apply_factors(x, entry["basis"], entry["coeff"], width, spec,
                              "dense")
     return x @ entry[0]

@@ -169,6 +169,19 @@ class FLConfig:
     #                 weights stay materialised).
     # Dense schemes (FedAvg/ADP/HeteroFL) are unaffected.
     forward_impl: str = "auto"
+    # Rank-path cost-model calibration overrides (forward_impl="auto"
+    # and clock_model="rank_aware" only).  0.0 (default) = measure once
+    # per process (repro.core.calibration micro-benchmarks the fused
+    # kernels at representative engine shapes); > 0 pins the knob —
+    # deterministic CI, cross-host reproducibility, what-if studies.
+    #   conv_rank_overhead  effective cost multiplier of the fused conv
+    #                       rank path relative to its FLOPs count
+    #   fused_compose_gain  fused compose+apply time over separate
+    #                       compose-then-matmul; < 1 lets "auto" route
+    #                       weight-shaped dense layers through the
+    #                       fused kernel
+    conv_rank_overhead: float = 0.0
+    fused_compose_gain: float = 0.0
     # Virtual-clock client time model: what FLOPs count a simulated
     # device is charged per local iteration.
     #   "dense"       (default) the materialised width-p forward+backward

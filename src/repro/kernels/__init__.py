@@ -3,17 +3,32 @@ platform-gated (compiled on TPU, interpret where Pallas lacks a
 compiled lowering for these kernel bodies — see
 ``repro.kernels.compose.default_interpret``):
 
-  compose           the paper's neural-composition product (Eq. 4),
-                    batched over an optional leading client axis
-  rank_dense_apply  fused rank-space factor application with a
-                    rank-space custom_vjp backward
-  flash_attention   blockwise streaming-softmax attention (prefill/train)
-  decode_attention  one-token GQA over a long KV cache (decode shapes)
-  ssd_chunk         Mamba2 SSD intra-chunk block (SSM/hybrid archs)
-  rmsnorm           fused row-tiled normalisation
+  compose             the paper's neural-composition product (Eq. 4),
+                      batched over an optional leading client axis
+  rank_dense_apply    fused rank-space factor application with a
+                      rank-space custom_vjp backward
+  conv_rank_apply     fused conv rank path: basis conv (I→R) +
+                      coefficient contraction (R→pO) in one kernel,
+                      rank-space backward; on CPU/GPU the forward is an
+                      equivalent fused XLA formulation
+  compose_dense_apply compose+apply fusion for materialize-path dense
+                      layers — the p-width weight is built in
+                      VMEM/registers and consumed in the same kernel
+  flash_attention     blockwise streaming-softmax attention (prefill/train)
+  decode_attention    one-token GQA over a long KV cache (decode shapes)
+  ssd_chunk           Mamba2 SSD intra-chunk block (SSM/hybrid archs)
+  rmsnorm             fused row-tiled normalisation
 
 ``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles the
 sweep tests assert against (tests/test_kernels.py).
+
+Audit note: every kernel above is either on an engine hot path
+(compose / rank_dense_apply / conv_rank_apply / compose_dense_apply via
+``forward_impl`` dispatch, flash/decode attention via the transformer
+train + serve stacks) or a tested reference implementation kept for the
+model zoo (ssd_chunk, rmsnorm — ``repro.models`` currently uses plain
+jnp formulations at its small shapes; the kernels stay oracle-verified
+so swapping them in is a one-line change when shapes grow).
 """
 
 from repro.kernels import ops, ref  # noqa: F401

@@ -24,6 +24,20 @@ Two primitives back the factorized client compute:
     the CPU path; on compiled-Pallas backends the forward runs as one
     fused kernel (the rank-R intermediate lives in VMEM, never HBM).
 
+``compose_dense_apply``
+    compose+apply fusion for layers the cost model keeps on the
+    *materialize* path (rank-space loses when ``R ≥ O/p``, e.g. the
+    classifier heads): the per-group weights ``W_a = v · û_a`` are
+    built inside the kernel (VMEM/registers) and contracted against the
+    matching input group in the same invocation, so the p-width weight
+    never reaches HBM even though the math is weight-shaped.  Shares
+    the rank-space custom_vjp backward with ``rank_dense_apply`` — the
+    two primitives compute the same function, they just associate the
+    forward differently.
+
+The conv-path sibling (fused basis conv + coefficient contraction)
+lives in :mod:`repro.kernels.conv_rank`.
+
 Platform gating: kernels compile on TPU and fall back to
 ``interpret=True`` everywhere Pallas lacks a compiled lowering for
 *these* kernels — CPU hosts, and (for now) GPU: the block shapes and
@@ -272,6 +286,35 @@ def _u2_layout(u: Array, p: int, mode: str) -> Array:
     return jnp.transpose(u4, (0, 2, 1, 3)).reshape(p * R, p * O)
 
 
+def _rank_space_bwd(p: int, mode: str, res, dy):
+    """Shared rank-space backward for ``rank_dense_apply`` and
+    ``compose_dense_apply`` (same function, different forward
+    associations).  Residual: ``(x2, v2, u, t)`` with ``t`` the rank
+    intermediate; every contraction routes through the R bottleneck, so
+    neither primitive's backward builds the p-width weight."""
+    x2, v2, u, t = res
+    R, O = u.shape[-2], u.shape[-1]
+    if mode == "grow_out":
+        dyr = dy.reshape(dy.shape[0], p, O)
+        dt = jnp.einsum("mbo,bro->mr", dyr, u)
+        dx = dt @ v2.T
+        dv2 = x2.T @ dt
+        du = jnp.einsum("mr,mbo->bro", t, dyr)
+        return dx, dv2, du
+    xr = x2.reshape(x2.shape[0], p, -1)
+    if mode == "grow_in":
+        dt = jnp.einsum("mo,aro->mar", dy, u)
+        du = jnp.einsum("mar,mo->aro", t, dy)
+    else:
+        u4 = u.reshape(p, p, R, O)
+        dyr = dy.reshape(dy.shape[0], p, O)
+        dt = jnp.einsum("mbo,abro->mar", dyr, u4)
+        du = jnp.einsum("mar,mbo->abro", t, dyr).reshape(p * p, R, O)
+    dx = jnp.einsum("mar,ir->mai", dt, v2).reshape(x2.shape)
+    dv2 = jnp.einsum("mai,mar->ir", xr, dt)
+    return dx, dv2, du
+
+
 @functools.lru_cache(maxsize=None)
 def _rank_dense_fn(p: int, mode: str, use_kernel: bool,
                    kernel_interpret: bool = False):
@@ -318,27 +361,7 @@ def _rank_dense_fn(p: int, mode: str, use_kernel: bool,
         return y, (x2, v2, u, t)
 
     def bwd(res, dy):
-        x2, v2, u, t = res
-        R, O = u.shape[-2], u.shape[-1]
-        if mode == "grow_out":
-            dyr = dy.reshape(dy.shape[0], p, O)
-            dt = jnp.einsum("mbo,bro->mr", dyr, u)
-            dx = dt @ v2.T
-            dv2 = x2.T @ dt
-            du = jnp.einsum("mr,mbo->bro", t, dyr)
-            return dx, dv2, du
-        xr = x2.reshape(x2.shape[0], p, -1)
-        if mode == "grow_in":
-            dt = jnp.einsum("mo,aro->mar", dy, u)
-            du = jnp.einsum("mar,mo->aro", t, dy)
-        else:
-            u4 = u.reshape(p, p, R, O)
-            dyr = dy.reshape(dy.shape[0], p, O)
-            dt = jnp.einsum("mbo,abro->mar", dyr, u4)
-            du = jnp.einsum("mar,mbo->abro", t, dyr).reshape(p * p, R, O)
-        dx = jnp.einsum("mar,ir->mai", dt, v2).reshape(x2.shape)
-        dv2 = jnp.einsum("mai,mar->ir", xr, dt)
-        return dx, dv2, du
+        return _rank_space_bwd(p, mode, res, dy)
 
     apply.defvjp(fwd, bwd)
     return apply
@@ -361,5 +384,137 @@ def rank_dense_apply(x: Array, basis: Array, reduced_coeff: Array, p: int,
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     fn = _rank_dense_fn(p, mode, not default_interpret())
+    y2 = fn(x2, basis[0], reduced_coeff)
+    return y2.reshape(lead + (y2.shape[-1],))
+
+
+# ---------------------------------------------------------------------------
+# fused compose+apply: y = x · (v · û), weight built in VMEM
+# ---------------------------------------------------------------------------
+
+
+def _compose_apply_kernel(x_ref, v_ref, u_ref, o_ref):
+    # x_ref (bm, g, I), v_ref (I, R), u_ref (g, R, D) -> o_ref (bm, D)
+    bm, g, I = x_ref.shape
+    D = u_ref.shape[2]
+    acc = jnp.zeros((bm, D), jnp.float32)
+    for a in range(g):
+        w = jnp.dot(v_ref[...], u_ref[a],
+                    preferred_element_type=jnp.float32).astype(x_ref.dtype)
+        acc = acc + jnp.dot(x_ref[:, a, :], w,
+                            preferred_element_type=jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def compose_apply_pallas(xg: Array, v2: Array, u3: Array, *,
+                         block_m: int = 256,
+                         interpret: bool | None = None) -> Array:
+    """Fused compose+apply: xg (M, g, I) x v2 (I, R) x u3 (g, R, D)
+    -> (M, D).
+
+    Per input group ``a`` the kernel builds ``W_a = v2 @ u3[a]`` (an
+    ``(I, D)`` tile, VMEM-resident) and accumulates ``xg[:, a] @ W_a``
+    — the composed p-width weight exists only one group-slice at a
+    time, on-chip.  ``u3`` is the :func:`_u2_layout` matrix reshaped to
+    ``(g, R, D)``.  ``interpret=None`` resolves via
+    :func:`default_interpret`.
+    """
+    interpret = _resolve(interpret)
+    M, g, I = xg.shape
+    D = u3.shape[2]
+    bm = min(block_m, M)
+    Mp = -(-M // bm) * bm
+    xp = jnp.pad(xg, ((0, Mp - M), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _compose_apply_kernel,
+        grid=(Mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, g, I), lambda i: (i, 0, 0)),
+            pl.BlockSpec((I, v2.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec(u3.shape, lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, D), xg.dtype),
+        interpret=interpret,
+    )(xp, v2, u3)
+    return out[:M]
+
+
+def _compose_apply_math(x2: Array, v2: Array, u: Array, p: int,
+                        mode: str) -> Array:
+    """Fused XLA formulation: per-group weights as one batched einsum,
+    then one grouped contraction — the CPU/GPU production forward
+    (measured faster than compose-then-matmul at engine head shapes)."""
+    g = 1 if mode == "grow_out" else p
+    u3 = _u2_layout(u, p, mode).reshape(g, u.shape[-2], -1)
+    w = jnp.einsum("ir,arj->aij", v2, u3)
+    xg = x2.reshape(x2.shape[0], g, -1)
+    return jnp.einsum("nai,aij->nj", xg, w)
+
+
+@functools.lru_cache(maxsize=None)
+def _compose_dense_fn(p: int, mode: str, use_kernel: bool,
+                      kernel_interpret: bool = False):
+    """custom_vjp fused compose+apply, cached per (width, mode).
+
+    Same function as ``_rank_dense_fn`` with the forward associated the
+    other way: ``x · (v·û)`` instead of ``(x·v)·û`` — the right
+    association when the layer applies its weight to few rows (the cost
+    model's materialize regime).  The backward is the identical shared
+    rank-space VJP (:func:`_rank_space_bwd`): gradients don't care
+    which way the forward associated, and rank space is always the
+    cheaper side there.
+    """
+
+    def _run(x2, v2, u):
+        if use_kernel:
+            g = 1 if mode == "grow_out" else p
+            xg = x2.reshape(x2.shape[0], g, -1)
+            u3 = _u2_layout(u, p, mode).reshape(g, u.shape[-2], -1)
+            return compose_apply_pallas(xg, v2, u3,
+                                        interpret=kernel_interpret)
+        return _compose_apply_math(x2, v2, u, p, mode)
+
+    @jax.custom_vjp
+    def apply(x2, v2, u):
+        return _run(x2, v2, u)
+
+    def fwd(x2, v2, u):
+        y = _run(x2, v2, u)
+        g = 1 if mode == "grow_out" else p
+        xg = x2.reshape(x2.shape[0], g, -1)
+        # rank-space residual for the shared backward, recomputed
+        # cheaply (M·g·I·R MACs) — never the composed weight
+        t = jnp.einsum("mgi,ir->mgr", xg, v2)
+        t = t[:, 0] if mode == "grow_out" else t
+        return y, (x2, v2, u, t)
+
+    def bwd(res, dy):
+        return _rank_space_bwd(p, mode, res, dy)
+
+    apply.defvjp(fwd, bwd)
+    return apply
+
+
+def compose_dense_apply(x: Array, basis: Array, reduced_coeff: Array,
+                        p: int, mode: str = "square") -> Array:
+    """Fused compose+apply dense application (materialize-path fusion).
+
+    Args:
+      x: ``(..., pI_total)`` row vectors.
+      basis: ``(1, I, R)`` (dense layers have ``ksq == 1``).
+      reduced_coeff: ``(m, R, O)`` gathered blocks.
+      p: target width; ``mode``: the spec's square/grow_out/grow_in.
+
+    Returns ``(..., pO_total)`` — exactly what ``x @ compose(...)``
+    returns up to float re-association, with the composed weight living
+    only in VMEM/registers in the forward and a rank-space backward.
+    Used by ``auto`` dispatch when the measured
+    ``fused_compose_gain < 1`` (see :mod:`repro.core.calibration`).
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    fn = _compose_dense_fn(p, mode, not default_interpret())
     y2 = fn(x2, basis[0], reduced_coeff)
     return y2.reshape(lead + (y2.shape[-1],))

@@ -1,9 +1,11 @@
 """Jitted public wrappers over the Pallas kernels.
 
-Each op accepts the model-layer layouts used by :mod:`repro.models` and
-dispatches to the Pallas kernel (``interpret=True`` on CPU — the kernel
-body executes in Python; on TPU set ``interpret=False``).  Oracles live
-in :mod:`repro.kernels.ref`.
+Each op accepts the model-layer layouts used by :mod:`repro.models` /
+:mod:`repro.fl.models` and dispatches to the Pallas kernel.  Every
+``interpret`` argument defaults to ``None`` and resolves through the
+platform gate (:func:`repro.kernels.compose.default_interpret`:
+compiled on TPU, interpret elsewhere).  Oracles live in
+:mod:`repro.kernels.ref`.
 """
 
 from __future__ import annotations
@@ -11,9 +13,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.compose import compose_pallas
+from repro.kernels.compose import (compose_dense_apply, compose_pallas,
+                                   default_interpret, rank_dense_apply)
+from repro.kernels.conv_rank import conv_rank_apply
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+
+__all__ = [
+    "compose", "rank_dense_apply", "conv_rank_apply", "compose_dense_apply",
+    "flash_attention", "decode_attention", "ssd_chunk", "rmsnorm",
+]
 
 Array = jax.Array
 
@@ -29,9 +38,17 @@ def compose(basis: Array, coeff: Array, *, interpret: bool | None = None) -> Arr
     return compose_pallas(basis, coeff, interpret=interpret)
 
 
+# rank_dense_apply / conv_rank_apply / compose_dense_apply are re-exported
+# directly: their public signatures already speak the model-layer layout
+# (basis (ksq, I, R), gathered coefficient blocks (m, R, O)) and carry
+# their own custom_vjp + platform gating.
+
+
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
-                    window: int = 0, interpret: bool = True) -> Array:
+                    window: int = 0, interpret: bool | None = None) -> Array:
     """Model layout: q (B, S, KV, G, D), k/v (B, S, KV, D)."""
+    if interpret is None:
+        interpret = default_interpret()
     B, S, KV, G, D = q.shape
     qf = jnp.transpose(q, (0, 2, 3, 1, 4)).reshape(B * KV * G, S, D)
     kf = jnp.transpose(k, (0, 2, 1, 3)).reshape(B * KV, S, D)
@@ -42,8 +59,10 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
 
 
 def decode_attention(q: Array, k_cache: Array, v_cache: Array,
-                     lengths: Array, *, interpret: bool = True) -> Array:
+                     lengths: Array, *, interpret: bool | None = None) -> Array:
     """Model layout: q (B, 1, KV, G, D), caches (B, S, KV, D), lengths (B,)."""
+    if interpret is None:
+        interpret = default_interpret()
     B, _, KV, G, D = q.shape
     S = k_cache.shape[1]
     qf = q[:, 0].reshape(B * KV * G, D)
@@ -56,16 +75,20 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array,
 
 
 def ssd_chunk(cb: Array, bb: Array, xw: Array, cum: Array, h_in: Array,
-              *, interpret: bool = True) -> Array:
+              *, interpret: bool | None = None) -> Array:
     """Mamba2 SSD intra-chunk block (see kernels/ssd_chunk.py)."""
     from repro.kernels.ssd_chunk import ssd_chunk_pallas
 
+    if interpret is None:
+        interpret = default_interpret()
     return ssd_chunk_pallas(cb, bb, xw, cum, h_in, interpret=interpret)
 
 
 def rmsnorm(x: Array, scale: Array, *, eps: float = 1e-6,
-            interpret: bool = True) -> Array:
+            interpret: bool | None = None) -> Array:
     """Fused RMSNorm (see kernels/rmsnorm.py)."""
     from repro.kernels.rmsnorm import rmsnorm_pallas
 
+    if interpret is None:
+        interpret = default_interpret()
     return rmsnorm_pallas(x, scale, eps=eps, interpret=interpret)

@@ -22,6 +22,44 @@ def compose_ref(basis: Array, coeff: Array) -> Array:
     return inter.reshape(ksq, I, m * O)
 
 
+def _composed_weight(basis: Array, coeff: Array, p: int, mode: str) -> Array:
+    """Composed weight with the paper's block reshape: (ksq, gI, D)."""
+    inter = jnp.einsum("kir,mro->kimo", basis, coeff)
+    ksq, I, m, O = inter.shape
+    if mode == "grow_out":
+        return inter.reshape(ksq, I, m * O)
+    if mode == "grow_in":
+        return jnp.transpose(inter, (0, 2, 1, 3)).reshape(ksq, p * I, O)
+    inter = inter.reshape(ksq, I, p, p, O)
+    return jnp.transpose(inter, (0, 2, 1, 3, 4)).reshape(ksq, p * I, p * O)
+
+
+def conv_rank_ref(x: Array, basis: Array, coeff: Array, p: int,
+                  mode: str = "square", stride: int = 1) -> Array:
+    """Oracle for the fused conv rank path: compose, then one SAME conv.
+
+    x (N, H, W, gI) x basis (ksq, I, R) x coeff (m, R, O)
+    -> (N, Ho, Wo, D).
+    """
+    w = _composed_weight(basis, coeff, p, mode)
+    k = int(round(w.shape[0] ** 0.5))
+    w4 = w.reshape(k, k, w.shape[1], w.shape[2])
+    return jax.lax.conv_general_dilated(
+        x, w4, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def compose_apply_ref(x: Array, basis: Array, coeff: Array, p: int,
+                      mode: str = "square") -> Array:
+    """Oracle for the fused compose+apply dense path: compose, then matmul.
+
+    x (..., gI) x basis (1, I, R) x coeff (m, R, O) -> (..., D).
+    Also the oracle for ``rank_dense_apply`` — the two fused primitives
+    compute this same function with different associations.
+    """
+    return x @ _composed_weight(basis, coeff, p, mode)[0]
+
+
 def attention_ref(q: Array, k: Array, v: Array, causal: bool = True,
                   window: int = 0) -> Array:
     """q (BH, Sq, D), k/v (BH, Sk, D) -> (BH, Sq, D), fp32 softmax."""

@@ -41,8 +41,13 @@ def image_setup():
 
 
 def _cfg(**kw):
+    # forward_impl pinned: the golden fixtures were captured under the
+    # legacy compose-then-apply path ("materialize" reproduces it
+    # bitwise); "auto" now consults a measured per-host calibration, so
+    # its impl mix is allowed to differ between hosts.
     base = dict(num_clients=10, clients_per_round=4, eval_every=2,
-                tau_fixed=4, tau_max=15, estimate=True)
+                tau_fixed=4, tau_max=15, estimate=True,
+                forward_impl="materialize")
     base.update(kw)
     return FLConfig(**base)
 

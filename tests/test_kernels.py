@@ -227,6 +227,248 @@ def test_rank_dense_fn_kernel_branch_fwd_bwd(mode, p):
                                    atol=1e-5, rtol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# fused conv rank path (repro.kernels.conv_rank)
+# ---------------------------------------------------------------------------
+
+# fused-vs-reference tolerances: the fused formulations re-associate the
+# accumulation, and bf16 additionally rounds the rank intermediate
+FTOL = {jnp.float32: 2e-4, jnp.bfloat16: 6e-2}
+
+
+def _conv_setup(mode, p, dtype=jnp.float32, key=0):
+    from repro.core.composition import (CompositionSpec, gather_blocks,
+                                        init_factors)
+
+    spec = CompositionSpec(3, 8, 6, 5, ksq=9, mode=mode)
+    v, u = init_factors(jax.random.PRNGKey(key), spec, dtype)
+    red = gather_blocks(u, np.arange(spec.blocks_for_width(p)))
+    g = 1 if mode == "grow_out" else p
+    x = _mk(jax.random.PRNGKey(key + 17), (2, 8, 8, g * 6), dtype)
+    return x, v, red
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["square", "grow_out", "grow_in"])
+@pytest.mark.parametrize("p", [1, 2, 3])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv_rank_apply_matches_ref(dtype, mode, p, stride):
+    """The public fused primitive (CPU fused-math branch) vs the
+    compose-then-conv oracle, all modes x widths x strides x dtypes."""
+    x, v, red = _conv_setup(mode, p, dtype)
+    got = ops.conv_rank_apply(x, v, red, p, mode, stride=stride)
+    want = ref.conv_rank_ref(x.astype(jnp.float32), v.astype(jnp.float32),
+                             red.astype(jnp.float32), p, mode, stride)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=FTOL[dtype], rtol=FTOL[dtype])
+
+
+@pytest.mark.parametrize("mode", ["square", "grow_out", "grow_in"])
+@pytest.mark.parametrize("p", [1, 2, 3])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv_rank_pallas_kernel_body(mode, p, stride):
+    """The Pallas kernel body (interpret mode) vs the oracle — the
+    TPU-compiled forward, which CPU CI would otherwise never execute.
+    Covers the asymmetric SAME padding at stride 2."""
+    from repro.kernels.conv_rank import _u2_conv_layout, conv_rank_pallas
+
+    x, v, red = _conv_setup(mode, p)
+    u2 = _u2_conv_layout(red, p, mode)
+    got = conv_rank_pallas(x, v, u2, p=p, mode=mode, stride=stride,
+                           interpret=True)
+    want = ref.conv_rank_ref(x, v, red, p, mode, stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["square", "grow_out", "grow_in"])
+@pytest.mark.parametrize("p", [1, 2, 3])
+def test_conv_rank_apply_grads_match_ref(dtype, mode, p):
+    """The rank-space custom_vjp backward (dx, dbasis, du) vs autodiff
+    through compose-then-conv, stride 2 (the CNN downsampling shape)."""
+    x, v, red = _conv_setup(mode, p, dtype, key=2)
+
+    def loss_fused(args):
+        return jnp.sum(jnp.sin(ops.conv_rank_apply(
+            args[0], args[1], args[2], p, mode, stride=2)))
+
+    def loss_ref(args):
+        return jnp.sum(jnp.sin(ref.conv_rank_ref(
+            args[0], args[1], args[2], p, mode, 2)))
+
+    # (scalar loss parity is implied by the per-element value sweep
+    # above; a sum of sins can sit near zero, so comparing it directly
+    # is noise-dominated at bf16)
+    args = (x, v, red)
+    ga = jax.grad(loss_fused)(args)
+    gb = jax.grad(loss_ref)(args)
+    for a, b in zip(jax.tree_util.tree_leaves(ga),
+                    jax.tree_util.tree_leaves(gb)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=4 * FTOL[dtype], rtol=4 * FTOL[dtype])
+
+
+@pytest.mark.parametrize("mode", ["square", "grow_out", "grow_in"])
+@pytest.mark.parametrize("p", [1, 2, 3])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv_rank_fn_kernel_branch_fwd_bwd(mode, p, stride):
+    """The use_kernel=True custom_vjp wiring — Pallas forward through
+    the interpreter (exactly what TPU runs compiled) feeding the
+    rank-space backward.  Values and grads must match the fused-math
+    branch CPU production uses."""
+    from repro.kernels.conv_rank import _conv_rank_fn
+
+    x, v, red = _conv_setup(mode, p, key=3)
+    fn_kernel = _conv_rank_fn(p, mode, stride, True, kernel_interpret=True)
+    fn_math = _conv_rank_fn(p, mode, stride, False)
+
+    def loss(fn):
+        return lambda args: jnp.sum(jnp.sin(fn(args[0], args[1], args[2])))
+
+    args = (x, v, red)
+    np.testing.assert_allclose(float(loss(fn_kernel)(args)),
+                               float(loss(fn_math)(args)), rtol=1e-5)
+    ga = jax.grad(loss(fn_kernel))(args)
+    gb = jax.grad(loss(fn_math))(args)
+    for a, b in zip(jax.tree_util.tree_leaves(ga),
+                    jax.tree_util.tree_leaves(gb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_conv_rank_apply_vmap_cohort():
+    """vmap over a leading client axis (the cohort trainer's layout)
+    equals per-client calls."""
+    xs, vs, us = [], [], []
+    for c in range(3):
+        x, v, red = _conv_setup("square", 2, key=c)
+        xs.append(x), vs.append(v), us.append(red)
+    xb, vb, ub = jnp.stack(xs), jnp.stack(vs), jnp.stack(us)
+    got = jax.vmap(lambda a, b, c_: ops.conv_rank_apply(
+        a, b, c_, 2, "square", stride=2))(xb, vb, ub)
+    for c in range(3):
+        want = ops.conv_rank_apply(xs[c], vs[c], us[c], 2, "square",
+                                   stride=2)
+        np.testing.assert_allclose(np.asarray(got[c]), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused compose+apply dense path (repro.kernels.compose.compose_dense_apply)
+# ---------------------------------------------------------------------------
+
+
+def _dense_setup(mode, p, dtype=jnp.float32, key=1):
+    from repro.core.composition import (CompositionSpec, gather_blocks,
+                                        init_factors)
+
+    spec = CompositionSpec(3, 8, 6, 5, ksq=1, mode=mode)
+    v, u = init_factors(jax.random.PRNGKey(key), spec, dtype)
+    red = gather_blocks(u, np.arange(spec.blocks_for_width(p)))
+    g = 1 if mode == "grow_out" else p
+    x = _mk(jax.random.PRNGKey(key + 23), (4, 3, g * 6), dtype)
+    return x, v, red
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["square", "grow_out", "grow_in"])
+@pytest.mark.parametrize("p", [1, 2, 3])
+def test_compose_dense_apply_matches_ref(dtype, mode, p):
+    """Fused compose+apply (leading dims preserved) vs compose-then-
+    matmul, values AND custom_vjp grads, all modes x widths x dtypes."""
+    x, v, red = _dense_setup(mode, p, dtype)
+    got = ops.compose_dense_apply(x, v, red, p, mode)
+    want = ref.compose_apply_ref(x.astype(jnp.float32),
+                                 v.astype(jnp.float32),
+                                 red.astype(jnp.float32), p, mode)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=FTOL[dtype], rtol=FTOL[dtype])
+
+    def loss_fused(args):
+        return jnp.sum(jnp.sin(ops.compose_dense_apply(
+            args[0], args[1], args[2], p, mode)))
+
+    def loss_ref(args):
+        return jnp.sum(jnp.sin(ref.compose_apply_ref(
+            args[0], args[1], args[2], p, mode)))
+
+    args = (x, v, red)
+    ga = jax.grad(loss_fused)(args)
+    gb = jax.grad(loss_ref)(args)
+    for a, b in zip(jax.tree_util.tree_leaves(ga),
+                    jax.tree_util.tree_leaves(gb)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=4 * FTOL[dtype], rtol=4 * FTOL[dtype])
+
+
+@pytest.mark.parametrize("mode", ["square", "grow_out", "grow_in"])
+@pytest.mark.parametrize("p", [1, 2, 3])
+def test_compose_apply_pallas_kernel_body(mode, p):
+    """The kernel body (interpret mode) vs the oracle, with M not a
+    block_m multiple so the row padding path is exercised."""
+    from repro.kernels.compose import _u2_layout, compose_apply_pallas
+
+    x, v, red = _dense_setup(mode, p, key=4)
+    x2 = x.reshape(-1, x.shape[-1])[:11]  # 11 rows, block_m=8: padded
+    g = 1 if mode == "grow_out" else p
+    xg = x2.reshape(x2.shape[0], g, -1)
+    u3 = _u2_layout(red, p, mode).reshape(g, red.shape[-2], -1)
+    got = compose_apply_pallas(xg, v[0], u3, block_m=8, interpret=True)
+    want = ref.compose_apply_ref(x2, v, red, p, mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("mode", ["square", "grow_out", "grow_in"])
+@pytest.mark.parametrize("p", [1, 2, 3])
+def test_compose_dense_fn_kernel_branch_fwd_bwd(mode, p):
+    """use_kernel=True wiring: Pallas-interpret forward + shared
+    rank-space backward vs the fused-math branch, values and grads."""
+    from repro.kernels.compose import _compose_dense_fn
+
+    x, v, red = _dense_setup(mode, p, key=5)
+    x2 = x.reshape(-1, x.shape[-1])[:13]
+    fn_kernel = _compose_dense_fn(p, mode, True, kernel_interpret=True)
+    fn_math = _compose_dense_fn(p, mode, False)
+
+    def loss(fn):
+        return lambda args: jnp.sum(jnp.sin(fn(args[0], args[1], args[2])))
+
+    args = (x2, v[0], red)
+    np.testing.assert_allclose(float(loss(fn_kernel)(args)),
+                               float(loss(fn_math)(args)), rtol=1e-5)
+    ga = jax.grad(loss(fn_kernel))(args)
+    gb = jax.grad(loss(fn_math))(args)
+    for a, b in zip(jax.tree_util.tree_leaves(ga),
+                    jax.tree_util.tree_leaves(gb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_compose_dense_apply_vmap_cohort():
+    """The cohort trainer wraps the fused dense primitive in vmap."""
+    xs, vs, us = [], [], []
+    for c in range(3):
+        x, v, red = _dense_setup("grow_in", 2, key=10 + c)
+        xs.append(x), vs.append(v), us.append(red)
+    xb, vb, ub = jnp.stack(xs), jnp.stack(vs), jnp.stack(us)
+    got = jax.vmap(lambda a, b, c_: ops.compose_dense_apply(
+        a, b, c_, 2, "grow_in"))(xb, vb, ub)
+    for c in range(3):
+        want = ops.compose_dense_apply(xs[c], vs[c], us[c], 2, "grow_in")
+        np.testing.assert_allclose(np.asarray(got[c]), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,s,kv,g,d,window", [
     (1, 64, 1, 1, 32, 0),     # MHA degenerate

@@ -34,8 +34,11 @@ def image_setup():
 
 
 def _cfg(**kw):
+    # forward_impl pinned: golden fixtures predate the measured rank-path
+    # calibration; "auto" choices may differ per host.
     base = dict(num_clients=10, clients_per_round=4, eval_every=2,
-                tau_fixed=4, tau_max=15, estimate=True)
+                tau_fixed=4, tau_max=15, estimate=True,
+                forward_impl="materialize")
     base.update(kw)
     return FLConfig(**base)
 

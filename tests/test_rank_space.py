@@ -173,6 +173,95 @@ def test_materialize_reproduces_seed_histories_bitwise(scheme):
             assert h.accuracy == g["accuracy"]
 
 
+# ---------------------------------------------------------------------------
+# fused path parity + measured-calibration dispatch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["square", "grow_out", "grow_in"])
+@pytest.mark.parametrize("p", [1, 2, 3])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_apply_factors_conv_fused_matches_unfused(mode, p, stride):
+    """The fused conv rank primitive (production default) vs the kept
+    separate-ops reference path inside apply_factors itself."""
+    spec = CompositionSpec(3, 8, 6, 5, ksq=9, mode=mode)
+    v, u = init_factors(jax.random.PRNGKey(2), spec)
+    red = gather_blocks(u, np.arange(spec.blocks_for_width(p)))
+    g = 1 if mode == "grow_out" else p
+    x = jax.random.normal(jax.random.PRNGKey(p + 20), (2, 8, 8, g * 6))
+    fused = apply_factors(x, v, red, p, spec, "conv", stride=stride)
+    unfused = apply_factors(x, v, red, p, spec, "conv", stride=stride,
+                            fused=False)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               atol=1e-4, rtol=1e-4)
+
+
+def _cal(ovh, gain):
+    from repro.core.calibration import RankPathCalibration
+    return RankPathCalibration(conv_rank_overhead=ovh,
+                               fused_compose_gain=gain)
+
+
+def test_layer_impls_calibration_drives_choices():
+    """Pinned calibrations make the auto choice deterministic: a cheap
+    measured conv rank path enables rank_space on the hidden convs, an
+    expensive one disables it; fused_compose_gain < 1 swaps the dense
+    head (a materialize-regime layer) to the fused compose+apply."""
+    cnn = make_cnn()
+    cheap = cnn.layer_impls(3, 16, "auto", calibration=_cal(0.5, 2.0))
+    assert cheap["conv2"] == "rank_space"
+    assert cheap["conv3"] == "rank_space"
+    assert cheap["fc"] == "materialize"  # gain >= 1: no fusion
+    dear = cnn.layer_impls(3, 16, "auto", calibration=_cal(30.0, 0.5))
+    assert dear["conv1"] == "materialize"
+    assert dear["conv2"] == "materialize"
+    assert dear["conv3"] == "materialize"
+    assert dear["fc"] == "fused_compose"  # ksq == 1, gain < 1
+    # the embedding's free-gather apply never fuses, whatever the gain
+    rnn = make_rnn()
+    auto = rnn.layer_impls(3, 16, "auto", calibration=_cal(1.0, 0.5))
+    assert auto["embed"] == "materialize"
+    assert auto["wh"] == "materialize"  # rank_capable=False pin holds
+
+
+def test_calibration_config_pins_and_dispatch_gate():
+    """FLConfig overrides pin the calibration without measuring, and
+    non-auto configs never trigger the micro-benchmarks at all."""
+    from repro.core.calibration import for_dispatch, from_config
+
+    pinned = FLConfig(forward_impl="auto", conv_rank_overhead=1.5,
+                      fused_compose_gain=0.8)
+    cal = for_dispatch(pinned)
+    assert cal is not None and not cal.measured
+    assert cal.conv_rank_overhead == 1.5
+    assert cal.fused_compose_gain == 0.8
+    assert from_config(pinned) == cal
+    # materialize / rank_space dispatch short-circuits to None (no
+    # measurement, no calibration in the jit-cache key)
+    assert for_dispatch(FLConfig(forward_impl="materialize")) is None
+    assert for_dispatch(FLConfig(forward_impl="rank_space")) is None
+
+
+def test_fused_compose_impl_gradient_parity():
+    """End-to-end: an auto client whose pinned calibration routes the
+    dense head through compose_dense_apply ("fused_compose") computes
+    the same gradients as the materialize client."""
+    model = make_cnn()
+    cal = _cal(30.0, 0.5)
+    # width 3 / batch 16: the head sits in the materialize regime (at
+    # width 2 / batch 8 its rank path wins FLOPs outright)
+    impls = model.layer_impls(3, 16, "auto", calibration=cal)
+    assert impls["fc"] == "fused_compose"
+    red = _reduced(model, 3)
+    batch = _batch(model, jax.random.PRNGKey(5), n=16)
+    _, grad_mat, _ = _jitted_fns(model, 3, True, "materialize")
+    _, grad_fus, _ = _jitted_fns(model, 3, True, "auto", cal)
+    for a, b in zip(jax.tree_util.tree_leaves(grad_mat(red, batch)),
+                    jax.tree_util.tree_leaves(grad_fus(red, batch))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-3)
+
+
 def test_unknown_forward_impl_rejected():
     model = make_cnn()
     with pytest.raises(ValueError, match="forward_impl"):

@@ -29,10 +29,13 @@ def image_setup():
 
 
 def _cfg(mode, ckpt_dir):
+    # forward_impl pinned: the golden fixtures were captured under the
+    # legacy (== materialize) path, and "auto" now consults a measured
+    # per-host calibration whose impl choices may differ across hosts.
     kw = dict(num_clients=10, clients_per_round=4, eval_every=2,
               tau_fixed=4, tau_max=15, estimate=True, round_mode=mode,
               checkpoint_every=CKPT_EVERY, checkpoint_dir=str(ckpt_dir),
-              checkpoint_keep=2)
+              checkpoint_keep=2, forward_impl="materialize")
     if mode == "semi_async":
         kw.update(async_k=2, eval_every=4)
     return FLConfig(**kw)
